@@ -1,0 +1,64 @@
+"""Paper Figures 2, 6 and 7: communication vs tolerated approximation error.
+
+For each load in {0.5, 0.8, 0.95} and x in {2..8} this measures the relative
+communication (messages per departure; the exact-state baseline is 1,
+Prop 6.1) of:
+
+* ET-x + MSR    (Fig 2 / Fig 6) -- expected to decay quadratically in the
+  error budget y = x-1 and to sit *below* the Thm 2.5 bound 1/(x^2-x);
+* ET-x + MSR-x  (Fig 7) -- expected below the Thm 2.3 bound 1/x but above
+  the ET+MSR curve.
+
+Every row also re-checks the deterministic guarantee AQ <= x-1 (Prop 6.8).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.care import slotted_sim, theory
+
+XS = (2, 3, 4, 5, 6, 7, 8)
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = common.sim_slots(quick)
+    xs = (2, 3, 5, 8) if quick else XS
+    rows: list[dict] = []
+    for fig, approx, bound_fn in (
+        ("fig6_et_msr", "msr", theory.et_msr_relative_comm_backlogged),
+        ("fig7_et_msrx", "msr_x", theory.dt_relative_comm),
+    ):
+        for load in common.LOADS:
+            for x in xs:
+                cfg = slotted_sim.SimConfig(
+                    servers=common.SERVERS,
+                    slots=slots,
+                    load=load,
+                    policy="jsaq",
+                    comm="et",
+                    x=x,
+                    approx=approx,
+                )
+                res, wall = common.timed_simulate(0, cfg)
+                rel = res.msgs_per_departure
+                bound = float(bound_fn(x))
+                ok_aq = res.max_aq <= x - 1
+                ok_bound = rel <= bound + 1e-9
+                rows.append(
+                    common.row(
+                        f"{fig}/load{load}/x{x}",
+                        wall,
+                        slots,
+                        common.fmt_derived(
+                            rel_comm=rel,
+                            bound=bound,
+                            below_bound=ok_bound,
+                            max_aq=res.max_aq,
+                            aq_ok=ok_aq,
+                        ),
+                        rel_comm=rel,
+                        bound=bound,
+                        max_aq=res.max_aq,
+                        ok=bool(ok_aq and ok_bound),
+                    )
+                )
+    return rows

@@ -1,0 +1,103 @@
+"""Paper Figures 3 and 8-12: job completion times under communication budgets.
+
+For each load in {0.5, 0.8, 0.95} this compares the JCT distribution of the
+exact-state baselines (JSQ, SQ(2), Round Robin) against CARE combinations:
+
+* JSAQ + ET-x + MSR    for x in {2, 3, 5, 7}   (the sparse-comm champion);
+* JSAQ + DT-x + MSR-x  for x in {2, 3, 5}      (the high-comm regime winner);
+
+reporting mean / p50 / p99 / p99.9 JCT, the measured relative communication,
+and the headline checks from the paper:
+
+* ET-3 + MSR rivals SQ(2) (mean JCT within ~10%) using ~10% of JSQ's
+  messages (Fig 3 / Fig 10);
+* ET-x + MSR still beats Round Robin at < 2% relative communication
+  (Fig 10 / Fig 12).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.care import metrics, slotted_sim
+
+
+def _cfg(slots, load, **kw):
+    return slotted_sim.SimConfig(
+        servers=common.SERVERS, slots=slots, load=load, **kw
+    )
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = common.sim_slots(quick)
+    et_xs = (3, 7) if quick else (2, 3, 5, 7)
+    dt_xs = (3,) if quick else (2, 3, 5)
+    rows: list[dict] = []
+    for load in common.LOADS:
+        variants: list[tuple[str, slotted_sim.SimConfig]] = [
+            ("jsq", _cfg(slots, load, policy="jsq", comm="none")),
+            ("sq2", _cfg(slots, load, policy="sq2", comm="none")),
+            ("rr", _cfg(slots, load, policy="rr", comm="none")),
+        ]
+        for x in et_xs:
+            variants.append(
+                (f"et{x}_msr",
+                 _cfg(slots, load, policy="jsaq", comm="et", x=x, approx="msr"))
+            )
+        for x in dt_xs:
+            variants.append(
+                (f"dt{x}_msrx",
+                 _cfg(slots, load, policy="jsaq", comm="dt", x=x, approx="msr_x"))
+            )
+
+        results = {}
+        for name, cfg in variants:
+            res, wall = common.timed_simulate(0, cfg)
+            results[name] = res
+            summ = metrics.jct_summary(res.jct)
+            rel = metrics.relative_communication(res, cfg.policy, cfg.sqd)
+            rows.append(
+                common.row(
+                    f"jct/load{load}/{name}",
+                    wall,
+                    slots,
+                    common.fmt_derived(
+                        mean_jct=summ["mean"],
+                        p99=summ["p99"],
+                        rel_comm=rel,
+                    ),
+                    mean_jct=summ["mean"],
+                    p50=summ["p50"],
+                    p99=summ["p99"],
+                    p999=summ["p999"],
+                    rel_comm=rel,
+                )
+            )
+
+        # Headline checks (paper Figs 3 / 10 / 12), evaluated at this load.
+        if "et3_msr" in results:
+            m_et3 = float(np.mean(results["et3_msr"].jct))
+            m_sq2 = float(np.mean(results["sq2"].jct))
+            m_rr = float(np.mean(results["rr"].jct))
+            rel3 = results["et3_msr"].msgs_per_departure
+            sparse_name = f"et{max(et_xs)}_msr"
+            m_sparse = float(np.mean(results[sparse_name].jct))
+            rel_sparse = results[sparse_name].msgs_per_departure
+            rows.append(
+                common.row(
+                    f"jct/load{load}/headline",
+                    0.0,
+                    slots,
+                    common.fmt_derived(
+                        et3_vs_sq2=m_et3 / m_sq2,
+                        et3_rel_comm=rel3,
+                        sparse_vs_rr=m_sparse / m_rr,
+                        sparse_rel_comm=rel_sparse,
+                        et3_rivals_sq2=bool(m_et3 <= m_sq2 * 1.15),
+                        sparse_beats_rr=bool(
+                            (m_sparse < m_rr) or load < 0.75
+                        ),
+                    ),
+                )
+            )
+    return rows

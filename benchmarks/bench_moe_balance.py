@@ -1,0 +1,225 @@
+"""Beyond-paper benchmark: the CARE balancer at the MoE/expert tier.
+
+Two sections:
+
+**A. Training tier** (``repro/train`` + ``repro/core/moe_balancer``): a
+reduced DeepSeek-V2-family model whose gate is *initialised with a
+persistent expert skew* trains for a few dozen steps.  With a single
+in-process dispatcher the balancer's emulation is exact (Remark 4.6), so
+this section demonstrates the PI *controller*: the JSAQ bias driven by the
+approximated load cancels the skew (off vs care), and the ET trigger
+correctly stays silent (zero messages) because the error is zero.
+
+**B. Dispatch tier** (``repro/core/dispatch_sim``): the paper's full
+multi-dispatcher queueing setting mapped onto expert parallelism --
+``D`` routers, ``E`` experts with finite service capacity and backlog
+queues, heterogeneous drifting traffic.  Here communication *matters*:
+pure local emulation (off) blows up the queue gap; ET-x matches or beats
+the every-step-sync baseline at ~10% of the messages -- the paper's
+headline restated for EP.  (Every-step sync can even be *worse* than
+sparse sync: identical state at all dispatchers causes herding, the
+[VKO20] incast effect approximate state is known to mitigate.)
+
+Reported: expert-load imbalance / queue gap / backlog, and the number of
+messages or syncs, per regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.configs.base import CareConfig
+from repro.core import moe_balancer
+from repro.core.dispatch_sim import DispatchSimConfig, simulate
+from repro.data import pipeline
+from repro.optim import adamw
+from repro.train import train_loop
+
+BATCH, SEQ = 8, 128
+GATE_SKEW = 1.5  # persistent per-expert gate preference injected at init
+
+
+def _reduced_moe(care: CareConfig):
+    cfg = get_config("deepseek-v2-236b").reduced()
+    return dataclasses.replace(cfg, care=care, remat=False)
+
+
+def _skew_gate(params) -> None:
+    """Amplify the first gate columns: a gate that systematically prefers
+    some experts (the persistent-imbalance source the controller must fix)."""
+    g = params["layers"]["moe"]["gate"]
+    e = g.shape[-1]
+    mult = (
+        1.0
+        + GATE_SKEW * jax.nn.one_hot(0, e)
+        + 0.7 * GATE_SKEW * jax.nn.one_hot(1, e)
+    )
+    params["layers"]["moe"]["gate"] = g * mult[None, None, :]
+
+
+def _train(cfg, steps: int, sync_every_step: bool, seed: int = 0):
+    """Host-level loop mirroring launch/train.py's two-program schedule."""
+    data_cfg = pipeline.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=SEQ, global_batch=BATCH, seed=seed
+    )
+    state = train_loop.init_state(jax.random.key(seed), cfg, None)
+    _skew_gate(state.params)
+    step_fn = jax.jit(
+        train_loop.make_train_step(cfg, adamw.OptimConfig(), None, sync=False)
+    )
+    sync_fn = jax.jit(lambda b: moe_balancer.sync(b, cfg.care))
+
+    losses, imb, syncs = [], [], 0
+    for s in range(steps):
+        batch = {
+            k: jnp.asarray(v)
+            for k, v in pipeline.global_batch_at(s, data_cfg).items()
+        }
+        prev_counts = (
+            state.balancer.true_counts if state.balancer is not None else None
+        )
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if state.balancer is not None:
+            step_counts = np.asarray(state.balancer.true_counts - prev_counts)
+            per_layer = step_counts  # (L, E)
+            mean = per_layer.mean(axis=-1) + 1e-9
+            imb.append(float((per_layer.max(axis=-1) / mean).mean()))
+            do_sync = sync_every_step or bool(metrics["sync_trigger"])
+            if do_sync and cfg.care.enabled:
+                state = dataclasses.replace(
+                    state, balancer=sync_fn(state.balancer)
+                )
+                syncs += 1
+    return losses, imb, syncs
+
+
+def _section_a(quick: bool) -> list[dict]:
+    steps = 12 if quick else 48
+    regimes = {
+        "off": (CareConfig(enabled=False), False),
+        "sync_every": (CareConfig(enabled=True, comm="dt", x=1), True),
+        "care_dt8": (CareConfig(enabled=True, comm="dt", x=8), False),
+        "care_et": (CareConfig(enabled=True, comm="et", x=2), False),
+    }
+    rows = []
+    results = {}
+    for name, (care, every) in regimes.items():
+        cfg = _reduced_moe(care)
+        t0 = time.perf_counter()
+        losses, imb, syncs = _train(cfg, steps, every)
+        wall = time.perf_counter() - t0
+        half = len(imb) // 2
+        tail_imb = float(np.mean(imb[half:])) if imb else 0.0
+        results[name] = (tail_imb, losses[-1], syncs)
+        rows.append(
+            common.row(
+                f"moe_balance/train/{name}",
+                wall,
+                steps,
+                common.fmt_derived(
+                    imb_max_over_mean=tail_imb,
+                    final_loss=losses[-1],
+                    syncs=syncs,
+                    sync_rate=syncs / steps,
+                ),
+                imbalance=tail_imb,
+                syncs=syncs,
+            )
+        )
+    imb_off = results["off"][0]
+    imb_full = results["sync_every"][0]
+    imb_dt = results["care_dt8"][0]
+    sync_saving = 1.0 - results["care_dt8"][2] / max(results["sync_every"][2], 1)
+    rows.append(
+        common.row(
+            "moe_balance/train/headline",
+            0.0,
+            steps,
+            common.fmt_derived(
+                imbalance_off=imb_off,
+                imbalance_fullsync=imb_full,
+                imbalance_care_dt8=imb_dt,
+                comm_saving=sync_saving,
+                care_improves_on_off=bool(imb_dt <= imb_off - 0.1),
+                care_matches_fullsync=bool(imb_dt <= imb_full + 0.1),
+            ),
+        )
+    )
+    return rows
+
+
+def _section_b(quick: bool) -> list[dict]:
+    # The queue sim needs ~400 steps of warm-up before the steady-state
+    # window is meaningful, so quick mode keeps the full horizon but fewer
+    # seeds.  Reported per regime (seed-averaged): the steady-state queue
+    # gap (paper's SSC metric), the transient gap (convergence cost of
+    # sparse state), backlog, and relative communication.
+    steps, seeds = (800, 2) if quick else (800, 5)
+    regimes = [
+        ("no_bias", DispatchSimConfig(enabled=False, comm="off", steps=steps)),
+        ("off", DispatchSimConfig(comm="off", steps=steps)),
+        ("exact", DispatchSimConfig(comm="exact", x=1, steps=steps)),
+        ("dt8", DispatchSimConfig(comm="dt", x=8, steps=steps)),
+        ("et4", DispatchSimConfig(comm="et", x=4, steps=steps)),
+        ("et8", DispatchSimConfig(comm="et", x=8, steps=steps)),
+    ]
+    rows = []
+    results = {}
+    for name, cfg in regimes:
+        t0 = time.perf_counter()
+        rs = [simulate(seed, cfg) for seed in range(seeds)]
+        wall = time.perf_counter() - t0
+        agg = {
+            "tail_gap": float(np.mean([r.tail_gap for r in rs])),
+            "transient_gap": float(np.mean([r.transient_gap for r in rs])),
+            "tail_backlog": float(np.mean([r.tail_backlog for r in rs])),
+            "rel_comm": float(np.mean([r.rel_comm for r in rs])),
+            "max_err": float(np.max([r.max_err for r in rs])),
+        }
+        results[name] = agg
+        rows.append(
+            common.row(
+                f"moe_balance/dispatch/{name}",
+                wall,
+                cfg.steps * seeds,
+                common.fmt_derived(
+                    queue_gap=agg["tail_gap"],
+                    transient_gap=agg["transient_gap"],
+                    backlog=agg["tail_backlog"],
+                    rel_comm=agg["rel_comm"],
+                    max_err_mu=agg["max_err"],
+                ),
+            )
+        )
+    ex, et, off = results["exact"], results["et4"], results["off"]
+    rows.append(
+        common.row(
+            "moe_balance/dispatch/headline",
+            0.0,
+            steps,
+            common.fmt_derived(
+                et4_gap_vs_exact=et["tail_gap"] / max(ex["tail_gap"], 1e-9),
+                et4_rel_comm=et["rel_comm"],
+                comm_saving=1.0 - et["rel_comm"],
+                # ET with ~5% of the messages matches (here: beats, by
+                # avoiding herding) the every-step exact-state baseline.
+                et_matches_exact=bool(et["tail_gap"] <= 1.1 * ex["tail_gap"]),
+                # Never communicating pays a large convergence cost even
+                # though the PI controller eventually balances locally.
+                off_transient_vs_et=off["transient_gap"]
+                / max(et["transient_gap"], 1e-9),
+            ),
+        )
+    )
+    return rows
+
+
+def run(quick: bool = False) -> list[dict]:
+    return _section_a(quick) + _section_b(quick)

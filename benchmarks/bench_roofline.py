@@ -1,0 +1,51 @@
+"""Deliverable (g): roofline terms per (arch x shape x mesh) cell.
+
+Reads the dry-run artifacts (benchmark cells were compiled AOT against the
+production meshes by ``repro.launch.dryrun``) and reports, per cell, the
+three roofline terms in seconds, the dominant bottleneck, the useful-FLOP
+ratio (6ND model FLOPs over compiled HLO FLOPs) and the projected roofline
+MFU.  ``us_per_call`` is the projected step time in microseconds.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.launch import roofline
+
+
+def run(quick: bool = False) -> list[dict]:
+    cells = roofline.full_table()
+    rows = []
+    by_dominant = {"compute": 0, "memory": 0, "collective": 0}
+    for c in cells:
+        if quick and c.mesh != "pod16x16":
+            continue
+        by_dominant[c.dominant] += 1
+        rows.append(
+            {
+                "name": f"roofline/{c.tag}",
+                "us_per_call": round(c.step_s * 1e6, 1),
+                "derived": common.fmt_derived(
+                    dominant=c.dominant,
+                    compute_s=c.compute_s,
+                    memory_s=c.memory_s,
+                    collective_s=c.collective_s,
+                    useful=c.useful_ratio,
+                    mfu=c.mfu,
+                ),
+                "dominant": c.dominant,
+                "mfu": c.mfu,
+            }
+        )
+    rows.append(
+        {
+            "name": "roofline/summary",
+            "us_per_call": 0.0,
+            "derived": common.fmt_derived(
+                cells=len(cells),
+                compute_bound=by_dominant["compute"],
+                memory_bound=by_dominant["memory"],
+                collective_bound=by_dominant["collective"],
+            ),
+        }
+    )
+    return rows

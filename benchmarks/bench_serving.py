@@ -1,0 +1,66 @@
+"""Serving-tier CARE: request dispatch across replica groups (paper Fig 3,
+restated for continuous-batching inference).
+
+Requests are jobs, replica groups are servers; the dispatcher routes by
+JSAQ over CARE-approximated occupancy and replicas send ET-x corrections.
+Compared regimes: exact state (1 message per completion), ET-4, DT-4, RT,
+and the x-sweep of ET to show the JCT/communication frontier.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from repro.serve import engine
+
+
+def _run_one(name, cfg, slots, load, rows):
+    t0 = time.perf_counter()
+    out = engine.run_serving_sim(cfg, slots=slots, load=load, seed=0)
+    wall = time.perf_counter() - t0
+    rows.append(
+        common.row(
+            name,
+            wall,
+            slots,
+            common.fmt_derived(
+                mean_jct=out["mean_jct"],
+                p99_jct=out["p99_jct"],
+                msgs_per_completion=out["msgs_per_completion"],
+                completed=out["completed"],
+            ),
+            mean_jct=out["mean_jct"],
+            msgs_per_completion=out["msgs_per_completion"],
+        )
+    )
+    return out
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = 4_000 if quick else 20_000
+    rows: list[dict] = []
+    for load in (0.7, 0.9):
+        base = {}
+        for comm in ("exact", "et", "dt", "rt"):
+            cfg = engine.EngineConfig(comm=comm, et_x=4, dt_x=4, rt_period=16)
+            base[comm] = _run_one(
+                f"serve/load{load}/{comm}", cfg, slots, load, rows
+            )
+        # ET frontier: JCT degradation vs message reduction as x grows.
+        for x in (2, 8, 16):
+            cfg = engine.EngineConfig(comm="et", et_x=x)
+            _run_one(f"serve/load{load}/et_x{x}", cfg, slots, load, rows)
+        rows.append(
+            common.row(
+                f"serve/load{load}/headline",
+                0.0,
+                slots,
+                common.fmt_derived(
+                    et_jct_vs_exact=base["et"]["mean_jct"]
+                    / max(base["exact"]["mean_jct"], 1e-9),
+                    et_comm_vs_exact=base["et"]["msgs_per_completion"]
+                    / max(base["exact"]["msgs_per_completion"], 1e-9),
+                ),
+            )
+        )
+    return rows

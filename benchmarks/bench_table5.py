@@ -1,0 +1,62 @@
+"""Paper Figure 5 (the communication-rate table).
+
+Measured messages-per-departure for every implemented architecture at load
+0.95, next to the paper's stated rate:
+
+| algorithm              | paper rate            | measured           |
+|------------------------|-----------------------|--------------------|
+| JSQ                    | 1 (D)                 | 1 by construction  |
+| SQ(2)                  | 4 (A) = 2d, d=2       | 4 x arrivals       |
+| Round Robin            | 0                     | 0                  |
+| DT-x (any approx)      | 1/x                   | measured           |
+| ET-x + MSR-x           | <= 1/x                | measured           |
+| ET-x + MSR             | <= 1/(x^2-x) (heavy)  | measured           |
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.care import metrics, slotted_sim, theory
+
+X = 4  # table row parameter (paper states rates as functions of x)
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = common.sim_slots(quick)
+    load = 0.95
+    entries = [
+        ("jsq", dict(policy="jsq", comm="none"), "1"),
+        ("sq2", dict(policy="sq2", comm="none"), "2d=4 per arrival"),
+        ("rr", dict(policy="rr", comm="none"), "0"),
+        (
+            f"dt{X}_basic",
+            dict(policy="jsaq", comm="dt", x=X, approx="basic"),
+            f"1/x={1 / X:.3f}",
+        ),
+        (
+            f"et{X}_msrx",
+            dict(policy="jsaq", comm="et", x=X, approx="msr_x"),
+            f"<=1/x={1 / X:.3f}",
+        ),
+        (
+            f"et{X}_msr",
+            dict(policy="jsaq", comm="et", x=X, approx="msr"),
+            f"<=1/(x^2-x)={float(theory.et_msr_relative_comm_backlogged(X)):.3f}",
+        ),
+    ]
+    rows = []
+    for name, kw, paper_rate in entries:
+        cfg = slotted_sim.SimConfig(
+            servers=common.SERVERS, slots=slots, load=load, **kw
+        )
+        res, wall = common.timed_simulate(0, cfg)
+        rel = metrics.relative_communication(res, cfg.policy, cfg.sqd)
+        rows.append(
+            common.row(
+                f"table5/{name}",
+                wall,
+                slots,
+                common.fmt_derived(paper=paper_rate, measured=rel),
+                measured=rel,
+            )
+        )
+    return rows

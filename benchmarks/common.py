@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing: timed simulation runs, a result cache, rows.
+
+Every benchmark module exposes ``run(quick: bool) -> list[dict]``; each row
+must carry ``name``, ``us_per_call`` and ``derived`` (the CSV contract of
+``benchmarks/run.py``) plus any extra columns for the extended report.
+
+Simulations are cached by (seed, SimConfig) because several paper tables
+slice the same runs (e.g. the Fig 6 communication sweep and the Thm 2.3
+verification reuse identical (comm, approx, x) cells).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.care import slotted_sim
+
+_SIM_CACHE: dict = {}
+
+DEFAULT_SLOTS = 100_000
+QUICK_SLOTS = 20_000
+
+# The paper's simulation setting (Section 9.1).
+SERVERS = 30
+LOADS = (0.5, 0.8, 0.95)
+
+
+def sim_slots(quick: bool) -> int:
+    return QUICK_SLOTS if quick else DEFAULT_SLOTS
+
+
+def timed_simulate(seed: int, cfg: slotted_sim.SimConfig):
+    """simulate() with wall-time capture and (seed, cfg) memoisation.
+
+    Returns (SimResult, wall_seconds).  Cached calls return the original
+    wall time so ``us_per_call`` stays meaningful.
+    """
+    key = (seed, cfg)
+    if key not in _SIM_CACHE:
+        t0 = time.perf_counter()
+        res = slotted_sim.simulate(jax.random.key(seed), cfg)
+        _SIM_CACHE[key] = (res, time.perf_counter() - t0)
+    return _SIM_CACHE[key]
+
+
+def row(name: str, wall_s: float, slots: int, derived: str, **extra) -> dict:
+    """One CSV row; us_per_call is wall microseconds per simulated slot."""
+    return {
+        "name": name,
+        "us_per_call": round(1e6 * wall_s / max(slots, 1), 3),
+        "derived": derived,
+        **extra,
+    }
+
+
+def fmt_derived(**kv) -> str:
+    parts = []
+    for k, v in kv.items():
+        if isinstance(v, float):
+            parts.append(f"{k}={v:.4g}")
+        else:
+            parts.append(f"{k}={v}")
+    return ";".join(parts)

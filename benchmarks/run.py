@@ -1,0 +1,69 @@
+"""Benchmark harness: one module per paper table/figure (deliverable d).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run                 # all benchmarks
+  PYTHONPATH=src python -m benchmarks.run --only jct      # substring filter
+  PYTHONPATH=src python -m benchmarks.run --quick         # reduced sizes
+
+Prints ``name,us_per_call,derived`` CSV rows to stdout.  The mapping to
+paper artifacts:
+
+  bench_comm_vs_error   -> Fig 2 / Fig 6 / Fig 7  (+ Thm 2.3/2.5 bounds)
+  bench_jct_ccdf        -> Fig 3 / Figs 8-12       (JCT vs comm budget)
+  bench_table5          -> Fig 5                    (communication rates)
+  bench_approx_quality  -> Thm 2.3 sweep            (AQ<=x-1, M<=D/x)
+  bench_ssc             -> Sec 7 / Thm 7.3          (finite-n SSC trend)
+  bench_moe_balance     -> beyond-paper: CARE balancer in MoE training
+  bench_serving         -> beyond-paper: CARE dispatch in serving
+  bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+BENCHES = [
+    "bench_comm_vs_error",
+    "bench_jct_ccdf",
+    "bench_table5",
+    "bench_approx_quality",
+    "bench_ssc",
+    "bench_moe_balance",
+    "bench_serving",
+    "bench_roofline",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on module name")
+    ap.add_argument("--quick", action="store_true", help="reduced problem sizes")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod_name in BENCHES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # noqa: BLE001 -- keep the harness running
+            failures += 1
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}")
+            continue
+        wall = time.perf_counter() - t0
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        print(
+            f"{mod_name}/total,{round(wall * 1e6, 1)},rows={len(rows)}",
+            flush=True,
+        )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

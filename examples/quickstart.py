@@ -1,0 +1,80 @@
+"""Quickstart: the paper's result in 60 seconds.
+
+Runs the paper's own simulation setting (Section 9: K=30 servers, load
+0.95, Geometric(1/K) services) and compares Join-the-Shortest-
+Approximated-Queue under ET-x + MSR -- the paper's recommended sparse-
+communication design -- against the exact-state JSQ, SQ(2) and Round
+Robin baselines, on the *same* arrival/size sample paths.
+
+Expected outcome (paper Figs 3/10/12): ET-3 + MSR matches SQ(2) while
+using ~10% of JSQ's messages, and still beats Round Robin below 2%.
+
+Usage:
+  PYTHONPATH=src python examples/quickstart.py [--slots 100000]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core.care import slotted_sim
+from repro.core.care.slotted_sim import SimConfig, exact_state_messages, simulate
+
+import jax
+
+
+def jct_stats(res) -> str:
+    j = res.jct
+    return (
+        f"mean={j.mean():7.1f}  p50={np.percentile(j, 50):6.0f}  "
+        f"p99={np.percentile(j, 99):7.0f}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=100_000)
+    ap.add_argument("--load", type=float, default=0.95)
+    ap.add_argument("--servers", type=int, default=30)
+    args = ap.parse_args()
+
+    base = dict(servers=args.servers, slots=args.slots, load=args.load)
+    key = 7  # same seed => same arrivals & job sizes for every policy
+
+    policies = [
+        ("JSQ (exact state)", SimConfig(policy="jsq", comm="none", **base)),
+        ("SQ(2)", SimConfig(policy="sq2", comm="none", **base)),
+        ("Round Robin", SimConfig(policy="rr", comm="none", **base)),
+        ("JSAQ ET-2 + MSR", SimConfig(policy="jsaq", comm="et", x=2, approx="msr", **base)),
+        ("JSAQ ET-3 + MSR", SimConfig(policy="jsaq", comm="et", x=3, approx="msr", **base)),
+        ("JSAQ ET-5 + MSR", SimConfig(policy="jsaq", comm="et", x=5, approx="msr", **base)),
+        ("JSAQ ET-8 + MSR", SimConfig(policy="jsaq", comm="et", x=8, approx="msr", **base)),
+        ("JSAQ DT-3 + MSR-3", SimConfig(policy="jsaq", comm="dt", x=3, approx="msr_x", **base)),
+    ]
+
+    print(f"K={args.servers} servers, load={args.load}, {args.slots} slots "
+          f"(identical inputs per policy)\n")
+    print(f"{'policy':<20} {'JCT (slots)':<38} {'msgs/dep':>9} {'rel comm':>9} {'max AQ':>7}")
+    jsq_msgs = None
+    for name, cfg in policies:
+        res = simulate(jax.random.key(key), cfg)
+        msgs = exact_state_messages(res, cfg.policy, cfg.sqd)
+        if jsq_msgs is None:
+            jsq_msgs = max(msgs, 1)
+        rel = msgs / jsq_msgs
+        print(
+            f"{name:<20} {jct_stats(res):<38} "
+            f"{msgs / max(res.departures, 1):9.3f} {rel:9.2%} {res.max_aq:7d}"
+        )
+    print(
+        "\nReading: ET-x + MSR holds the approximation error at <= x-1 "
+        "(Thm 2.3) while the\nmessage rate decays quadratically in x "
+        "(Thms 2.4/2.5) -- JSQ-like completion times\nat a few percent of "
+        "the exact-state communication."
+    )
+    print("\nNext: examples/train_moe_care.py  (CARE inside MoE training)"
+          "\n      examples/serve_care.py      (CARE request dispatcher)"
+          "\n      examples/multipod_dryrun.py (512-chip AOT lowering)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Serve a small model with batched requests through the CARE dispatcher.
+
+The paper's own setting at the serving tier: requests are jobs, replica
+groups are servers, and the front-end routes each request by JSAQ over
+*approximated* per-replica occupancy.  Replicas mirror the dispatcher's
+emulation (the paper's information asymmetry) and send a correction
+message only when the error reaches x (ET-x).
+
+Two parts:
+
+1. **Real decode**: a reduced SmolLM-family model is prefilled on a batch
+   of prompts and decoded with continuous batching -- the actual
+   ``model.prefill`` / ``model.decode_step`` code path the full-size
+   configs lower to on the 512-chip mesh.
+2. **Dispatch at scale**: the queueing engine drives 20k slots under a
+   0.9 load and compares ET-x / DT-x / RT-r / exact dispatchers on job
+   completion time and messages per completion (paper Figs 8-12 at the
+   systems tier).
+
+Usage:
+  PYTHONPATH=src python examples/serve_care.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model
+from repro.serve.engine import EngineConfig, run_serving_sim
+
+
+def real_decode_demo(num_prompts: int = 4, prompt_len: int = 16, gen_len: int = 12):
+    """Continuous-batched generation with the real model code path."""
+    cfg = get_config("smollm-135m").reduced()
+    params = model.init_params(jax.random.key(0), cfg)
+
+    tokens = jax.random.randint(
+        jax.random.key(1), (num_prompts, prompt_len), 0, cfg.vocab_size
+    )
+    cache_len = prompt_len + gen_len
+    logits, cache = model.prefill(
+        params, {"tokens": tokens}, cfg, cache_len=cache_len
+    )
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, cfg)
+    )
+    out = [jnp.argmax(logits, axis=-1)]
+    for i in range(gen_len - 1):
+        logits, cache = decode(params, out[-1], cache, jnp.asarray(prompt_len + i))
+        out.append(jnp.argmax(logits, axis=-1))
+    gen = jnp.stack(out, axis=1)
+    assert gen.shape == (num_prompts, gen_len)
+    assert not bool(jnp.isnan(logits).any())
+    print(f"[decode] generated {gen.shape} tokens with batched continuous "
+          f"decode ({cfg.name}); sample row: {np.asarray(gen[0])[:8]}...")
+
+
+def dispatch_comparison(slots: int, load: float):
+    print(f"\n[dispatch] {slots} slots at load {load}, 8 replica groups x 16 "
+          f"decode slots")
+    print(f"{'dispatcher':<14} {'mean JCT':>9} {'p99 JCT':>9} {'msgs/completion':>16}")
+    rows = [
+        ("exact", EngineConfig(comm="exact")),
+        ("ET-4 (CARE)", EngineConfig(comm="et", et_x=4)),
+        ("ET-8 (CARE)", EngineConfig(comm="et", et_x=8)),
+        ("DT-4", EngineConfig(comm="dt", dt_x=4)),
+        ("RT-16", EngineConfig(comm="rt", rt_period=16)),
+    ]
+    base = None
+    for name, ecfg in rows:
+        r = run_serving_sim(ecfg, slots=slots, load=load)
+        if base is None:
+            base = r
+        print(f"{name:<14} {r['mean_jct']:9.1f} {r['p99_jct']:9.1f} "
+              f"{r['msgs_per_completion']:16.3f}")
+    print("\nReading: the ET dispatcher matches the exact-state JCT "
+          "distribution while replicas\nmessage the front-end only on "
+          "emulation-error threshold crossings.")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=20_000)
+    ap.add_argument("--load", type=float, default=0.9)
+    args = ap.parse_args()
+    real_decode_demo()
+    dispatch_comparison(args.slots, args.load)
+
+
+if __name__ == "__main__":
+    main()

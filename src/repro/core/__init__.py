@@ -1,0 +1,11 @@
+"""Core library: the paper's contribution (CARE) as composable JAX modules."""
+
+from repro.core.care import (  # noqa: F401
+    SimConfig,
+    SimResult,
+    approx,
+    metrics,
+    routing,
+    simulate,
+    theory,
+)

@@ -1,0 +1,20 @@
+"""CARE: Communication, Approximation, Resource allocation, dynamic Environment.
+
+Paper-faithful implementation of Mendelson & Xu (2022), "Load Balancing Using
+Sparse Communication" / "CARE: Resource Allocation Using Sparse Communication".
+
+Components
+----------
+approx      -- approximation algorithms (basic / MSR / MSR-x queue emulation)
+routing     -- resource-allocation policies (JSQ / JSAQ / SQ(d) / RR / Random)
+slotted_sim -- discrete-time slotted simulator (paper Section 9), lax.scan based
+metrics     -- AQ / communication / JCT-CCDF metrics
+theory      -- closed-form bounds from Theorems 2.3, 2.4, 2.5
+"""
+
+from repro.core.care.slotted_sim import (  # noqa: F401
+    SimConfig,
+    SimResult,
+    simulate,
+)
+from repro.core.care import approx, metrics, routing, theory  # noqa: F401

@@ -1,0 +1,137 @@
+"""Approximation component of the CARE model (paper Section 4).
+
+The load balancer keeps, for every server i, an approximation ``q_app[i]`` of
+the true queue length ``q_true[i]``.  Between messages the approximation is
+driven by (a) arrivals the balancer itself routed (known exactly, Eq. 10) and
+(b) an *emulated* departure process encoding the approximation algorithm
+(Observation 4.1: the error is determined solely by departure estimation).
+
+Three algorithms from the paper:
+
+* ``basic``  -- never emulate departures (Definition 4.2).  Error equals the
+  number of true departures since the last message (Proposition 4.3).
+* ``msr``    -- emulate a FIFO queue where every job gets its Mean Service
+  Requirement, i.e. a deterministic ``msr_slots`` slots (Definition 4.8).
+* ``msr_x``  -- MSR with the emulated departure count truncated at ``x - 1``
+  (Definition 4.9), restoring the deterministic ``AQ <= x-1`` bound of
+  Proposition 6.7.
+
+All functions are pure and vectorised over the server axis so they can be
+used inside ``lax.scan`` (slotted simulator), inside a jitted MoE router
+(training-tier balancer) and by the serving dispatcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+ApproxKind = Literal["basic", "msr", "msr_x"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxConfig:
+    """Static configuration of the approximation algorithm.
+
+    Attributes:
+      kind: which approximation algorithm the balancer runs.
+      msr_slots: mean service requirement in slots (``1/mu`` in slot units);
+        the deterministic service time assigned to every emulated job.
+      x: the truncation parameter for ``msr_x`` (emulated departures are
+        capped at ``x - 1``).  Ignored for other kinds.
+    """
+
+    kind: ApproxKind = "msr"
+    msr_slots: int = 30
+    x: int = 3
+
+
+import jax
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EmuState:
+    """Balancer-side emulation state, one entry per server (shape ``(K,)``).
+
+    ``q_app`` is the approximated queue length.  ``head_rem`` is the remaining
+    emulated service (in slots) of the emulated in-service job; it is only
+    meaningful when ``q_app > 0``.  ``emu_deps`` counts emulated departures
+    since the last message (the quantity MSR-x truncates).
+    """
+
+    q_app: jnp.ndarray
+    head_rem: jnp.ndarray
+    emu_deps: jnp.ndarray
+
+    @staticmethod
+    def init(q0: jnp.ndarray, cfg: ApproxConfig) -> "EmuState":
+        k = q0.shape[0]
+        return EmuState(
+            q_app=q0.astype(jnp.int32),
+            head_rem=jnp.full((k,), cfg.msr_slots, jnp.int32),
+            emu_deps=jnp.zeros((k,), jnp.int32),
+        )
+
+
+def emu_arrival(state: EmuState, server: jnp.ndarray, cfg: ApproxConfig) -> EmuState:
+    """Register one arrival routed to ``server`` with the emulation.
+
+    If the emulated queue was empty the arriving job enters service
+    immediately and receives a fresh mean-service estimate.
+    """
+    was_empty = state.q_app[server] == 0
+    q_app = state.q_app.at[server].add(1)
+    head_rem = state.head_rem.at[server].set(
+        jnp.where(was_empty, cfg.msr_slots, state.head_rem[server])
+    )
+    return EmuState(q_app=q_app, head_rem=head_rem, emu_deps=state.emu_deps)
+
+
+def emu_drain_slot(state: EmuState, cfg: ApproxConfig) -> EmuState:
+    """Advance the emulated queues by one time slot (vectorised over servers).
+
+    ``basic``: no drain.  ``msr``: the emulated head departs after
+    ``msr_slots`` busy slots.  ``msr_x``: same, but departures freeze once
+    ``emu_deps == x - 1`` (Definition 4.9: subsequent jobs get service
+    ``inf``).
+    """
+    if cfg.kind == "basic":
+        return state
+
+    busy = state.q_app > 0
+    if cfg.kind == "msr_x":
+        allowed = state.emu_deps < (cfg.x - 1)
+    else:
+        allowed = jnp.ones_like(busy)
+    ticking = busy & allowed
+
+    head_rem = jnp.where(ticking, state.head_rem - 1, state.head_rem)
+    dep = ticking & (head_rem <= 0)
+    q_app = jnp.where(dep, state.q_app - 1, state.q_app)
+    emu_deps = jnp.where(dep, state.emu_deps + 1, state.emu_deps)
+    # Next emulated job (if any) enters service with a fresh mean estimate.
+    head_rem = jnp.where(dep, cfg.msr_slots, head_rem)
+    return EmuState(q_app=q_app, head_rem=head_rem, emu_deps=emu_deps)
+
+
+def emu_message_reset(
+    state: EmuState, q_true: jnp.ndarray, triggered: jnp.ndarray, cfg: ApproxConfig
+) -> EmuState:
+    """Process messages: servers in ``triggered`` report their true length.
+
+    A message carries the exact state (Section 2.1.2), so the approximation
+    snaps to the truth and the emulation restarts -- every job present at the
+    message time (including the in-service one, whose age the balancer does
+    not know) is assigned a fresh mean-service estimate (Definition 4.4).
+    """
+    q_app = jnp.where(triggered, q_true, state.q_app)
+    head_rem = jnp.where(triggered, cfg.msr_slots, state.head_rem)
+    emu_deps = jnp.where(triggered, 0, state.emu_deps)
+    return EmuState(q_app=q_app, head_rem=head_rem, emu_deps=emu_deps)
+
+
+def approximation_error(state: EmuState, q_true: jnp.ndarray) -> jnp.ndarray:
+    """Per-server approximation error ``AE_i(t)`` (Eq. 6)."""
+    return jnp.abs(q_true - state.q_app)

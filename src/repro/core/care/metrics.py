@@ -1,0 +1,52 @@
+"""Metrics for communication, approximation and performance (Section 2.1.5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.care import slotted_sim
+
+
+def ccdf(samples: np.ndarray, grid: np.ndarray | None = None):
+    """Complement CDF of ``samples`` on ``grid`` (paper Figures 3, 8-12)."""
+    samples = np.asarray(samples)
+    if grid is None:
+        hi = max(int(samples.max()) if samples.size else 1, 1)
+        grid = np.unique(np.round(np.geomspace(1, hi, 128)).astype(np.int64))
+    frac = np.array([(samples > g).mean() if samples.size else 0.0 for g in grid])
+    return grid, frac
+
+
+def jct_summary(jct: np.ndarray) -> dict:
+    """Mean / tail percentiles of job completion times."""
+    if jct.size == 0:
+        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p999": 0.0}
+    return {
+        "mean": float(jct.mean()),
+        "p50": float(np.percentile(jct, 50)),
+        "p90": float(np.percentile(jct, 90)),
+        "p99": float(np.percentile(jct, 99)),
+        "p999": float(np.percentile(jct, 99.9)),
+    }
+
+
+def relative_communication(
+    result: slotted_sim.SimResult, policy: str, sqd: int = 2
+) -> float:
+    """Messages relative to the exact-state baseline (1 per departure).
+
+    The paper measures communication "relative to the communication required
+    for full state information", i.e. divides by the number of departures
+    (which over long runs equals the number of arrivals for stable systems).
+    """
+    msgs = slotted_sim.exact_state_messages(result, policy, sqd)
+    return msgs / max(result.departures, 1)
+
+
+def ccdf_dominates(a: np.ndarray, b: np.ndarray, tol: float = 0.02) -> bool:
+    """True if JCT distribution ``a`` stochastically dominates ``b``
+    (i.e. ``a`` is *better*: its CCDF is pointwise <= up to ``tol``)."""
+    hi = int(max(a.max() if a.size else 1, b.max() if b.size else 1))
+    grid = np.unique(np.round(np.geomspace(1, hi, 64)).astype(np.int64))
+    _, ca = ccdf(a, grid)
+    _, cb = ccdf(b, grid)
+    return bool(np.all(ca <= cb + tol))

@@ -1,0 +1,81 @@
+"""Resource-allocation component (paper Sections 2.1.4 and 9.1).
+
+Routing policies map a (possibly approximated) state vector to a server
+index.  All policies are pure functions of ``(q, rr_ptr, key)`` so the
+simulator can treat them uniformly; which state vector (true or approximated)
+is fed to the policy is decided by the caller.
+
+Tie-breaking for the shortest-queue family is uniformly random, matching the
+paper's JSAQ definition (Section 2.1.4).
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+PolicyKind = Literal["jsq", "jsaq", "sq2", "sqd", "rr", "random"]
+
+
+def argmin_random_ties(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """Index of the minimum of ``q``; ties broken uniformly at random."""
+    is_min = q == jnp.min(q)
+    # Gumbel trick restricted to the argmin set: uniform over ties.
+    g = jax.random.gumbel(key, q.shape)
+    score = jnp.where(is_min, g, -jnp.inf)
+    return jnp.argmax(score).astype(jnp.int32)
+
+
+def route_shortest(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+    """JSQ / JSAQ: join the shortest (approximated) queue."""
+    return argmin_random_ties(q, key)
+
+
+def route_sqd(q_true: jnp.ndarray, d: int, key: jax.Array) -> jnp.ndarray:
+    """SQ(d): sample ``d`` distinct servers, join the shortest among them."""
+    k = q_true.shape[0]
+    key_perm, key_tie = jax.random.split(key)
+    sample = jax.random.permutation(key_perm, k)[:d]
+    sub = q_true[sample]
+    j = argmin_random_ties(sub, key_tie)
+    return sample[j].astype(jnp.int32)
+
+
+def route_rr(rr_ptr: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Round Robin: deterministic cyclic assignment.  Returns (server, ptr')."""
+    return rr_ptr % k, (rr_ptr + 1) % k
+
+
+def route_random(k: int, key: jax.Array) -> jnp.ndarray:
+    """Uniformly random assignment."""
+    return jax.random.randint(key, (), 0, k, jnp.int32)
+
+
+def route(
+    policy: PolicyKind,
+    q_true: jnp.ndarray,
+    q_app: jnp.ndarray,
+    rr_ptr: jnp.ndarray,
+    key: jax.Array,
+    d: int = 2,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch one job.  Returns ``(server, rr_ptr')``.
+
+    ``policy`` is static (Python-level), so jitted callers specialise on it.
+    """
+    k = q_true.shape[0]
+    if policy == "jsq":
+        return route_shortest(q_true, key), rr_ptr
+    if policy == "jsaq":
+        return route_shortest(q_app, key), rr_ptr
+    if policy == "sq2":
+        return route_sqd(q_true, 2, key), rr_ptr
+    if policy == "sqd":
+        return route_sqd(q_true, d, key), rr_ptr
+    if policy == "rr":
+        server, ptr = route_rr(rr_ptr, k)
+        return server.astype(jnp.int32), ptr
+    if policy == "random":
+        return route_random(k, key), rr_ptr
+    raise ValueError(f"unknown policy: {policy}")

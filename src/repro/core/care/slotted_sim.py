@@ -1,0 +1,310 @@
+"""Discrete-time slotted simulator for the CARE model (paper Section 9).
+
+Dynamics (matching the paper's simulation setting exactly):
+
+* K parallel FIFO servers, a single load balancer.
+* In every slot, one job arrives with probability ``load`` (Bernoulli).
+* Job service requirements are i.i.d. Geometric(1/K) (mean K slots), drawn
+  per job at arrival time so that *the same input* (arrival times and sizes)
+  can be replayed under every policy -- the paper's comparison method.
+* A busy server completes one unit of work per slot.
+
+Within a slot the order of operations is:
+
+  1. arrival (if any) is routed using the *pre-slot* state;
+  2. every busy server works one unit; the head job departs when its
+     remaining requirement reaches zero;
+  3. the balancer's emulation advances one slot (approximation component);
+  4. the communication pattern evaluates its trigger and any triggered
+     server sends a message carrying its exact queue length, which snaps the
+     approximation to the truth.
+
+Because a message fires in the same slot in which the trigger condition is
+met, the end-of-slot approximation error satisfies ``AQ <= x - 1`` for DT-x
+and ET-x (Theorem 2.3) -- asserted by the tests.
+
+The whole simulation is a single ``jax.lax.scan``; all per-server state is
+vectorised and job FIFOs are circular buffers carried through the scan, so
+the simulator jit-compiles once per (policy, pattern, approximation) triple
+and runs at native speed on CPU/TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.care import approx as approx_lib
+from repro.core.care import routing as routing_lib
+
+CommKind = Literal["none", "rt", "dt", "et"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static simulation configuration (hashable; jit specialises on it)."""
+
+    servers: int = 30
+    slots: int = 100_000
+    load: float = 0.95
+    # Mean job size in slots; the paper uses Geometric(1/K) i.e. mean == K.
+    mean_service: int = 30
+    policy: routing_lib.PolicyKind = "jsaq"
+    comm: CommKind = "et"
+    x: int = 3  # DT-x / ET-x parameter (max tolerated error is x-1).
+    rt_rate: float = 0.01  # RT-r per-server message rate (messages/slot).
+    approx: approx_lib.ApproxKind = "msr"
+    buffer_cap: int = 2048  # per-server FIFO capacity (power of two).
+    sqd: int = 2
+
+    def approx_config(self) -> approx_lib.ApproxConfig:
+        return approx_lib.ApproxConfig(
+            kind=self.approx, msr_slots=self.mean_service, x=self.x
+        )
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Simulation outputs (host-side numpy)."""
+
+    jct: np.ndarray  # (num_jobs,) job completion times in slots (>=1)
+    arrivals: int
+    departures: int
+    messages: int
+    max_aq: int  # sup_t AQ(t) observed at slot ends
+    max_queue: int
+    overflow: bool
+    per_server_arrivals: np.ndarray  # (K,)
+    final_q: np.ndarray  # (K,)
+    # messages per departure; the exact-state baseline is 1 (Prop 6.1).
+    msgs_per_departure: float = 0.0
+    queue_gap_sup: int = 0  # sup_t max_ij |Q_i - Q_j| (for SSC experiments)
+
+
+def _geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
+    """i.i.d. Geometric(1/mean) sizes with support {1, 2, ...}."""
+    u = jax.random.uniform(key, (n,), jnp.float32, 1e-7, 1.0 - 1e-7)
+    sizes = jnp.floor(jnp.log1p(-u) / np.log1p(-1.0 / mean)) + 1.0
+    return jnp.maximum(sizes, 1.0).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class _Carry:
+    q_true: jnp.ndarray  # (K,) true queue lengths
+    head_rem: jnp.ndarray  # (K,) remaining slots of in-service job
+    buf_jid: jnp.ndarray  # (K, B) circular FIFO of job ids (arrival slots)
+    head_ptr: jnp.ndarray  # (K,) FIFO head index
+    emu: approx_lib.EmuState
+    deps_since_msg: jnp.ndarray  # (K,)
+    slots_since_msg: jnp.ndarray  # (K,)
+    rr_ptr: jnp.ndarray  # () round-robin pointer
+    msgs: jnp.ndarray  # () total messages
+    deps: jnp.ndarray  # () total departures
+    arrs: jnp.ndarray  # () total arrivals
+    per_srv: jnp.ndarray  # (K,) arrivals per server
+    max_aq: jnp.ndarray  # () running sup of end-of-slot AQ
+    max_q: jnp.ndarray  # () running sup of max queue length
+    overflow: jnp.ndarray  # () bool, FIFO capacity exceeded
+    gap_sup: jnp.ndarray  # () running sup of max_ij |Q_i - Q_j|
+
+
+jax.tree_util.register_dataclass(
+    _Carry, data_fields=[f.name for f in dataclasses.fields(_Carry)], meta_fields=[]
+)
+
+
+def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
+    """Run one slotted simulation; returns host-side metrics."""
+    k_arr, k_size, k_scan = jax.random.split(key, 3)
+    t = cfg.slots
+    arrive = jax.random.bernoulli(k_arr, cfg.load, (t,))
+    sizes = _geometric_sizes(k_size, t, cfg.mean_service)
+    slot_keys = jax.random.split(k_scan, t)
+
+    out = _simulate_jit(arrive, sizes, slot_keys, cfg)
+    (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, overflow,
+     gap_sup) = map(np.asarray, out)
+
+    arrive_np = np.asarray(arrive)
+    arrival_slots = np.nonzero(arrive_np)[0]
+    comp = comp_slot[arrival_slots]
+    done = comp >= 0
+    jct = comp[done] - arrival_slots[done] + 1
+
+    deps_i = int(deps)
+    msgs_i = int(msgs)
+    return SimResult(
+        jct=jct.astype(np.int64),
+        arrivals=int(arrs),
+        departures=deps_i,
+        messages=msgs_i,
+        max_aq=int(max_aq),
+        max_queue=int(max_q),
+        overflow=bool(overflow),
+        per_server_arrivals=per_srv,
+        final_q=final_q,
+        msgs_per_departure=(msgs_i / deps_i) if deps_i else 0.0,
+        queue_gap_sup=int(gap_sup),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
+    k = cfg.servers
+    b = cfg.buffer_cap
+    acfg = cfg.approx_config()
+    rt_period = max(int(round(1.0 / max(cfg.rt_rate, 1e-9))), 1)
+
+    def slot(c: _Carry, xs):
+        arr, size, jid, skey = xs
+
+        # --- 1. arrival & routing -------------------------------------
+        server, rr_ptr = routing_lib.route(
+            cfg.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey, d=cfg.sqd
+        )
+        tail = (c.head_ptr[server] + c.q_true[server]) % b
+        overflow = c.overflow | (arr & (c.q_true[server] >= b))
+        buf_jid = jax.lax.cond(
+            arr,
+            lambda bj: bj.at[server, tail].set(jid),
+            lambda bj: bj,
+            c.buf_jid,
+        )
+        was_idle = c.q_true[server] == 0
+        q_true = jnp.where(arr, c.q_true.at[server].add(1), c.q_true)
+        head_rem = jnp.where(
+            arr & was_idle, c.head_rem.at[server].set(size), c.head_rem
+        )
+        emu = jax.lax.cond(
+            arr,
+            lambda e: approx_lib.emu_arrival(e, server, acfg),
+            lambda e: e,
+            c.emu,
+        )
+        arrs = c.arrs + arr.astype(jnp.int32)
+        per_srv = jnp.where(arr, c.per_srv.at[server].add(1), c.per_srv)
+
+        # --- 2. service ------------------------------------------------
+        busy = q_true > 0
+        head_rem = jnp.where(busy, head_rem - 1, head_rem)
+        dep = busy & (head_rem <= 0)
+        departed_jid = jnp.where(
+            dep, buf_jid[jnp.arange(k), c.head_ptr % b], -1
+        )
+        q_true = jnp.where(dep, q_true - 1, q_true)
+        head_ptr = jnp.where(dep, c.head_ptr + 1, c.head_ptr)
+        # Promote the next job (if any) into service with its true size.
+        next_jid = buf_jid[jnp.arange(k), head_ptr % b]
+        next_size = sizes[jnp.clip(next_jid, 0, sizes.shape[0] - 1)]
+        head_rem = jnp.where(dep & (q_true > 0), next_size, head_rem)
+        deps = c.deps + jnp.sum(dep, dtype=jnp.int32)
+        deps_since_msg = c.deps_since_msg + dep.astype(jnp.int32)
+
+        # --- 3. emulation drain -----------------------------------------
+        emu = approx_lib.emu_drain_slot(emu, acfg)
+
+        # --- 4/5. communication trigger ---------------------------------
+        err = approx_lib.approximation_error(emu, q_true)
+        slots_since_msg = c.slots_since_msg + 1
+        if cfg.comm == "rt":
+            triggered = slots_since_msg >= rt_period
+        elif cfg.comm == "dt":
+            triggered = deps_since_msg >= cfg.x
+        elif cfg.comm == "et":
+            triggered = err >= cfg.x
+        else:  # "none": exact-state policies count messages analytically.
+            triggered = jnp.zeros((k,), bool)
+
+        msgs = c.msgs + jnp.sum(triggered, dtype=jnp.int32)
+        emu = approx_lib.emu_message_reset(emu, q_true, triggered, acfg)
+        deps_since_msg = jnp.where(triggered, 0, deps_since_msg)
+        slots_since_msg = jnp.where(triggered, 0, slots_since_msg)
+
+        # --- 6. metrics ---------------------------------------------------
+        aq = jnp.max(jnp.abs(q_true - emu.q_app))
+        gap = jnp.max(q_true) - jnp.min(q_true)
+        carry = _Carry(
+            q_true=q_true,
+            head_rem=head_rem,
+            buf_jid=buf_jid,
+            head_ptr=head_ptr,
+            emu=emu,
+            deps_since_msg=deps_since_msg,
+            slots_since_msg=slots_since_msg,
+            rr_ptr=rr_ptr,
+            msgs=msgs,
+            deps=deps,
+            arrs=arrs,
+            per_srv=per_srv,
+            max_aq=jnp.maximum(c.max_aq, aq),
+            max_q=jnp.maximum(c.max_q, jnp.max(q_true)),
+            overflow=overflow,
+            gap_sup=jnp.maximum(c.gap_sup, gap),
+        )
+        return carry, departed_jid
+
+    t = arrive.shape[0]
+    init = _Carry(
+        q_true=jnp.zeros((k,), jnp.int32),
+        head_rem=jnp.zeros((k,), jnp.int32),
+        buf_jid=jnp.full((k, b), -1, jnp.int32),
+        head_ptr=jnp.zeros((k,), jnp.int32),
+        emu=approx_lib.EmuState.init(jnp.zeros((k,), jnp.int32), acfg),
+        deps_since_msg=jnp.zeros((k,), jnp.int32),
+        slots_since_msg=jnp.zeros((k,), jnp.int32),
+        rr_ptr=jnp.zeros((), jnp.int32),
+        msgs=jnp.zeros((), jnp.int32),
+        deps=jnp.zeros((), jnp.int32),
+        arrs=jnp.zeros((), jnp.int32),
+        per_srv=jnp.zeros((k,), jnp.int32),
+        max_aq=jnp.zeros((), jnp.int32),
+        max_q=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), bool),
+        gap_sup=jnp.zeros((), jnp.int32),
+    )
+    xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys)
+    final, departed = jax.lax.scan(slot, init, xs)
+
+    # completion slot per job id (-1 if never completed).
+    comp_slot = jnp.full((t,), -1, jnp.int32)
+    slot_idx = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], departed.shape
+    )
+    valid = departed >= 0
+    comp_slot = comp_slot.at[jnp.where(valid, departed, 0)].max(
+        jnp.where(valid, slot_idx, -1)
+    )
+    return (
+        comp_slot,
+        final.msgs,
+        final.deps,
+        final.arrs,
+        final.max_aq,
+        final.max_q,
+        final.per_srv,
+        final.q_true,
+        final.overflow,
+        final.gap_sup,
+    )
+
+
+def exact_state_messages(result: SimResult, policy: str, sqd: int = 2) -> int:
+    """Messages the *policy itself* fundamentally needs (paper Fig. 5).
+
+    JSQ needs one message per departure [LXK+11]; SQ(d) needs 2d messages per
+    arrival under the query implementation; RR / Random need none.  CARE
+    policies report their trigger-counted messages directly.
+    """
+    if policy == "jsq":
+        return result.departures
+    if policy == "sq2":
+        return 4 * result.arrivals
+    if policy == "sqd":
+        return 2 * sqd * result.arrivals
+    if policy in ("rr", "random"):
+        return 0
+    return result.messages

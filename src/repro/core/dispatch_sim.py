@@ -1,0 +1,188 @@
+"""Multi-dispatcher MoE dispatch simulation: CARE at the expert tier.
+
+The training-tier balancer (``core/moe_balancer.py``) is exact when a
+single dispatcher routes every token (Remark 4.6: the balancer knows all
+arrivals, so zero communication is needed).  The communication question
+only arises with *multiple* dispatchers -- the [VKO20] setting the paper
+targets -- where each router sees only its own arrivals and the exact
+per-expert state lives with the experts.
+
+This module simulates that setting with the paper's full queueing
+structure mapped onto expert parallelism:
+
+* ``E`` experts are the servers.  Each has a finite service capacity
+  ``mu`` tokens/step and a FIFO backlog queue ``q_e`` -- tokens routed
+  beyond ``mu`` wait (pipelined microbatches / deferred expert work).
+  ``q_e(t+1) = max(q_e + a_e - mu, 0)`` is the slotted Lindley recursion;
+  the ``max(.,0)`` idleness reflection is exactly why departures are hard
+  to emulate (Section 6 of the paper).
+* ``D`` dispatchers each route ``T`` tokens/step, top-k over gate scores
+  drawn from a *dispatcher-specific, time-drifting* preference
+  (heterogeneous, non-stationary traffic) plus a persistent global skew.
+* Between messages each dispatcher runs the paper's emulation (Def 4.4):
+  its own arrivals are known exactly (Eq. 10), the other ``D-1``
+  dispatchers are emulated at the mean arrival rate (MSR applied to
+  arrivals), and departures at the known service rate ``mu`` (MSR), with
+  the same idleness reflection.  The emulation error is driven by the
+  unobserved preference drift of the *other* dispatchers.
+* Messages carry the exact queue state (paper Section 2.1.2):
+    - ``exact`` -- every dispatcher syncs every step (D messages/step,
+      the 1-message-per-departure-batch baseline);
+    - ``dt-x``  -- all dispatchers sync every x steps;
+    - ``et-x``  -- the expert side mirrors every dispatcher's emulation
+      (the paper's information asymmetry) and messages *only the
+      dispatcher whose max queue error reached* ``x * mu`` tokens;
+    - ``off``   -- pure local emulation, never corrected.
+* Routing bias: JSAQ on the approximated queue -- the selection score is
+  penalised by ``alpha * clip(rel(q_approx))`` plus an integral term that
+  cancels the persistent skew (the PI controller of ``moe_balancer``).
+
+Reported per regime: mean backlog (latency proxy, Little's law), the
+queue-gap sup ``max_e q - min_e q`` (the paper's SSC metric), overflow
+drops, and messages per step -- the communication-performance trade-off
+restated for expert parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchSimConfig:
+    experts: int = 64
+    dispatchers: int = 8
+    tokens_per_step: int = 256  # per dispatcher
+    top_k: int = 8
+    steps: int = 400
+    load: float = 0.92  # utilisation: arrivals / total service capacity
+    comm: str = "et"  # "exact" | "dt" | "et" | "off"
+    x: int = 2  # dt period / et error threshold (units of mu tokens)
+    # Traffic model.
+    base_skew: float = 1.0  # persistent global expert preference (std)
+    drift: float = 0.10  # per-step random-walk std of dispatcher prefs
+    noise: float = 1.0  # per-token logit noise std
+    # Controller (mirrors CareConfig).
+    bias_alpha: float = 0.6
+    bias_clip: float = 2.0
+    gamma: float = 0.02
+    enabled: bool = True
+
+    @property
+    def mu(self) -> float:
+        """Per-expert service capacity (tokens/step)."""
+        arrivals = self.dispatchers * self.tokens_per_step * self.top_k
+        return arrivals / (self.load * self.experts)
+
+
+@dataclasses.dataclass
+class DispatchSimResult:
+    backlog: np.ndarray  # (steps,) mean per-expert queue
+    gap: np.ndarray  # (steps,) max_e q - min_e q (SSC metric)
+    messages: int
+    msgs_per_step: float
+    rel_comm: float  # msgs / (D * steps): fraction of the exact baseline
+    tail_backlog: float  # mean over the 2nd half (steady state)
+    tail_gap: float
+    transient_gap: float  # mean over steps [50, steps/2): convergence cost
+    max_err: float  # sup over (step, dispatcher) of |q - q_approx| / mu
+
+
+def _rel(load):
+    mean = jnp.mean(load, axis=-1, keepdims=True)
+    return load / (mean + 1e-6) - 1.0
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _sim(key, cfg: DispatchSimConfig):
+    d, e, t, k = cfg.dispatchers, cfg.experts, cfg.tokens_per_step, cfg.top_k
+    mu = cfg.mu
+    k_base, k_scan = jax.random.split(key)
+    base = cfg.base_skew * jax.random.normal(k_base, (e,))
+
+    def step(carry, skey):
+        pref, q_true, q_app, bias, step_i, msgs = carry
+        k1, k2 = jax.random.split(skey)
+        pref = pref + cfg.drift * jax.random.normal(k1, (d, e))
+        logits = (
+            base[None, None, :]
+            + pref[:, None, :]
+            + cfg.noise * jax.random.normal(k2, (d, t, e))
+        )
+        # JSAQ bias on the *approximated* queue (PI controller).
+        if cfg.enabled:
+            sel_bias = bias + cfg.bias_alpha * jnp.clip(
+                _rel(q_app), -cfg.bias_clip, cfg.bias_clip
+            )
+        else:
+            sel_bias = jnp.zeros((d, e))
+        score = logits - sel_bias[:, None, :]
+        _, idx = jax.lax.top_k(score, k)  # (D, T, k)
+        counts = jnp.sum(
+            jax.nn.one_hot(idx.reshape(d, -1), e, dtype=jnp.float32), axis=1
+        )  # (D, E) arrivals per dispatcher
+
+        # True expert queues: Lindley recursion with service capacity mu.
+        g = jnp.sum(counts, axis=0)  # (E,) global arrivals this step
+        q_true = jnp.maximum(q_true + g - mu, 0.0)
+
+        # Dispatcher emulation: own arrivals exact, other dispatchers at the
+        # mean rate (MSR on arrivals), service at mu (MSR on departures),
+        # same idleness reflection.
+        a_est = d * counts  # (D, E)
+        q_app = jnp.maximum(q_app + a_est - mu, 0.0)
+
+        bias = bias + cfg.gamma * jnp.clip(_rel(q_app), -1.0, 1.0)
+        bias = bias - jnp.mean(bias, axis=-1, keepdims=True)
+
+        err = jnp.max(jnp.abs(q_app - q_true[None, :]), axis=-1) / mu  # (D,)
+
+        if cfg.comm == "exact":
+            trigger = jnp.ones((d,), bool)
+        elif cfg.comm == "dt":
+            trigger = jnp.broadcast_to((step_i % cfg.x) == (cfg.x - 1), (d,))
+        elif cfg.comm == "et":
+            trigger = err >= cfg.x
+        else:  # off
+            trigger = jnp.zeros((d,), bool)
+
+        q_app = jnp.where(trigger[:, None], q_true[None, :], q_app)
+        msgs = msgs + jnp.sum(trigger.astype(jnp.int32))
+
+        backlog = jnp.mean(q_true)
+        gap = jnp.max(q_true) - jnp.min(q_true)
+        carry = (pref, q_true, q_app, bias, step_i + 1, msgs)
+        return carry, (backlog, gap, jnp.max(err))
+
+    init = (
+        jnp.zeros((d, e)),
+        jnp.zeros((e,)),
+        jnp.zeros((d, e)),
+        jnp.zeros((d, e)),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+    keys = jax.random.split(k_scan, cfg.steps)
+    (_, _, _, _, _, msgs), (backlog, gap, errs) = jax.lax.scan(step, init, keys)
+    return backlog, gap, errs, msgs
+
+
+def simulate(seed: int, cfg: DispatchSimConfig) -> DispatchSimResult:
+    backlog, gap, errs, msgs = _sim(jax.random.key(seed), cfg)
+    backlog, gap = np.asarray(backlog), np.asarray(gap)
+    half = len(backlog) // 2
+    return DispatchSimResult(
+        backlog=backlog,
+        gap=gap,
+        messages=int(msgs),
+        msgs_per_step=float(msgs) / cfg.steps,
+        rel_comm=float(msgs) / (cfg.dispatchers * cfg.steps),
+        tail_backlog=float(backlog[half:].mean()),
+        tail_gap=float(gap[half:].mean()),
+        transient_gap=float(gap[50:half].mean()) if half > 50 else float("nan"),
+        max_err=float(np.asarray(errs).max()),
+    )

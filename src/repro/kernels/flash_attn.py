@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: flash attention (tiled online-softmax SDPA).
+
+The roofline analysis (EXPERIMENTS.md §Perf) shows the f32 score chain of
+naive softmax(QK^T)V is the dominant HBM term of every attention arch at
+the assigned shapes.  The pure-JAX blocked form (``models/flash.py``)
+restructures the HLO; *this* kernel is the TPU endpoint: Q/K/V tiles are
+staged into VMEM by the BlockSpec pipeline and the (QB, KB) score tile
+lives only in VMEM/VREGs -- the S² tensor never touches HBM.
+
+Tiling:
+* grid = (N, S/QB, T/KB) with the KV axis innermost (sequential online
+  accumulation); N = batch x heads.
+* q tile (QB, dh) on the MXU lhs; scores (QB, KB) with QB=KB=128 are
+  exactly one MXU-aligned tile; dv accumulates in an f32 VMEM scratch.
+* The running max/denominator (m, l) are (QB, 1) VMEM scratch, carried
+  across the KV grid axis -- the canonical flash recurrence.
+
+Semantics match ``kernels.ref.flash_attention_ref`` (and
+``models/flash.py``): scale -> optional softcap -> causal/window mask ->
+online softmax in f32 -> weighted sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Q_BLOCK = 128
+KV_BLOCK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, softcap: float, kv_steps: int,
+):
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (QB, dh)
+    k = k_ref[0]  # (KB, dh)
+    v = v_ref[0]  # (KB, dv)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (QB, KB)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = i * Q_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = j * KV_BLOCK + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    if causal:
+        ok = kpos <= qpos
+        if window is not None:
+            ok = ok & (qpos - kpos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (QB, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)  # (QB, KB)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+
+    @pl.when(j == kv_steps - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tiled SDPA.  q: (N, S, dh); k: (N, T, dh); v: (N, T, dv).
+
+    N folds batch x heads (GQA callers broadcast KV heads in the wrapper,
+    ``kernels.ops.flash_attention``).  S % 128 == T % 128 == 0.
+    Returns (N, S, dv) in q.dtype.
+    """
+    n, s, dh = q.shape
+    t = k.shape[1]
+    dv = v.shape[2]
+    if s % Q_BLOCK or t % KV_BLOCK:
+        raise ValueError(f"S ({s}) and T ({t}) must be multiples of 128")
+    kv_steps = t // KV_BLOCK
+    grid = (n, s // Q_BLOCK, kv_steps)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_steps=kv_steps,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q_BLOCK, dh), lambda n, i, j: (n, i, 0)),
+            pl.BlockSpec((1, KV_BLOCK, dh), lambda n, i, j: (n, j, 0)),
+            pl.BlockSpec((1, KV_BLOCK, dv), lambda n, i, j: (n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q_BLOCK, dv), lambda n, i, j: (n, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Q_BLOCK, dv), jnp.float32),
+            pltpu.VMEM((Q_BLOCK, 1), jnp.float32),
+            pltpu.VMEM((Q_BLOCK, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

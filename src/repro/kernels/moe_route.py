@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused CARE-biased MoE router.
+
+Fuses the expert-routing hot path of the MoE archs into one VMEM-resident
+pass per token tile:
+
+  gate activation -> CARE load-bias -> iterative top-k -> weight
+  normalisation -> per-expert dispatch counts
+
+The CARE connection: the selection score is ``logit - bias`` where ``bias``
+is derived from the balancer's *approximated* per-expert load (JSAQ applied
+to the gate's candidate set).  Like DeepSeek-v3's aux-free balancing, the
+bias shifts only the *selection*, never the combine weights -- but here the
+bias is maintained by the paper's emulation + sparse sync instead of a
+per-step exact update.
+
+Layout / tiling:
+* tokens on the sublane axis, experts on the lane axis: a (Tt, E) tile with
+  Tt=128 tokens and E<=256 experts is at most 128KiB of VMEM in f32;
+* top-k is k sequential masked argmax sweeps over the tile (k<=8, static);
+* counts are accumulated across the sequential grid into a single (1, E)
+  output block (same block for every program -- the canonical Pallas
+  reduction pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOKEN_TILE = 128
+NEG_INF = -1e30
+
+
+def _moe_route_kernel(
+    logits_ref,
+    bias_ref,
+    idx_ref,
+    weight_ref,
+    counts_ref,
+    *,
+    top_k: int,
+    gate_fn: str,
+):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    logits = logits_ref[...].astype(jnp.float32)  # (Tt, E)
+    bias = bias_ref[...].astype(jnp.float32)  # (1, E)
+
+    if gate_fn == "softmax":
+        z = logits - jnp.max(logits, axis=1, keepdims=True)
+        ez = jnp.exp(z)
+        gates = ez / jnp.sum(ez, axis=1, keepdims=True)
+    elif gate_fn == "sigmoid":
+        gates = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(gate_fn)
+
+    score = logits - bias  # selection score only; weights stay unbiased
+    tile_counts = jnp.zeros(bias.shape, jnp.int32)
+    weight_sum = jnp.zeros((logits.shape[0], 1), jnp.float32)
+    eids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+
+    sel_weights = []
+    sel_idx = []
+    for i in range(top_k):
+        j = jnp.argmax(score, axis=1).astype(jnp.int32)  # (Tt,)
+        onehot = (eids == j[:, None]).astype(jnp.float32)
+        w = jnp.sum(gates * onehot, axis=1, keepdims=True)  # (Tt, 1)
+        sel_idx.append(j[:, None])
+        sel_weights.append(w)
+        weight_sum = weight_sum + w
+        tile_counts = tile_counts + jnp.sum(
+            onehot.astype(jnp.int32), axis=0, keepdims=True
+        )
+        score = jnp.where(onehot > 0, NEG_INF, score)
+
+    idx_ref[...] = jnp.concatenate(sel_idx, axis=1)
+    weights = jnp.concatenate(sel_weights, axis=1)
+    weight_ref[...] = (weights / (weight_sum + 1e-20)).astype(weight_ref.dtype)
+    counts_ref[...] += tile_counts
+
+
+def moe_route_pallas(
+    logits: jax.Array,
+    bias: jax.Array,
+    top_k: int,
+    *,
+    gate_fn: str = "softmax",
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused biased top-k routing.
+
+    Args:
+      logits: (T, E) router logits (f32 or bf16).
+      bias: (E,) CARE load bias subtracted from the selection score.
+      top_k: experts per token (static, <= 8 typical).
+      gate_fn: "softmax" (deepseek-v2) or "sigmoid" (deepseek-v3).
+
+    Returns:
+      idx: (T, top_k) int32 expert ids, in selection order.
+      weights: (T, top_k) f32 combine weights, normalised over selected.
+      counts: (E,) int32 tokens dispatched per expert.
+    """
+    t, e = logits.shape
+    if t % TOKEN_TILE:
+        raise ValueError(f"tokens ({t}) must be a multiple of {TOKEN_TILE}")
+    grid = (t // TOKEN_TILE,)
+    kernel = functools.partial(_moe_route_kernel, top_k=top_k, gate_fn=gate_fn)
+    idx, weights, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TOKEN_TILE, e), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TOKEN_TILE, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((TOKEN_TILE, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((t, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((1, e), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, bias.reshape(1, e))
+    return idx, weights, counts[0]

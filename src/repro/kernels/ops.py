@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container, unit
+tests) they run under the Pallas interpreter, which executes the kernel body
+in Python with the same block semantics.  Callers can force either mode.
+
+Wrappers also handle padding to tile multiples so call sites stay clean.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attn as _flash
+from repro.kernels import jsaq_route as _jsaq
+from repro.kernels import moe_route as _moe
+from repro.kernels import ref as _ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("num_jobs", "interpret", "use_pallas"))
+def jsaq_route(
+    q_app: jax.Array,
+    num_jobs: int,
+    *,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched JSAQ dispatch (see kernels/jsaq_route.py).
+
+    Pads the domain axis to the tile size; (D, K) -> ((D,N) idx, (D,K) q').
+    """
+    if not use_pallas:
+        return _ref.jsaq_route_ref(q_app, num_jobs)
+    interpret = _default_interpret() if interpret is None else interpret
+    d, k = q_app.shape
+    tile = _jsaq.DOMAIN_TILE
+    pad = (-d) % tile
+    if pad:
+        q_app = jnp.concatenate(
+            [q_app, jnp.zeros((pad, k), q_app.dtype)], axis=0
+        )
+    idx, q_out = _jsaq.jsaq_route_pallas(q_app, num_jobs, interpret=interpret)
+    return idx[:d], q_out[:d]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("top_k", "gate_fn", "interpret", "use_pallas")
+)
+def moe_route(
+    logits: jax.Array,
+    bias: jax.Array,
+    top_k: int,
+    *,
+    gate_fn: str = "softmax",
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused CARE-biased top-k routing (see kernels/moe_route.py)."""
+    if not use_pallas:
+        return _ref.moe_route_ref(logits, bias, top_k, gate_fn)
+    interpret = _default_interpret() if interpret is None else interpret
+    t, e = logits.shape
+    tile = _moe.TOKEN_TILE
+    pad = (-t) % tile
+    if pad:
+        logits = jnp.concatenate(
+            [logits, jnp.full((pad, e), -1e30, logits.dtype)], axis=0
+        )
+    idx, w, counts = _moe.moe_route_pallas(
+        logits, bias, top_k, gate_fn=gate_fn, interpret=interpret
+    )
+    if pad:
+        # Remove phantom-token contributions from the counts.
+        pad_idx = idx[t:]
+        phantom = jnp.zeros_like(counts).at[pad_idx.reshape(-1)].add(1)
+        counts = counts - phantom
+    return idx[:t], w[:t], counts
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "interpret",
+                     "use_pallas"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float = 0.0,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Flash SDPA (see kernels/flash_attn.py).
+
+    q: (B, S, H, dh); k, v: (B, T, KVH, dh/dv).  GQA is handled by
+    broadcasting the KV heads here (the VMEM tiles inside the kernel are
+    per-head either way).  Returns (B, S, H, dv).
+    """
+    if not use_pallas:
+        return _ref.flash_attention_ref(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=softcap,
+        )
+    interpret = _default_interpret() if interpret is None else interpret
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, t, dv)
+    out = _flash.flash_attention_pallas(
+        qf, kf, vf, scale=scale, causal=causal, window=window,
+        softcap=softcap, interpret=interpret,
+    )
+    return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)

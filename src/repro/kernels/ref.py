@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` mirrors its kernel's semantics exactly -- including
+tie-breaking (iterative argmin/argmax, first-index wins) -- so tests can
+``assert_allclose`` bit-for-bit on integer outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def jsaq_route_ref(q_app: jax.Array, num_jobs: int):
+    """Oracle for jsaq_route: sequential argmin + increment per domain."""
+
+    def body(q, _):
+        j = jnp.argmin(q, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(j, q.shape[1], dtype=q.dtype)
+        return q + onehot, j
+
+    q_out, idx = jax.lax.scan(body, q_app, None, length=num_jobs)
+    return jnp.swapaxes(idx, 0, 1), q_out
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float,
+    causal: bool = True,
+    window=None,
+    softcap: float = 0.0,
+):
+    """Oracle for flash_attention: dense softmax SDPA, f32 accumulation.
+
+    q: (B, S, H, dh); k, v: (B, T, KVH, dh/dv) -> (B, S, H, dv).
+    """
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    sc = jnp.einsum(
+        "bskgd,btkd->bskgt", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    if causal:
+        qpos = jnp.arange(s, dtype=jnp.int32)[None, :, None, None, None]
+        kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, None, :]
+        ok = kpos <= qpos
+        if window is not None:
+            ok = ok & (qpos - kpos < window)
+        sc = jnp.where(ok, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p.astype(v.dtype), v)
+    return out.astype(q.dtype).reshape(b, s, h, v.shape[3])
+
+
+def moe_route_ref(
+    logits: jax.Array, bias: jax.Array, top_k: int, gate_fn: str = "softmax"
+):
+    """Oracle for moe_route: iterative masked argmax, unbiased weights."""
+    logits = logits.astype(jnp.float32)
+    if gate_fn == "softmax":
+        gates = jax.nn.softmax(logits, axis=1)
+    elif gate_fn == "sigmoid":
+        gates = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(gate_fn)
+
+    score = logits - bias[None, :].astype(jnp.float32)
+    idx_list, w_list = [], []
+    counts = jnp.zeros((logits.shape[1],), jnp.int32)
+    for _ in range(top_k):
+        j = jnp.argmax(score, axis=1).astype(jnp.int32)
+        onehot = jax.nn.one_hot(j, logits.shape[1], dtype=jnp.float32)
+        w = jnp.sum(gates * onehot, axis=1)
+        idx_list.append(j)
+        w_list.append(w)
+        counts = counts + jnp.sum(onehot.astype(jnp.int32), axis=0)
+        score = jnp.where(onehot > 0, -1e30, score)
+    idx = jnp.stack(idx_list, axis=1)
+    weights = jnp.stack(w_list, axis=1)
+    weights = weights / (jnp.sum(weights, axis=1, keepdims=True) + 1e-20)
+    return idx, weights, counts

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first initialisation).  Everything else follows.
+
+"""Multi-pod AOT dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. constructs ShapeDtypeStruct stand-ins for every input (no allocation);
+  3. ``jax.jit(step, in_shardings, out_shardings).lower(...).compile()``;
+  4. records ``memory_analysis()``, ``cost_analysis()`` and the collective
+     bytes parsed from the optimized per-device HLO;
+  5. writes ``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Sharding mismatches, OOM-at-compile or unsupported collectives fail the
+cell -- they are bugs in the system, not in the driver.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only | --single-pod-only]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, cells, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_context, make_production_mesh
+from repro.models import model, partitioning
+from repro.models.parallel import ParallelContext
+from repro.optim import adamw
+from repro.train import train_loop
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def cell_config(arch: str, shape: ShapeConfig) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat=True)
+    return cfg
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind != "train":
+        return 1
+    return 8 if cfg.d_model >= 2048 else 1
+
+
+def input_specs(arch: str, shape_name: str, ctx: ParallelContext):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    shape = SHAPES[shape_name]
+    cfg = cell_config(arch, shape)
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt=i32):
+        return jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s)), "labels": sds((b, s))}
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s))}
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        return {"batch": batch}
+    # decode: one new token against a cache of seq_len.
+    cache = jax.eval_shape(
+        lambda: model.init_decode_cache(None, cfg, b, s, ctx)
+    )
+    return {
+        "tokens": sds((b,)),
+        "cache": cache,
+        "pos": sds((), i32),
+    }
+
+
+def _shardings(tree_specs, mesh):
+    return partitioning.to_shardings(tree_specs, mesh)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, sync_variant=False):
+    shape = SHAPES[shape_name]
+    cfg = cell_config(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_context(mesh, cfg.n_routed_experts if cfg.moe else 0)
+
+    abs_params = jax.eval_shape(lambda k: model.init_params(k, cfg), jax.random.key(0))
+    p_specs = partitioning.param_specs(abs_params, cfg, ctx)
+
+    specs = input_specs(arch, shape_name, ctx)
+
+    if shape.kind == "train":
+        opt_cfg = adamw.OptimConfig()
+        mb = microbatches_for(cfg, shape)
+        step = train_loop.make_train_step(
+            cfg, opt_cfg, ctx, sync=sync_variant, microbatches=mb
+        )
+        abs_state = jax.eval_shape(
+            lambda k: train_loop.init_state(k, cfg, ctx), jax.random.key(0)
+        )
+        state_specs = train_loop.TrainState(
+            params=p_specs,
+            opt=adamw.OptState(
+                m=partitioning.zero1_specs(p_specs, abs_params, ctx),
+                v=partitioning.zero1_specs(p_specs, abs_params, ctx),
+                step=jax.sharding.PartitionSpec(),
+            ),
+            balancer=(
+                partitioning.balancer_specs(abs_state.balancer, ctx)
+                if abs_state.balancer is not None
+                else None
+            ),
+            step=jax.sharding.PartitionSpec(),
+        )
+        batch_specs = partitioning.batch_specs(specs["batch"], ctx)
+        with mesh:
+            lowered = jax.jit(
+                step,
+                in_shardings=(
+                    _shardings(state_specs, mesh),
+                    _shardings(batch_specs, mesh),
+                ),
+                out_shardings=(_shardings(state_specs, mesh), None),
+            ).lower(abs_state, specs["batch"])
+        scan_trips = [model.num_scanned_layers(cfg)]
+        if mb > 1:
+            scan_trips = [mb, model.num_scanned_layers(cfg)]
+    elif shape.kind == "prefill":
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cfg, ctx, cache_len=shape.seq_len)
+
+        batch_specs = partitioning.batch_specs(specs["batch"], ctx)
+        with mesh:
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(
+                    _shardings(p_specs, mesh),
+                    _shardings(batch_specs, mesh),
+                ),
+            ).lower(abs_params, specs["batch"])
+        scan_trips = [model.num_scanned_layers(cfg)]
+    else:  # decode
+
+        def decode_fn(params, tokens, cache, pos):
+            return model.decode_step(params, tokens, cache, pos, cfg, ctx)
+
+        cache_specs = partitioning.cache_specs(specs["cache"], ctx)
+        tok_specs = partitioning.batch_specs(specs["tokens"], ctx)
+        with mesh:
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(
+                    _shardings(p_specs, mesh),
+                    _shardings(tok_specs, mesh),
+                    _shardings(cache_specs, mesh),
+                    jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                ),
+                out_shardings=(None, _shardings(cache_specs, mesh)),
+            ).lower(specs_params_placeholder(abs_params), specs["tokens"], specs["cache"], specs["pos"])
+        scan_trips = [model.num_scanned_layers(cfg)]
+    return lowered, mesh, cfg, scan_trips
+
+
+def specs_params_placeholder(abs_params):
+    return abs_params
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             sync_variant: bool = False, force: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + ("__sync" if sync_variant else "")
+    out_path = out_dir / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "sync_variant": sync_variant, "ok": False,
+    }
+    try:
+        lowered, mesh, cfg, scan_trips = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, sync_variant=sync_variant
+        )
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        analysis = hlo_analysis.analyze_module(hlo, scan_trips)
+        coll = analysis["collectives"]
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            memory={
+                k: int(getattr(mem, k, 0) or 0)
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+            },
+            cost={
+                k: float(cost.get(k, 0.0))
+                for k in ("flops", "bytes accessed")
+                if isinstance(cost, dict)
+            },
+            hlo_flops=analysis["flops"],
+            hlo_bytes=analysis["bytes"],
+            hlo_bytes_hbm=analysis["bytes_hbm"],
+            hlo_bytes_hbm_v2=analysis["bytes_hbm_v2"],
+            collectives=coll,
+            scan_trips=scan_trips,
+            num_devices=int(np.prod(list(mesh.shape.values()))),
+            hlo_text_len=len(hlo),
+        )
+        print(
+            f"[dryrun] OK  {tag}  lower={rec['lower_s']}s compile={rec['compile_s']}s "
+            f"flops={rec['cost'].get('flops', 0):.3e}"
+        )
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] FAIL {tag}: {rec['error'][:200]}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--sync-variant", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    todo = []
+    if args.all:
+        for arch, shape_name, skip in cells():
+            todo.append((arch, shape_name))
+    else:
+        todo.append((args.arch, args.shape))
+
+    n_ok = n_fail = 0
+    for arch, shape_name in todo:
+        for mp in meshes:
+            rec = run_cell(
+                arch, shape_name, multi_pod=mp, out_dir=out_dir,
+                force=args.force, sync_variant=args.sync_variant,
+            )
+            n_ok += int(rec["ok"])
+            n_fail += int(not rec["ok"])
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,118 @@
+"""Where do the roofline bytes come from?  Per-computation HBM breakdown.
+
+The perf loop's "profiler": re-lowers one cell, applies the same
+slicing-aware charging as ``hlo_analysis.analyze_module``, and attributes
+the result to (computation, loop-multiplier) pairs and to the largest
+individual instructions -- enough to decide *what* to optimise next
+without a real-TPU trace (EXPERIMENTS.md Section Perf methodology).
+
+Usage:
+  python -m repro.launch.hlo_breakdown --arch rwkv6-1.6b --shape train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+
+def charged_bytes(ln, op, res, ops, shapes, comps, hlo_analysis):
+    """Slicing-aware HBM charge for one instruction (mirrors analyze_module)."""
+    res_b = hlo_analysis._shapes_bytes(shapes.get(res, []))
+    if op == "fusion":
+        fc = hlo_analysis._FUSION_CALLS_RE.search(ln)
+        body = comps.get(fc.group(1)) if fc else None
+        if body is not None:
+            ib, ob, _ib2, _ob2 = hlo_analysis._fusion_bytes(body, shapes)
+            return ib + (ob if ob is not None else res_b)
+    if op in hlo_analysis._SLICING_OPS or op == "slice":
+        return 2 * res_b
+    if op == "dynamic-update-slice" and len(ops) > 1:
+        return 2 * hlo_analysis._shapes_bytes(shapes.get(ops[1], []))
+    return res_b + sum(
+        hlo_analysis._shapes_bytes(shapes.get(o, [])) for o in ops
+    )
+
+
+def breakdown(hlo: str, scan_trips, top_comps=6, top_instr=6):
+    from repro.launch import hlo_analysis
+
+    comps, entry = hlo_analysis._split_computations(hlo)
+    shapes = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = hlo_analysis._DEF_RE.match(ln)
+            if m:
+                shapes[m.group(1)] = hlo_analysis._parse_shapes(m.group(2))
+
+    per = {}
+    for name, lines in comps.items():
+        rows, ch = [], []
+        for ln in lines:
+            m = hlo_analysis._DEF_RE.match(ln)
+            if not m:
+                continue
+            res, _ts, op = m.groups()
+            if op == "while":
+                wb = hlo_analysis._WHILE_BODY_RE.search(ln)
+                if wb:
+                    tm = hlo_analysis._TRIP_RE.search(ln)
+                    ch.append((int(tm.group(1)) if tm else None, wb.group(1)))
+                continue
+            if op in hlo_analysis._SKIP_BYTES_OPS or op not in hlo_analysis._HBM_OPS:
+                continue
+            ops = hlo_analysis._operands(ln, m.end() - 1)
+            b = charged_bytes(ln, op, res, ops, shapes, comps, hlo_analysis)
+            rows.append((b, op, ln.strip()))
+        per[name] = (rows, ch)
+
+    agg = defaultdict(float)
+    detail = defaultdict(list)
+
+    def visit(name, depth, mult, seen):
+        if name not in per or name in seen:
+            return
+        rows, ch = per[name]
+        for b, op, ln in rows:
+            agg[(name, mult)] += b * mult
+            detail[(name, mult)].append((b * mult, op, ln))
+        for trip, c in ch:
+            t = trip if trip is not None else (
+                scan_trips[depth] if depth < len(scan_trips) else 1
+            )
+            visit(c, depth + 1, mult * t, seen | {name})
+
+    visit(entry, 0, 1.0, frozenset())
+    total = sum(agg.values())
+    out = [f"total bytes_hbm: {total:.3e}  ({total / 819e9:.2f}s at 819 GB/s)"]
+    for (n, m), v in sorted(agg.items(), key=lambda kv: -kv[1])[:top_comps]:
+        out.append(f"\n== {n}  (mult={m:.0f}): {v:.3e}  [{v/total:.0%}]")
+        for b, op, ln in sorted(detail[(n, m)], reverse=True)[:top_instr]:
+            out.append(f"   {b:.2e} {op:10s} {ln[:120]}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top-comps", type=int, default=6)
+    ap.add_argument("--top-instr", type=int, default=6)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+
+    lowered, _mesh, _cfg, scan_trips = dryrun.lower_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod
+    )
+    hlo = lowered.compile().as_text()
+    print(breakdown(hlo, scan_trips, args.top_comps, args.top_instr))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Analytic model statistics via abstract evaluation (no allocation)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter tree of ShapeDtypeStructs (jax.eval_shape, no memory)."""
+    return jax.eval_shape(
+        lambda k: model.init_params(k, cfg), jax.random.key(0)
+    )
+
+
+def count_params(cfg: ModelConfig) -> int:
+    tree = abstract_params(cfg)
+    return int(
+        sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: top-k routed + shared + dense)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    e, k = cfg.n_routed_experts, cfg.moe_top_k
+    l_moe = cfg.num_layers - cfg.first_dense_layers
+    per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+    routed_total = l_moe * e * per_expert
+    routed_active = l_moe * k * per_expert
+    return total - routed_total + routed_active

@@ -1,0 +1,191 @@
+"""Grouped-query attention with the zoo's option set.
+
+Options (all driven by ModelConfig): GQA/MHA, QKV bias (qwen1.5), per-head
+qk-RMSNorm (qwen3 / chameleon), logit soft-capping and local/global
+alternation (gemma2), RoPE with configurable theta, cross-attention
+(whisper decoder).
+
+Call modes:
+* full-sequence (train / prefill) -- optionally returns a populated KV
+  cache for subsequent decode;
+* single-token decode against a preallocated KV cache (written in place at
+  ``pos`` via dynamic_update_slice).
+
+The sliding window is a *traced* scalar so gemma2's alternating pattern and
+hymba's mostly-local pattern run inside one scanned layer body (window is a
+per-layer scan input; full attention uses window >= seq_len).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, flash
+
+
+def init_attention(kg: common.KeyGen, cfg: ModelConfig):
+    d = cfg.d_model
+    dh = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    pdt = common.dtype_of(cfg.param_dtype)
+    p = {
+        "wq": common.dense_init(kg(), (d, h * dh), pdt),
+        "wk": common.dense_init(kg(), (d, kvh * dh), pdt),
+        "wv": common.dense_init(kg(), (d, kvh * dh), pdt),
+        "wo": common.dense_init(kg(), (h * dh, d), pdt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), pdt)
+        p["bk"] = jnp.zeros((kvh * dh,), pdt)
+        p["bv"] = jnp.zeros((kvh * dh,), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), pdt)
+        p["k_norm"] = jnp.ones((dh,), pdt)
+    return p
+
+
+def _project_qkv(p, x, kv_src, cfg: ModelConfig):
+    dh = cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(*x.shape[:-1], h, dh)
+    k = k.reshape(*kv_src.shape[:-1], kvh, dh)
+    v = v.reshape(*kv_src.shape[:-1], kvh, dh)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,S,H,Dh)  k,v: (B,T,Kv,Dh)  mask: broadcast to (B,1,1,S,T)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = cfg.query_scale or (1.0 / dh**0.5)
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    )
+    scores = scores * scale
+    if cfg.attn_softcap:
+        scores = common.softcap(scores, cfg.attn_softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h * dh)
+
+
+def attention_full(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    window,
+    kv_src=None,
+    causal: bool = True,
+    use_rope: bool = True,
+    positions=None,
+    return_cache: bool = False,
+    cache_len: int = 0,
+):
+    """Full-sequence attention.  ``kv_src`` enables cross-attention."""
+    b, s, _ = x.shape
+    self_attn = kv_src is None
+    kv_src = x if self_attn else kv_src
+    t = kv_src.shape[1]
+    q, k, v = _project_qkv(p, x, kv_src, cfg)
+
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if use_rope and self_attn:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    # Attention path selection (EXPERIMENTS.md Section Perf): on TPU the
+    # Pallas flash kernel keeps score tiles in VMEM; the pure-JAX blocked
+    # form only pays off for wide-head MLA (it runs in mla_full), so dense
+    # GQA defaults to the one-shot SDPA (kv_block >= T).
+    scale = cfg.query_scale or (1.0 / q.shape[-1] ** 0.5)
+    static_window = window if isinstance(window, int) or window is None else False
+    if (
+        cfg.use_pallas_attention
+        and static_window is not False  # traced window -> jnp path
+        and not (t % 128 or q.shape[1] % 128)
+    ):
+        from repro.kernels import ops as kernel_ops
+
+        out = kernel_ops.flash_attention(
+            q, k, v, scale=scale, causal=causal,
+            window=static_window if causal else None,
+            softcap=cfg.attn_softcap,
+        ).reshape(b, s, -1) @ p["wo"]
+    else:
+        out = flash.flash_sdpa(
+            q, k, v, scale=scale, q_positions=positions, causal=causal,
+            window=window if causal else None, softcap=cfg.attn_softcap,
+            kv_block=t,
+        ) @ p["wo"]
+    if not return_cache:
+        return out, None
+    # Preallocate a cache of cache_len and write the prefix.
+    kvh, dh = k.shape[2], k.shape[3]
+    kc = jnp.zeros((b, cache_len, kvh, dh), k.dtype)
+    vc = jnp.zeros((b, cache_len, kvh, dh), v.dtype)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+    return out, {"k": kc, "v": vc}
+
+
+def attention_decode(p, x, cache, pos, cfg: ModelConfig, *, window, use_rope=True):
+    """One-token decode.  x: (B,1,D); cache k/v: (B,S,Kv,Dh); pos: scalar."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, x, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if use_rope:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    t = kc.shape[1]
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, :]
+    mask = (kpos <= pos) & (pos - kpos < window)
+    mask = jnp.broadcast_to(mask, (b, 1, t))[:, None, None, :, :]
+    out = _sdpa(q, kc, vc, mask, cfg) @ p["wo"]
+    return out, {"k": kc, "v": vc}
+
+
+def cross_attention_decode(p, x, cross_cache, cfg: ModelConfig):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, 1, cfg.num_heads, dh)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k, v = cross_cache["k"], cross_cache["v"]
+    t = k.shape[1]
+    mask = jnp.ones((b, 1, 1, 1, t), bool)
+    return _sdpa(q, k, v, mask, cfg) @ p["wo"]
+
+
+def precompute_cross_kv(p, enc_out, cfg: ModelConfig):
+    """Project encoder output to K/V once (whisper decode)."""
+    dh = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+    k = enc_out @ p["wk"]
+    v = enc_out @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(*enc_out.shape[:-1], kvh, dh)
+    v = v.reshape(*enc_out.shape[:-1], kvh, dh)
+    if cfg.qk_norm:
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}

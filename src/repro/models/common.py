@@ -1,0 +1,183 @@
+"""Shared model building blocks: norms, RoPE, initialisers, dtype policy.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+layer stacks are stored with a leading layer axis and consumed by
+``lax.scan`` so the compiled HLO stays small regardless of depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[
+        name
+    ]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(key, -2, 2, shape)).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Sequential key splitter for building parameter trees."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6, *, offset: float = 0.0):
+    """RMSNorm in f32 accumulation.  ``offset=1.0`` gives the gemma-style
+    ``(1 + scale)`` parameterisation."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate pairs (x[..., ::2], x[..., 1::2]) -- interleaved convention.
+
+    x: (..., S, H, Dh); positions: broadcastable to (..., S).
+    """
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(dh, theta), jnp.float32)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> np.ndarray:
+    """Whisper-style sinusoidal embeddings (length, dim)."""
+    log_timescale = np.log(10_000.0) / (dim // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(dim // 2))
+    scaled = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(scaled), np.cos(scaled)], axis=1).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# activations
+# --------------------------------------------------------------------------
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _barrier_for(dtype_name: str):
+    @jax.custom_vjp
+    def barrier(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, ct):
+        return (ct.astype(dtype_name),)
+
+    barrier.defvjp(fwd, bwd)
+    return barrier
+
+
+def grad_dtype_barrier(x):
+    """Identity forward; backward casts the cotangent to ``x.dtype``.
+
+    Placed at block boundaries so activation gradients flow in the compute
+    dtype (bf16) instead of the f32 they inherit from the loss head --
+    halving every backward collective/DUS payload and letting the stacked
+    per-layer gradient updates alias in place (no bf16<->f32 convert
+    wrappers around the scan's dynamic-update-slice).  Standard
+    mixed-precision practice: parameters and the cross-microbatch
+    accumulator stay f32-mastered in the optimizer.
+    """
+    return _barrier_for(str(x.dtype))(x)
+
+
+def stack_layers(per_layer_params: list):
+    """Stack a list of identical pytrees along a new leading layer axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *per_layer_params)
+
+
+def cross_entropy(logits, labels, final_cap: float = 0.0):
+    """Token-mean cross entropy in f32; labels < 0 are masked out."""
+    logits = logits.astype(jnp.float32)
+    if final_cap:
+        logits = softcap(logits, final_cap)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def param_count(params) -> int:
+    return int(
+        sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    )

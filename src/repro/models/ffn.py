@@ -1,0 +1,229 @@
+"""Feed-forward blocks: dense (GLU / plain) and expert-parallel MoE.
+
+The MoE layer is the framework's manual-collective region.  Einsum
+(GShard-style) dispatch wastes O(T * S * k) memory or O(T * E * C * D)
+FLOPs at deepseek scale, so we do what production EP systems do, expressed
+in jax-native constructs (DESIGN.md Section 2.3):
+
+  route locally -> scatter tokens into per-expert capacity buffers ->
+  all_to_all over the EP axes -> expert matmuls -> all_to_all back ->
+  weighted gather-combine.
+
+Expert-parallel axis selection (models/parallel.py):
+* E divisible by the full (data x model) product: experts sharded over all
+  chips (deepseek-v3, 256 experts / 256 chips -> 1 per chip);
+* otherwise experts shard the TP axis and their weights are FSDP-sharded
+  over 'data' with an explicit per-layer all-gather (deepseek-v2,
+  160 = 10 x 16).
+
+Routing goes through the CARE-biased top-k router (kernels/ref.py oracle by
+default; the Pallas kernel on TPU via ``use_pallas_router``).  Counts are
+returned *per dispatcher* (no implicit all-reduce) so the balancer's sparse
+sync -- the paper's contribution -- is the only place global counts are
+ever materialised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import common
+from repro.models.parallel import ParallelContext
+
+def init_dense_ffn(kg: common.KeyGen, cfg: ModelConfig, d_ff: int | None = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    pdt = common.dtype_of(cfg.param_dtype)
+    out_scale = 0.02 / max(cfg.num_layers, 1) ** 0.5
+    p = {
+        "w_in": common.dense_init(kg(), (d, f), pdt),
+        "w_out": common.dense_init(kg(), (f, d), pdt, scale=out_scale),
+    }
+    if cfg.glu:
+        p["w_gate"] = common.dense_init(kg(), (d, f), pdt)
+    return p
+
+
+def dense_ffn(p, x, cfg: ModelConfig):
+    act = common.activation(cfg.act)
+    h = act(x @ p["w_in"])
+    if cfg.glu:
+        h = h * (x @ p["w_gate"])
+    return h @ p["w_out"]
+
+
+# --------------------------------------------------------------------------
+# MoE
+# --------------------------------------------------------------------------
+
+
+def init_moe_ffn(kg: common.KeyGen, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.n_routed_experts, cfg.moe_d_ff
+    pdt = common.dtype_of(cfg.param_dtype)
+    out_scale = 0.02 / max(cfg.num_layers, 1) ** 0.5
+    p = {
+        "gate": common.dense_init(kg(), (d, e), jnp.float32),
+        "w_in": common.dense_init(kg(), (e, d, f), pdt),
+        "w_gate_h": common.dense_init(kg(), (e, d, f), pdt),
+        "w_out": common.dense_init(kg(), (e, f, d), pdt, scale=out_scale),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_dense_ffn(kg, cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _route(logits, bias, cfg: ModelConfig):
+    if cfg.use_pallas_router:
+        return kernel_ops.moe_route(logits, bias, cfg.moe_top_k, gate_fn=cfg.gate_fn)
+    return kernel_ref.moe_route_ref(logits, bias, cfg.moe_top_k, cfg.gate_fn)
+
+
+def _capacity(t_loc: int, k: int, e: int, factor: float) -> int:
+    cap = int(max(4, -(-t_loc * k * factor // e)))
+    return min(cap, t_loc * k)
+
+
+def _moe_local(xt, bias, p, cfg: ModelConfig, ctx: ParallelContext | None = None):
+    """Per-device MoE body.  xt: (t_loc, D) local tokens.
+
+    Expert weights in ``p`` are already *local* shards: (E_loc, D, F) under
+    pure EP sharding, or (E_loc, D/fsdp, F) under EP+FSDP (gathered here).
+    """
+    t_loc, d = xt.shape
+    e, k = cfg.n_routed_experts, cfg.moe_top_k
+    cdt = common.dtype_of(cfg.compute_dtype)
+
+    w_in_l, w_gate_l, w_out_l = p["w_in"], p["w_gate_h"], p["w_out"]
+    if ctx is not None and ctx.fsdp_axis is not None:
+        # Expert weights are FSDP-sharded on the D/F dim: gather per layer.
+        w_in_l = jax.lax.all_gather(w_in_l, ctx.fsdp_axis, axis=1, tiled=True)
+        w_gate_l = jax.lax.all_gather(w_gate_l, ctx.fsdp_axis, axis=1, tiled=True)
+        w_out_l = jax.lax.all_gather(w_out_l, ctx.fsdp_axis, axis=2, tiled=True)
+
+    logits = xt.astype(jnp.float32) @ p["gate"]
+    idx, weights, counts = _route(logits, bias, cfg)  # (t,k),(t,k),(E,)
+
+    cap = _capacity(t_loc, k, e, cfg.moe_capacity_factor)
+    # Position of each (token, slot) within its expert's capacity buffer.
+    flat_e = idx.reshape(-1)  # (t*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (t*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=1)  # (t*k,)
+    keep = pos < cap
+    lin = jnp.where(keep, flat_e * cap + pos, e * cap)  # overflow -> sink row
+
+    buf = jnp.zeros((e * cap + 1, d), cdt)
+    tok_rows = jnp.repeat(xt.astype(cdt), k, axis=0)  # (t*k, D)
+    buf = buf.at[lin].add(tok_rows)
+    buf = buf[: e * cap]
+
+    ep = ctx.ep_size if ctx is not None else 1
+    e_loc = e // ep
+    if ep > 1:
+        send = buf.reshape(ep, e_loc * cap, d)
+        recv = jax.lax.all_to_all(
+            send, ctx.ep_axes, split_axis=0, concat_axis=0, tiled=False
+        )  # (EP, E_loc*cap, D): slice [j] came from device j
+        work = recv.reshape(ep, e_loc, cap, d).transpose(1, 0, 2, 3)
+        work = work.reshape(e_loc, ep * cap, d)
+    else:
+        work = buf.reshape(e, cap, d)
+
+    act = common.activation(cfg.act)
+    h = act(jnp.einsum("end,edf->enf", work, w_in_l))
+    h = h * jnp.einsum("end,edf->enf", work, w_gate_l)
+    out = jnp.einsum("enf,efd->end", h, w_out_l)
+
+    if ep > 1:
+        out = out.reshape(e_loc, ep, cap, d).transpose(1, 0, 2, 3)
+        out = out.reshape(ep, e_loc * cap, d)
+        back = jax.lax.all_to_all(
+            out, ctx.ep_axes, split_axis=0, concat_axis=0, tiled=False
+        )
+        back = back.reshape(e * cap, d)
+    else:
+        back = out.reshape(e * cap, d)
+
+    back = jnp.concatenate([back, jnp.zeros((1, d), back.dtype)], axis=0)
+    picked = back[lin]  # (t*k, D); sink row is zero
+    w_flat = (weights.reshape(-1, 1) * keep[:, None]).astype(cdt)
+    y = jnp.sum((picked * w_flat).reshape(t_loc, k, d), axis=1)
+    return y, counts.astype(jnp.float32)
+
+
+def moe_ffn(p, x, bias, cfg: ModelConfig, ctx: ParallelContext | None = None):
+    """Expert-parallel MoE forward.
+
+    Args:
+      p: layer params.  x: (B, S, D).  bias: per-dispatcher CARE selection
+        bias -- (E,) when ctx is None, else (DP, TP, E) sharded one row per
+        dispatcher.  ctx: parallel context (None = single device).
+
+    Returns:
+      (y, counts): y (B, S, D); counts -- (E,) local counts when ctx is
+      None, else (DP, TP, E) per-dispatcher counts (no cross-device
+      reduction here; the CARE balancer syncs sparsely).
+    """
+    b, s, d = x.shape
+
+    manual = (
+        ctx is not None
+        and s % ctx.tp_size == 0
+        and b % ctx.dp_size == 0
+        and ctx.ep_size > 1
+    )
+    if not manual:
+        # Single-device reference path, and the decode path (tokens too few
+        # to shard over TP): GSPMD-auto on small global arrays.
+        bias_flat = bias.reshape(-1, cfg.n_routed_experts).mean(axis=0)
+        y, counts = _moe_local(x.reshape(b * s, d), bias_flat, p, cfg)
+        y = y.reshape(b, s, d)
+        if cfg.n_shared_experts:
+            y = y + dense_ffn(p["shared"], x, cfg)
+        if ctx is not None:
+            counts = jnp.broadcast_to(
+                counts[None, None, :] / (ctx.dp_size * ctx.tp_size),
+                (ctx.dp_size, ctx.tp_size, cfg.n_routed_experts),
+            )
+        return y, counts
+
+    P = jax.sharding.PartitionSpec
+    dp, tp = ctx.dp_axes, ctx.tp_axis
+    e = cfg.n_routed_experts
+
+    def body(x_loc, bias_loc, gate, w_in, w_gate_h, w_out):
+        bl, sl, _ = x_loc.shape
+        pp = {"gate": gate, "w_in": w_in, "w_gate_h": w_gate_h, "w_out": w_out}
+        y, counts = _moe_local(
+            x_loc.reshape(bl * sl, d), bias_loc.reshape(-1), pp, cfg, ctx
+        )
+        return y.reshape(bl, sl, d), counts.reshape(1, 1, e)
+
+    if ctx.fsdp_axis is not None:
+        w_spec = P(tp, ctx.fsdp_axis, None)
+        w_out_spec = P(tp, None, ctx.fsdp_axis)
+    else:
+        w_spec = P(ctx.ep_axes, None, None)
+        w_out_spec = w_spec
+
+    y, counts = jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(
+            P(dp, tp, None),  # x: batch over dp, seq over tp
+            P(dp, tp, None),  # bias per dispatcher
+            P(None, None),  # gate replicated
+            w_spec,
+            w_spec,
+            w_out_spec,
+        ),
+        out_specs=(P(dp, tp, None), P(dp, tp, None)),
+        check_vma=False,
+    )(x, bias, p["gate"], p["w_in"], p["w_gate_h"], p["w_out"])
+
+    if cfg.n_shared_experts:
+        y = y + dense_ffn(p["shared"], x, cfg)
+    return y, counts

@@ -1,0 +1,136 @@
+"""Blocked (flash-style) attention in pure JAX: lax.scan over KV blocks
+with an online softmax, remat'd per block.
+
+Why this exists: the naive softmax(QK^T)V materialises the (B, H, S, T)
+score tensor through every op of the softmax chain, forward and backward
+-- at 4k train / 32k prefill shapes that is the dominant HBM term of every
+attention arch in the roofline (EXPERIMENTS.md Section Perf).  The blocked
+form keeps only (B, H, S, KV_BLOCK) tiles live, and ``jax.checkpoint`` on
+the block body makes the backward recompute tiles instead of saving them.
+
+This is also the reference structure for the Pallas TPU kernel
+(``kernels/flash_attn.py``): same tiling, same online-softmax carry; the
+kernel keeps the tiles in VMEM so the score tensor never touches HBM at
+all.  The pure-JAX version here is what the multi-pod dry-run lowers (the
+CPU backend cannot compile Mosaic kernels).
+
+Semantics match ``attention._sdpa`` exactly: scale -> optional softcap ->
+causal/window mask -> softmax in f32 -> weighted sum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_BLOCK = 1024
+_NEG = -1e30
+
+
+def flash_sdpa(
+    q,
+    k,
+    v,
+    *,
+    scale: float,
+    q_positions=None,
+    causal: bool = True,
+    window=None,
+    softcap: float = 0.0,
+    kv_block: int | None = None,
+):
+    """Blocked attention.  q: (B,S,H,Dh); k,v: (B,T,KVH,Dh[v]).
+
+    ``window`` is a (possibly traced) scalar: only keys with
+    ``q_pos - k_pos < window`` attend (pass None or >= T for global).
+    ``kv_block=None`` picks fewer, larger blocks: lax.scan saves its carry
+    (acc, m, l) per block for AD, so block count is pure overhead there;
+    the per-op score-chain traffic is block-count invariant.
+    Returns (B, S, H*Dv).
+    """
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // kvh
+    if kv_block is None:
+        kv_block = min(max(t // 2, KV_BLOCK), 4096)
+    if t % kv_block or t <= kv_block:
+        return _dense_sdpa(
+            q, k, v, scale=scale, q_positions=q_positions, causal=causal,
+            window=window, softcap=softcap,
+        )
+    nb = t // kv_block
+
+    if q_positions is None:
+        q_positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    qpos = q_positions[:, :, None, None, None]  # (B,S,1,1,1)
+    qg = q.reshape(b, s, kvh, g, dh)
+
+    kb = k.reshape(b, nb, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, kv_block, kvh, dv).transpose(1, 0, 2, 3, 4)
+    koff = jnp.arange(nb, dtype=jnp.int32) * kv_block
+
+    def block(carry, xs):
+        acc, m, l = carry  # (B,S,KVH,G,Dv) f32, (B,S,KVH,G) f32 x2
+        k_b, v_b, off = xs
+        sc = jnp.einsum(
+            "bskgd,btkd->bskgt", qg, k_b, preferred_element_type=jnp.float32
+        ) * scale
+        if softcap:
+            sc = softcap * jnp.tanh(sc / softcap)
+        kpos = (off + jnp.arange(kv_block, dtype=jnp.int32))[
+            None, None, None, None, :
+        ]
+        if causal:
+            ok = kpos <= qpos
+            if window is not None:
+                ok = ok & (qpos - kpos < window)
+        else:
+            ok = jnp.ones_like(kpos, bool)
+        sc = jnp.where(ok, sc, _NEG)
+
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", p.astype(v_b.dtype), v_b)
+        acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (acc, m_new, l), None
+
+    init = (
+        jnp.zeros((b, s, kvh, g, dv), jnp.float32),
+        jnp.full((b, s, kvh, g), _NEG, jnp.float32),
+        jnp.zeros((b, s, kvh, g), jnp.float32),
+    )
+    (acc, _m, l), _ = jax.lax.scan(
+        jax.checkpoint(block), init, (kb, vb, koff)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype).reshape(b, s, h * dv)
+
+
+def _dense_sdpa(
+    q, k, v, *, scale, q_positions, causal, window, softcap
+):
+    """Unblocked fallback (short T); same semantics."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    sc = jnp.einsum(
+        "bskgd,btkd->bskgt", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap:
+        sc = softcap * jnp.tanh(sc / softcap)
+    if q_positions is None:
+        q_positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    qpos = q_positions[:, :, None, None, None]
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, None, :]
+    if causal:
+        ok = kpos <= qpos
+        if window is not None:
+            ok = ok & (qpos - kpos < window)
+        sc = jnp.where(ok, sc, _NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p.astype(v.dtype), v)
+    return out.astype(q.dtype).reshape(b, s, h * dv)

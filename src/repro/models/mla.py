@@ -1,0 +1,165 @@
+"""Multi-head Latent Attention (DeepSeek v2/v3).
+
+Queries and keys/values are projected through low-rank latents; the KV
+cache stores only the compressed latent (kv_lora_rank) plus a single shared
+RoPE key head -- 576 dims/token for v3 instead of ~32K for full MHA.
+
+Two execution paths:
+* ``mla_full``  -- expanded computation for train / prefill (materialises
+  per-head K/V once over the whole sequence, MXU-friendly).
+* ``mla_decode`` -- *absorbed* computation: W_uk is folded into the query
+  and W_uv into the output so attention runs MQA-style against the
+  compressed cache.  This is the TPU-native adaptation of DeepSeek's
+  inference trick: per decoded token the cache traffic is
+  O(S * (R + Dr)) instead of O(S * H * Dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, flash, parallel
+
+
+def init_mla(kg: common.KeyGen, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    pdt = common.dtype_of(cfg.param_dtype)
+    p = {
+        "w_dkv": common.dense_init(kg(), (d, r + dr), pdt),
+        "kv_norm": jnp.ones((r,), pdt),
+        "w_uk": common.dense_init(kg(), (r, h * dn), pdt),
+        "w_uv": common.dense_init(kg(), (r, h * dv), pdt),
+        "wo": common.dense_init(kg(), (h * dv, d), pdt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = common.dense_init(kg(), (d, cfg.q_lora_rank), pdt)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), pdt)
+        p["w_uq"] = common.dense_init(kg(), (cfg.q_lora_rank, h * (dn + dr)), pdt)
+    else:
+        p["wq"] = common.dense_init(kg(), (d, h * (dn + dr)), pdt)
+    return p
+
+
+def _queries(p, x, cfg: ModelConfig):
+    h = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = common.rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+        q = cq @ p["w_uq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(*x.shape[:-1], h, dn + dr)
+    return q[..., :dn], q[..., dn:]  # (B,S,H,dn), (B,S,H,dr)
+
+
+def _latents(p, x, cfg: ModelConfig, positions):
+    """Compressed kv latent and rotated shared rope key."""
+    r = cfg.kv_lora_rank
+    ckv_full = x @ p["w_dkv"]
+    ckv = common.rms_norm(ckv_full[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv_full[..., r:][..., None, :]  # (B,S,1,dr) shared head
+    k_rope = common.apply_rope(k_rope, positions, cfg.rope_theta)
+    return ckv, k_rope[..., 0, :]  # (B,S,R), (B,S,dr)
+
+
+def mla_full(
+    p,
+    x,
+    cfg: ModelConfig,
+    *,
+    positions=None,
+    return_cache: bool = False,
+    cache_len: int = 0,
+    ctx=None,
+):
+    """Expanded MLA for train / prefill (causal, global attention).
+
+    The expanded per-head K (nope + shared rope head) and V are kept
+    *head-sharded* over TP (w_uq/w_uk/w_uv are column-sharded, so they are
+    born that way; the hints stop GSPMD from resharding to sequence),
+    making attention fully local per head shard.  Scores run through the
+    blocked flash path so the (H, S, S) tensor is never materialised.
+    """
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    q_nope, q_rope = _queries(p, x, cfg)
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv, k_rope = _latents(p, x, cfg, positions)
+
+    k_nope = (ckv @ p["w_uk"]).reshape(b, s, h, dn)
+    v = (ckv @ p["w_uv"]).reshape(b, s, h, dv)
+
+    dp, tp = (ctx.dp_axes, ctx.tp_axis) if ctx is not None else (None, None)
+    shard = lambda a: parallel.hint(a, ctx, dp, None, tp, None)  # noqa: E731
+    q = shard(jnp.concatenate([q_nope, q_rope], axis=-1))
+    k = shard(
+        jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))],
+            axis=-1,
+        )
+    )
+    v = shard(v)
+
+    scale = 1.0 / (dn + dr) ** 0.5
+    out = flash.flash_sdpa(
+        q, k, v, scale=scale, q_positions=positions, causal=True
+    )
+    out = parallel.hint(out, ctx, dp, None, tp) @ p["wo"]
+    out = parallel.hint(out, ctx, dp, tp)  # reduce-scatter landing (SP)
+
+    if not return_cache:
+        return out, None
+    r = cfg.kv_lora_rank
+    ckv_c = jnp.zeros((b, cache_len, r), ckv.dtype)
+    kr_c = jnp.zeros((b, cache_len, dr), k_rope.dtype)
+    ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv, (0, 0, 0))
+    kr_c = jax.lax.dynamic_update_slice(kr_c, k_rope, (0, 0, 0))
+    return out, {"ckv": ckv_c, "k_rope": kr_c}
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed single-token decode against the compressed cache."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    q_nope, q_rope = _queries(p, x, cfg)  # (B,1,H,dn),(B,1,H,dr)
+    q_rope = common.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_t, kr_t = _latents(p, x, cfg, positions)  # (B,1,R),(B,1,dr)
+
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_t.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_t.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+
+    # Absorb W_uk into the query: q_eff[h] = W_uk[h] @ q_nope[h]  (R,)
+    w_uk = p["w_uk"].reshape(r, h, dn)
+    q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,1,H,R)
+
+    scale = 1.0 / (dn + dr) ** 0.5
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_eff, ckv, preferred_element_type=jnp.float32)
+        + jnp.einsum("bshd,btd->bhst", q_rope, k_rope, preferred_element_type=jnp.float32)
+    ) * scale
+    t = ckv.shape[1]
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, :]
+    scores = jnp.where(kpos <= pos, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bhst,btr->bshr", probs, ckv)  # (B,1,H,R)
+    w_uv = p["w_uv"].reshape(r, h, dv)
+    out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv).reshape(b, 1, h * dv)
+    out = out @ p["wo"]
+    return out, {"ckv": ckv, "k_rope": k_rope}

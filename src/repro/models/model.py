@@ -1,0 +1,455 @@
+"""Top-level model API: init / train loss / prefill / decode for all archs.
+
+Parameter tree layout::
+
+  embed        (V, D)
+  ln_in        rwkv pre-norm (ssm family)
+  head_layers  {"0": block, ...}    deepseek leading dense layers (unscanned)
+  layers       stacked block params (L_scan leading axis), lax.scan'd
+  enc_layers   whisper encoder stack
+  final_norm / enc_final_norm
+  lm_head      (D, V) unless tied
+  mtp          deepseek-v3 multi-token-prediction head
+
+Caches are dicts of stacked arrays (see family-specific builders below).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common, transformer as tfm
+from repro.models.parallel import ParallelContext
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def num_scanned_layers(cfg: ModelConfig) -> int:
+    return cfg.num_layers - (cfg.first_dense_layers if cfg.moe else 0)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    kg = common.KeyGen(key)
+    pdt = common.dtype_of(cfg.param_dtype)
+    params: dict[str, Any] = {
+        "embed": common.dense_init(kg(), (cfg.vocab_size, cfg.d_model), pdt),
+        "final_norm": tfm._norm_params(cfg, tfm._uses_layer_norm(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(kg(), (cfg.d_model, cfg.vocab_size), pdt)
+
+    fam = cfg.family
+    if fam == "ssm":
+        params["ln_in"] = tfm._norm_params(cfg, True)
+        blocks = [tfm.init_rwkv_block(kg, cfg) for _ in range(cfg.num_layers)]
+    elif fam == "hybrid":
+        blocks = [tfm.init_hymba_block(kg, cfg) for _ in range(cfg.num_layers)]
+    elif fam == "audio":
+        params["enc_layers"] = common.stack_layers(
+            [tfm.init_encoder_block(kg, cfg) for _ in range(cfg.encoder_layers)]
+        )
+        params["enc_final_norm"] = tfm._norm_params(cfg, True)
+        blocks = [tfm.init_decoder_block(kg, cfg) for _ in range(cfg.num_layers)]
+    else:  # dense / moe / vlm
+        if cfg.moe and cfg.first_dense_layers:
+            params["head_layers"] = {
+                str(i): tfm.init_lm_block(kg, cfg, moe_layer=False)
+                for i in range(cfg.first_dense_layers)
+            }
+        blocks = [
+            tfm.init_lm_block(kg, cfg, moe_layer=cfg.moe)
+            for _ in range(num_scanned_layers(cfg))
+        ]
+    params["layers"] = common.stack_layers(blocks)
+
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": common.dense_init(kg(), (2 * cfg.d_model, cfg.d_model), pdt),
+            "block": tfm.init_lm_block(kg, cfg, moe_layer=False),
+            "norm": tfm._norm_params(cfg, False),
+        }
+    return params
+
+
+# --------------------------------------------------------------------------
+# embedding / head
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    cdt = common.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cdt)
+    if cfg.family == "ssm":
+        x = tfm._norm(params["ln_in"], x, cfg)
+    return x
+
+
+def lm_head(params, x, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def _bias_zeros(cfg: ModelConfig, ctx: Optional[ParallelContext]):
+    l = num_scanned_layers(cfg)
+    e = max(cfg.n_routed_experts, 1)
+    if ctx is None:
+        return jnp.zeros((l, e), jnp.float32)
+    return jnp.zeros((l, ctx.dp_size, ctx.tp_size, e), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# forward stacks (train)
+# --------------------------------------------------------------------------
+
+
+def _windows(cfg: ModelConfig):
+    w = tfm.layer_windows(cfg)
+    if cfg.moe and cfg.first_dense_layers:
+        return w[cfg.first_dense_layers :]
+    return w
+
+
+def _run_train_stack(params, x, cfg: ModelConfig, ctx, bias):
+    fam = cfg.family
+    if fam == "ssm":
+
+        def body(p, h, _xs):
+            h, _ = tfm.rwkv_block(p, h, cfg, ctx=ctx)
+            return h, jnp.zeros((), jnp.float32)
+
+        x, _ = tfm.scan_stack(body, x, params["layers"], jnp.zeros((cfg.num_layers,)), cfg)
+        return x, None
+
+    if fam == "hybrid":
+        windows = jnp.asarray(tfm.layer_windows(cfg))
+
+        def body(p, h, w):
+            h, _ = tfm.hymba_block(p, h, cfg, window=w, mode="train")
+            return h, jnp.zeros((), jnp.float32)
+
+        x, _ = tfm.scan_stack(body, x, params["layers"], windows, cfg)
+        return x, None
+
+    if fam == "audio":
+        raise AssertionError("audio handled in train_loss")
+
+    # dense / moe / vlm
+    if cfg.moe and cfg.first_dense_layers:
+        for i in range(cfg.first_dense_layers):
+            x, _, _ = tfm.lm_block_full(
+                params["head_layers"][str(i)], x, cfg, ctx,
+                window=tfm.BIG_WINDOW, bias=None, moe_layer=False,
+            )
+    windows = jnp.asarray(_windows(cfg))
+    if bias is None:
+        bias = _bias_zeros(cfg, ctx)
+
+    def body(p, h, xs):
+        w, b = xs
+        h, _, counts = tfm.lm_block_full(
+            p, h, cfg, ctx, window=w, bias=b, moe_layer=cfg.moe
+        )
+        return h, counts
+
+    x, counts = tfm.scan_stack(body, x, params["layers"], (windows, bias), cfg)
+    return x, (counts if cfg.moe else None)
+
+
+def train_loss(params, batch, cfg: ModelConfig, ctx=None, bias=None):
+    """Returns (loss, aux) -- aux carries per-layer dispatch counts (MoE)."""
+    if cfg.family == "audio":
+        return _whisper_train_loss(params, batch, cfg)
+
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = embed_tokens(params, tokens, cfg)
+    x, counts = _run_train_stack(params, x, cfg, ctx, bias)
+    h_final = x
+    x = tfm._norm(params["final_norm"], x, cfg)
+    logits = lm_head(params, x, cfg)
+    loss = common.cross_entropy(logits, labels, cfg.final_softcap)
+    aux = {"counts": counts, "loss_main": loss}
+
+    if cfg.mtp:
+        mtp = params["mtp"]
+        nxt = embed_tokens(params, tokens, cfg)[:, 1:, :]
+        h = jnp.concatenate(
+            [common.rms_norm(h_final[:, :-1, :], mtp["norm"]["scale"], cfg.norm_eps), nxt],
+            axis=-1,
+        ) @ mtp["proj"]
+        h, _, _ = tfm.lm_block_full(
+            mtp["block"], h, cfg, ctx, window=tfm.BIG_WINDOW, bias=None, moe_layer=False
+        )
+        h = tfm._norm(params["final_norm"], h, cfg)
+        mtp_logits = lm_head(params, h, cfg)
+        mtp_loss = common.cross_entropy(mtp_logits, labels[:, 1:], cfg.final_softcap)
+        aux["loss_mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    return loss, aux
+
+
+def _whisper_encode(params, frames, cfg: ModelConfig):
+    cdt = common.dtype_of(cfg.compute_dtype)
+    s = frames.shape[1]
+    pos = jnp.asarray(common.sinusoidal_positions(s, cfg.d_model), cdt)
+    x = frames.astype(cdt) + pos[None]
+
+    def body(p, h, _xs):
+        return tfm.encoder_block(p, h, cfg), jnp.zeros((), jnp.float32)
+
+    x, _ = tfm.scan_stack(body, x, params["enc_layers"], jnp.zeros((cfg.encoder_layers,)), cfg)
+    return tfm._norm(params["enc_final_norm"], x, cfg)
+
+
+def _whisper_embed_dec(params, tokens, cfg: ModelConfig, pos_offset=0):
+    cdt = common.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    s = tokens.shape[1]
+    pos_tab = jnp.asarray(
+        common.sinusoidal_positions(pos_offset + s, cfg.d_model), cdt
+    )[pos_offset:]
+    return x + pos_tab[None]
+
+
+def _whisper_train_loss(params, batch, cfg: ModelConfig):
+    enc_out = _whisper_encode(params, batch["frames"], cfg)
+    x = _whisper_embed_dec(params, batch["tokens"], cfg)
+
+    def body(p, h, _xs):
+        h, _ = tfm.decoder_block(p, h, enc_out, cfg, mode="train")
+        return h, jnp.zeros((), jnp.float32)
+
+    x, _ = tfm.scan_stack(body, x, params["layers"], jnp.zeros((cfg.num_layers,)), cfg)
+    x = tfm._norm(params["final_norm"], x, cfg)
+    logits = lm_head(params, x, cfg)
+    loss = common.cross_entropy(logits, batch["labels"])
+    return loss, {"counts": None, "loss_main": loss}
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+
+def prefill(params, batch, cfg: ModelConfig, ctx=None, cache_len: int = 0, bias=None):
+    """Full-sequence forward building a decode cache.
+
+    Returns (last-token logits (B, V), cache).
+    """
+    cache_len = cache_len or batch["tokens"].shape[1]
+    fam = cfg.family
+
+    if fam == "audio":
+        enc_out = _whisper_encode(params, batch["frames"], cfg)
+        x = _whisper_embed_dec(params, batch["tokens"], cfg)
+
+        def body(p, h, _xs):
+            h, c = tfm.decoder_block(
+                p, h, enc_out, cfg, mode="prefill", cache_len=cache_len
+            )
+            return h, c
+
+        x, cache = tfm.scan_stack(
+            body, x, params["layers"], jnp.zeros((cfg.num_layers,)), cfg
+        )
+        cache = {"scan": cache}
+    elif fam == "ssm":
+        x = embed_tokens(params, batch["tokens"], cfg)
+
+        def body(p, h, _xs):
+            return tfm.rwkv_block(p, h, cfg, state=None, ctx=ctx)
+
+        x, cache = tfm.scan_stack(
+            body, x, params["layers"], jnp.zeros((cfg.num_layers,)), cfg
+        )
+        cache = {"scan": cache}
+    elif fam == "hybrid":
+        x = embed_tokens(params, batch["tokens"], cfg)
+        windows = jnp.asarray(tfm.layer_windows(cfg))
+
+        def body(p, h, w):
+            return tfm.hymba_block(
+                p, h, cfg, window=w, mode="prefill", cache_len=cache_len
+            )
+
+        x, cache = tfm.scan_stack(body, x, params["layers"], windows, cfg)
+        cache = {"scan": cache}
+    else:
+        x = embed_tokens(params, batch["tokens"], cfg)
+        head_caches = {}
+        if cfg.moe and cfg.first_dense_layers:
+            for i in range(cfg.first_dense_layers):
+                x, c, _ = tfm.lm_block_full(
+                    params["head_layers"][str(i)], x, cfg, ctx,
+                    window=tfm.BIG_WINDOW, bias=None, moe_layer=False,
+                    return_cache=True, cache_len=cache_len,
+                )
+                head_caches[str(i)] = c
+        windows = jnp.asarray(_windows(cfg))
+        if bias is None:
+            bias = _bias_zeros(cfg, ctx)
+
+        def body(p, h, xs):
+            w, b = xs
+            h, c, _ = tfm.lm_block_full(
+                p, h, cfg, ctx, window=w, bias=b, moe_layer=cfg.moe,
+                return_cache=True, cache_len=cache_len,
+            )
+            return h, c
+
+        x, cache = tfm.scan_stack(body, x, params["layers"], (windows, bias), cfg)
+        cache = {"scan": cache}
+        if head_caches:
+            cache["head"] = head_caches
+
+    x = tfm._norm(params["final_norm"], x[:, -1:, :], cfg)
+    logits = lm_head(params, x, cfg)[:, 0, :]
+    if cfg.final_softcap:
+        logits = common.softcap(logits, cfg.final_softcap)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def init_decode_cache(params, cfg: ModelConfig, batch: int, cache_len: int, ctx=None):
+    """Preallocated cache for decode-only lowering (decode_32k / long_500k)."""
+    cdt = common.dtype_of(cfg.compute_dtype)
+    l = num_scanned_layers(cfg)
+    fam = cfg.family
+    dh = cfg.resolved_head_dim
+    kvh = cfg.num_kv_heads
+
+    def kv(layers):
+        return {
+            "k": jnp.zeros((layers, batch, cache_len, kvh, dh), cdt),
+            "v": jnp.zeros((layers, batch, cache_len, kvh, dh), cdt),
+        }
+
+    if fam == "ssm":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        n = cfg.rwkv_head_dim
+        return {
+            "scan": {
+                "wkv": jnp.zeros((l, batch, h, n, n), jnp.float32),
+                "tm_shift": jnp.zeros((l, batch, cfg.d_model), cdt),
+                "cm_shift": jnp.zeros((l, batch, cfg.d_model), cdt),
+            }
+        }
+    if fam == "hybrid":
+        di = cfg.ssm_expand * cfg.d_model
+        c = kv(l)
+        c.update(
+            {
+                "ssm": jnp.zeros((l, batch, di, cfg.ssm_state), jnp.float32),
+                "conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, di), cdt),
+            }
+        )
+        return {"scan": c}
+    if fam == "audio":
+        c = kv(l)
+        c["cross_k"] = jnp.zeros((l, batch, cfg.encoder_seq, kvh, dh), cdt)
+        c["cross_v"] = jnp.zeros((l, batch, cfg.encoder_seq, kvh, dh), cdt)
+        return {"scan": c}
+    if cfg.use_mla:
+        cache = {
+            "scan": {
+                "ckv": jnp.zeros((l, batch, cache_len, cfg.kv_lora_rank), cdt),
+                "k_rope": jnp.zeros((l, batch, cache_len, cfg.qk_rope_head_dim), cdt),
+            }
+        }
+        if cfg.moe and cfg.first_dense_layers:
+            cache["head"] = {
+                str(i): {
+                    "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), cdt),
+                    "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), cdt),
+                }
+                for i in range(cfg.first_dense_layers)
+            }
+        return cache
+    return {"scan": kv(l)}
+
+
+def decode_step(params, tokens, cache, pos, cfg: ModelConfig, ctx=None, bias=None):
+    """One decode step.  tokens: (B,); pos: scalar int32 (next position).
+
+    Returns (logits (B, V), new cache).
+    """
+    fam = cfg.family
+    if fam == "audio":
+        cdt = common.dtype_of(cfg.compute_dtype)
+        x = params["embed"][tokens[:, None]].astype(cdt)
+        cache_len = cache["scan"]["k"].shape[2]
+        pos_tab = jnp.asarray(
+            common.sinusoidal_positions(cache_len, cfg.d_model), cdt
+        )
+        x = x + jax.lax.dynamic_slice_in_dim(pos_tab, pos, 1, 0)[None]
+    else:
+        x = embed_tokens(params, tokens[:, None], cfg)
+
+    new_cache: dict[str, Any] = {}
+    if fam == "ssm":
+
+        def body(p, h, c):
+            return tfm.rwkv_block(p, h, cfg, state=c, ctx=ctx)
+
+        x, sc = tfm.scan_stack(body, x, (params["layers"]), cache["scan"], cfg)
+        # scan passes (params, xs); repack:
+        new_cache["scan"] = sc
+    elif fam == "hybrid":
+        windows = jnp.asarray(tfm.layer_windows(cfg))
+
+        def body(p, h, xs):
+            w, c = xs
+            return tfm.hymba_block(p, h, cfg, window=w, mode="decode", cache=c, pos=pos)
+
+        x, sc = tfm.scan_stack(body, x, params["layers"], (windows, cache["scan"]), cfg)
+        new_cache["scan"] = sc
+    elif fam == "audio":
+
+        def body(p, h, c):
+            return tfm.decoder_block(p, h, None, cfg, mode="decode", cache=c, pos=pos)
+
+        x, sc = tfm.scan_stack(body, x, params["layers"], cache["scan"], cfg)
+        new_cache["scan"] = sc
+    else:
+        if cfg.moe and cfg.first_dense_layers:
+            new_cache["head"] = {}
+            for i in range(cfg.first_dense_layers):
+                x, c, _ = tfm.lm_block_decode(
+                    params["head_layers"][str(i)], x, cache["head"][str(i)], pos, cfg,
+                    ctx, window=tfm.BIG_WINDOW, bias=None, moe_layer=False,
+                )
+                new_cache["head"][str(i)] = c
+        windows = jnp.asarray(_windows(cfg))
+        if bias is None:
+            bias = _bias_zeros(cfg, ctx)
+
+        def body(p, h, xs):
+            w, b, c = xs
+            h, c2, _ = tfm.lm_block_decode(
+                p, h, c, pos, cfg, ctx, window=w, bias=b, moe_layer=cfg.moe
+            )
+            return h, c2
+
+        x, sc = tfm.scan_stack(
+            body, x, params["layers"], (windows, bias, cache["scan"]), cfg
+        )
+        new_cache["scan"] = sc
+
+    x = tfm._norm(params["final_norm"], x, cfg)
+    logits = lm_head(params, x, cfg)[:, 0, :]
+    if cfg.final_softcap:
+        logits = common.softcap(logits, cfg.final_softcap)
+    return logits, new_cache

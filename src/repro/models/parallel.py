@@ -1,0 +1,91 @@
+"""Parallel context: which mesh axes the model's manual regions use.
+
+The model is mostly GSPMD-auto (pjit + sharding constraints), but the MoE
+layer is a *manual* region (shard_map + all_to_all) because expert dispatch
+is the one place where einsum-dispatch formulations waste O(E) compute or
+memory and the collective schedule must be explicit.  This context carries
+the mesh and axis-name assignments into the model; ``None`` means
+single-device execution (smoke tests, reference numerics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: jax.sharding.Mesh
+    dp_axes: tuple[str, ...] = ("data",)  # batch / gradient axes
+    tp_axis: str = "model"  # tensor-parallel axis
+    ep_axes: tuple[str, ...] = ("data", "model")  # expert-parallel axes
+    fsdp_axis: Optional[str] = None  # shard expert D dim when E doesn't
+    #                                   divide the full EP product
+
+    @property
+    def ep_size(self) -> int:
+        return int(
+            __import__("math").prod(self.mesh.shape[a] for a in self.ep_axes)
+        )
+
+    @property
+    def dp_size(self) -> int:
+        return int(
+            __import__("math").prod(self.mesh.shape[a] for a in self.dp_axes)
+        )
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+
+def hint(x, ctx: Optional[ParallelContext], *entries):
+    """``with_sharding_constraint`` against the ctx mesh; no-op without one.
+
+    ``entries`` are leading PartitionSpec entries (axis name, tuple of
+    names, or None); trailing dims are unsharded.  Any entry whose
+    dimension is not divisible on the mesh is downgraded to None, so the
+    same hints drive smoke meshes and the 512-chip pod.
+    """
+    if ctx is None:
+        return x
+    import math
+
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    fixed = []
+    for dim, names in zip(x.shape, entries + (None,) * (x.ndim - len(entries))):
+        if names is None:
+            fixed.append(None)
+            continue
+        group = names if isinstance(names, tuple) else (names,)
+        size = math.prod(ctx.mesh.shape[a] for a in group)
+        fixed.append(names if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, PartitionSpec(*fixed))
+    )
+
+
+def choose_ep_axes(ctx_or_mesh, num_experts: int, dp_axes, tp_axis) -> tuple:
+    """Pick EP axes: the widest mesh-axis product that divides E.
+
+    Prefers (data..., model) for storage economy (deepseek-v3: 256 experts
+    over 256 chips); falls back to (model,) + FSDP weight sharding over
+    'data' when E only divides the TP axis (deepseek-v2: 160 = 10 x 16).
+    """
+    mesh = ctx_or_mesh
+    full = [a for a in (*dp_axes, tp_axis) if a != "pod"]
+    import math
+
+    full_size = math.prod(mesh.shape[a] for a in full)
+    if num_experts % full_size == 0:
+        return tuple(full), None
+    tp_size = mesh.shape[tp_axis]
+    if num_experts % tp_size == 0:
+        fsdp = "data" if "data" in mesh.shape else None
+        return (tp_axis,), fsdp
+    raise ValueError(
+        f"num_experts={num_experts} not divisible by mesh axes {dict(mesh.shape)}"
+    )

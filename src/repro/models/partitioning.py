@@ -1,0 +1,243 @@
+"""Partitioning rules: parameter / activation / cache PartitionSpecs.
+
+Rule-based mapping from parameter-tree paths to PartitionSpecs:
+
+* TP ('model' axis): attention heads, FFN hidden, vocab;
+* EP: routed experts over (data, model) when divisible, else (model,) with
+  FSDP weight sharding over 'data' (models/parallel.py);
+* DP ('pod','data'): batch dims of activations, KV caches, and -- under
+  ZeRO-1 -- the Adam moments (sharded over the first dp-divisible axis).
+
+Everything degrades to replication when a dimension is not divisible, so
+the same rules drive the 1-device smoke tests, the 256-chip pod and the
+512-chip multi-pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.parallel import ParallelContext
+
+# Leaf-name -> spec template for *unstacked* (single-layer) params.
+#   "col"  : shard last dim over TP        (D, X) -> P(None, tp)
+#   "row"  : shard first dim over TP       (X, D) -> P(tp, None)
+#   "vec"  : shard the only dim over TP
+#   "rep"  : replicate
+_RULES = {
+    "embed": "embed",
+    "lm_head": "col",
+    "wq": "col", "wk": "col", "wv": "col", "wg": "col", "wr": "col",
+    "w_in": "col", "w_gate": "col", "w_gate_h": "col",
+    "w_dq": "col", "w_uq": "col", "w_uk": "col", "w_uv": "col",
+    "w_dkv": "rep", "maa_w1": "rep", "decay_w1": "rep", "w_x": "row_first",
+    "wo": "row", "w_out": "row", "w_dt": "col", "proj": "rep",
+    "conv": "col", "conv_b": "vec", "a_log": "row_first", "d_skip": "vec",
+    "dt_bias": "vec", "bq": "vec", "bk": "vec", "bv": "vec",
+    "u": "row_first", "gate": "rep",
+    "maa_w2": "rep", "decay_w2": "rep",
+}
+# channel-mix weights (parent key "cm") have transposed roles.  (A fully
+# replicated-weight SP variant was measured: it removes the train-time
+# collectives but makes single-token decode weights-bound -- 4x worse --
+# so the TP sharding stays; EXPERIMENTS.md §Perf.)
+_CM_RULES = {"wk": "col", "wv": "row", "wr": "col"}
+
+
+def _base_spec(rule: str, ndim: int, tp: str) -> P:
+    if rule == "embed":
+        return P(tp, None)
+    if rule == "embed_d":
+        # d_model-sharded: the token gather is fully local per chip (vocab
+        # sharding makes GSPMD replicate the whole table per step).  Used
+        # only for untied-head MoE archs -- under a tied head it would
+        # force a vocab-sized logits all-reduce, and on dense archs the
+        # D-sharded embedding output flips the residual-stream layout and
+        # costs per-layer gathers (measured: EXPERIMENTS.md Section Perf).
+        return P(None, tp)
+    if rule == "col":
+        return P(*([None] * (ndim - 1)), tp)
+    if rule == "row":
+        return P(tp, *([None] * (ndim - 1)))
+    if rule == "row_first":
+        return P(tp, *([None] * (ndim - 1)))
+    if rule == "vec":
+        return P(tp)
+    return P(*([None] * ndim))
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            out.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            out.append(e.name)
+    return out
+
+
+def _divisible(spec: P, shape, mesh) -> P:
+    """Downgrade any axis whose dimension is not divisible on the mesh."""
+    fixed = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            fixed.append(None)
+            continue
+        group = names if isinstance(names, tuple) else (names,)
+        size = int(np.prod([mesh.shape[a] for a in group]))
+        fixed.append(names if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_specs(abstract_params, cfg: ModelConfig, ctx: ParallelContext):
+    """PartitionSpec pytree matching ``abstract_params``."""
+    tp = ctx.tp_axis
+    mesh = ctx.mesh
+    moe_e = cfg.n_routed_experts
+
+    def rule_for(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1]
+        stacked = "layers" in keys or "enc_layers" in keys
+        in_moe = "moe" in keys and "shared" not in keys
+        in_cm = "cm" in keys
+
+        if in_moe and name in ("w_in", "w_gate_h", "w_out"):
+            if ctx.fsdp_axis is not None:
+                # (E, D, F) / (E, F, D): experts over TP, D/F over fsdp axis
+                if name == "w_out":
+                    spec = P(tp, None, ctx.fsdp_axis)
+                else:
+                    spec = P(tp, ctx.fsdp_axis, None)
+            else:
+                spec = P(ctx.ep_axes, None, None)
+        elif in_moe and name == "gate":
+            spec = P(None, None)
+        elif in_cm and name in _CM_RULES:
+            spec = _base_spec(_CM_RULES[name], leaf.ndim - (1 if stacked else 0), tp)
+        else:
+            rule = _RULES.get(name, "rep")
+            if rule == "embed" and cfg.moe and not cfg.tie_embeddings:
+                rule = "embed_d"
+            spec = _base_spec(rule, leaf.ndim - (1 if stacked else 0), tp)
+
+        if stacked:
+            spec = P(None, *spec)
+        return _divisible(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule_for, abstract_params)
+
+
+def zero1_specs(param_spec_tree, abstract_params, ctx: ParallelContext):
+    """Adam-moment specs: param spec + shard one free axis over the dp axes.
+
+    The first axis that is (a) unsharded in the param spec and (b) divisible
+    by the dp product gets the dp axes -- classic ZeRO-1 partitioning
+    without a separate parameter-gather step (GSPMD inserts it).
+    """
+    dp = ctx.dp_axes
+    dp_size = ctx.dp_size
+    mesh = ctx.mesh
+
+    def widen(spec: P, leaf):
+        entries = list(tuple(spec) + (None,) * (leaf.ndim - len(spec)))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update(e if isinstance(e, tuple) else (e,))
+        if used & set(dp):
+            return _divisible(P(*entries), leaf.shape, mesh)
+        for i, (dim, cur) in enumerate(zip(leaf.shape, entries)):
+            if cur is None and dim % dp_size == 0 and dim >= dp_size:
+                entries[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return _divisible(P(*entries), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map(widen, param_spec_tree, abstract_params)
+
+
+def batch_specs(abstract_batch, ctx: ParallelContext):
+    """Shard the batch dim over dp when divisible; everything else rep."""
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        s = P(dp, *([None] * (leaf.ndim - 1)))
+        return _divisible(s, leaf.shape, ctx.mesh)
+
+    return jax.tree_util.tree_map(spec, abstract_batch)
+
+
+_CACHE_RULES = {
+    # KV caches (B, S, Kv, Dh): prefer head sharding over TP; fall back to
+    # sequence sharding when the head count does not divide (gemma2 kv=8,
+    # hymba kv=5 on a 16-wide TP axis) -- GSPMD turns the sharded-sequence
+    # attention into partial softmax + reduction.
+    "k": "kv",
+    "v": "kv",
+    "cross_k": "kv",
+    "cross_v": "kv",
+    # MLA compressed caches (B, S, R): shard the sequence.
+    "ckv": ("dp", "tp", None),
+    "k_rope": ("dp", "tp", None),
+    "wkv": ("dp", "tp", None, None),
+    "tm_shift": ("dp", "tp"),
+    "cm_shift": ("dp", "tp"),
+    "ssm": ("dp", "tp", None),
+    "conv": ("dp", None, "tp"),
+}
+
+
+def cache_specs(abstract_cache, ctx: ParallelContext):
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    tp = ctx.tp_axis
+    tp_size = ctx.tp_size
+
+    def spec(path, leaf):
+        keys = _path_keys(path)
+        name = keys[-1]
+        tpl = _CACHE_RULES.get(name)
+        if tpl is None:
+            return P(*([None] * leaf.ndim))
+        stacked = "scan" in keys
+        if tpl == "kv":
+            b, s, kvh = leaf.shape[1 if stacked else 0 :][:3]
+            if kvh % tp_size == 0:
+                entries = [dp, None, tp, None]
+            elif s % tp_size == 0:
+                entries = [dp, tp, None, None]
+            else:
+                entries = [dp, None, None, None]
+        else:
+            entries = [dp if e == "dp" else tp if e == "tp" else None for e in tpl]
+        if stacked:
+            entries = [None] + entries
+        entries = entries[: leaf.ndim] + [None] * (leaf.ndim - len(entries))
+        return _divisible(P(*entries), leaf.shape, ctx.mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def balancer_specs(abstract_state, ctx: ParallelContext):
+    """(L, DP, TP, E) leaves: one row per dispatcher, sharded in place."""
+    dp = ctx.dp_axes if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+    def spec(leaf):
+        if leaf.ndim == 4:
+            return _divisible(P(None, dp, ctx.tp_axis, None), leaf.shape, ctx.mesh)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(spec, abstract_state)
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,325 @@
+"""Recurrent sequence mixers: RWKV-6 ("Finch") and Mamba-1 (hymba branch).
+
+Both are linear-state models, so the 500k-context decode shape is O(1) per
+token: the entire context lives in a fixed-size state
+(RWKV: (H, n, n) per layer; Mamba: (d_inner, N) + a small conv tail).
+
+RWKV-6 follows arXiv:2404.05892: token-shift ddlerp (low-rank
+data-dependent mixing), per-channel data-dependent decay
+``w = exp(-exp(w0 + lora(x)))``, and the WKV6 recurrence
+
+    o_t = r_t @ (S_{t-1} + (u * k_t) v_t^T),   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with per-head GroupNorm and an output gate.  Training uses a time scan; the
+chunked parallel form is a hillclimb candidate (EXPERIMENTS.md Section Perf).
+
+Mamba-1 (hymba's SSM heads): in-proj -> causal conv -> selective SSM with
+ZOH discretisation -> gated out-proj, state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common, parallel
+
+RWKV_LORA = 32
+RWKV_DECAY_LORA = 64
+
+
+# ==========================================================================
+# RWKV-6
+# ==========================================================================
+
+
+def init_rwkv_time_mix(kg: common.KeyGen, cfg: ModelConfig):
+    d = cfg.d_model
+    pdt = common.dtype_of(cfg.param_dtype)
+    h = d // cfg.rwkv_head_dim
+    return {
+        "mu_x": common.dense_init(kg(), (d,), pdt, scale=0.5),
+        "mu": common.dense_init(kg(), (5, d), pdt, scale=0.5),
+        "maa_w1": common.dense_init(kg(), (d, 5 * RWKV_LORA), pdt),
+        "maa_w2": common.dense_init(kg(), (5, RWKV_LORA, d), pdt),
+        "w0": common.dense_init(kg(), (d,), jnp.float32, scale=1.0),
+        "decay_w1": common.dense_init(kg(), (d, RWKV_DECAY_LORA), pdt),
+        "decay_w2": common.dense_init(kg(), (RWKV_DECAY_LORA, d), pdt),
+        "u": common.dense_init(kg(), (h, cfg.rwkv_head_dim), jnp.float32, scale=0.5),
+        "wr": common.dense_init(kg(), (d, d), pdt),
+        "wk": common.dense_init(kg(), (d, d), pdt),
+        "wv": common.dense_init(kg(), (d, d), pdt),
+        "wg": common.dense_init(kg(), (d, d), pdt),
+        "wo": common.dense_init(kg(), (d, d), pdt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+        "gn_scale": jnp.ones((d,), pdt),
+        "gn_bias": jnp.zeros((d,), pdt),
+    }
+
+
+def init_rwkv_channel_mix(kg: common.KeyGen, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    pdt = common.dtype_of(cfg.param_dtype)
+    return {
+        "mu_k": common.dense_init(kg(), (d,), pdt, scale=0.5),
+        "mu_r": common.dense_init(kg(), (d,), pdt, scale=0.5),
+        "wk": common.dense_init(kg(), (d, f), pdt),
+        "wv": common.dense_init(kg(), (f, d), pdt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+        "wr": common.dense_init(kg(), (d, d), pdt),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift mixing -> five mixed streams (w,k,v,r,g)."""
+    dx = x_prev - x  # (B,S,D)
+    xxx = x + dx * p["mu_x"]
+    lora = jnp.tanh(xxx @ p["maa_w1"])  # (B,S,5*r)
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, RWKV_LORA)
+    deltas = jnp.einsum("bsir,ird->ibsd", lora, p["maa_w2"])  # (5,B,S,D)
+    mixed = x[None] + dx[None] * (p["mu"][:, None, None, :] + deltas)
+    return mixed  # order: w, k, v, r, g
+
+
+def _wkv6_scan(r, k, v, w, u, state):
+    """WKV6 recurrence.  r,k,v,w: (B,S,H,n); u: (H,n); state: (B,H,n,n).
+
+    Returns (out (B,S,H,n), final_state).  f32 state for stability.
+    """
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B,H,n)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,n,n)
+        ot = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, ot
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+WKV_CHUNK = 32  # chunk length of the parallel form (VMEM-sized tiles)
+
+
+def _wkv6_chunked(r, k, v, lw, u, state, chunk: int = WKV_CHUNK):
+    """Chunked-parallel WKV6 -- identical math to ``_wkv6_scan``.
+
+    Instead of one scan step per token (state read+write every step, tiny
+    vector ops), the sequence is processed in chunks of C tokens: an
+    O(C^2 n) intra-chunk "attention" with relative decays plus one state
+    contraction per chunk.  State traffic drops by C, and the inner ops
+    become (C, n) x (n, m) matmuls -- MXU-shaped on TPU.
+
+    Numerical form: all relative decays are exponentials of *non-positive*
+    log-decay sums (lw = log w = -exp(decay) <= 0), so every exp() here is
+    <= 1 and the chunk math is stable at any chunk length.
+
+    Args:
+      r, k, v: (B, S, H, n); lw: (B, S, H, n) log-decay (<= 0, f32);
+      u: (H, n); state: (B, H, n, n) f32.
+    Returns (out (B, S, H, n) f32, final state).
+    """
+    b, s, h, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    r, k, v = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = lw.astype(jnp.float32)
+
+    def to_chunks(a):  # (B,S,H,n) -> (NC, B, H, C, n)
+        return a.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+
+    # Clamp the per-step log-decay: w = exp(lw) <= 9e-14 is zero for every
+    # practical purpose, and unbounded |lw| makes the in-chunk cumsum
+    # differences (cum_ex[t] - cum[s]) cancel catastrophically in f32
+    # (verified against a float64 sequential reference).
+    lw = jnp.maximum(lw, -30.0)
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    u_diag = u[None, :, :]  # (1, H, n)
+
+    def one_chunk(s0, xs):
+        rt, kt, vt, lwt = xs  # (B, H, C, n)
+        cum = jnp.cumsum(lwt, axis=2)  # inclusive log-decay sums
+        cum_ex = cum - lwt  # exclusive (sum over i < t)
+        total = cum[:, :, -1:, :]  # (B,H,1,n)
+
+        # Inter-chunk: queries decayed from the chunk start hit the state.
+        q = rt * jnp.exp(cum_ex)  # (B,H,C,n)
+        inter = jnp.einsum("bhcn,bhnm->bhcm", q, s0)
+
+        # Intra-chunk: scores with per-channel relative decay, strictly
+        # causal (s < t); the t == s "bonus" term uses u instead.
+        dec = jnp.exp(cum_ex[:, :, :, None, :] - cum[:, :, None, :, :])
+        scores = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rt, kt, dec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhts,bhsm->bhtm", scores, vt)
+        bonus = jnp.einsum("bhcn,bhcn->bhc", rt * u_diag[:, :, None, :], kt)
+        intra = intra + bonus[..., None] * vt
+
+        # State update: decay the carried state across the whole chunk and
+        # add each key decayed from its own position to the chunk end.
+        k_dec = kt * jnp.exp(total - cum)
+        s_new = jnp.exp(total)[..., 0, :, None] * s0 + jnp.einsum(
+            "bhcn,bhcm->bhnm", k_dec, vt
+        )
+        return s_new, inter + intra
+
+    state, out = jax.lax.scan(one_chunk, state, (rc, kc, vc, lwc))
+    # (NC, B, H, C, n) -> (B, S, H, n)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n)
+    return out, state
+
+
+def rwkv_time_mix(p, x, cfg: ModelConfig, state=None, shift_prev=None, ctx=None):
+    """x: (B,S,D).  state: (B,H,n,n) or None (zeros).  shift_prev: (B,D)."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    if shift_prev is None:
+        shift_prev = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([shift_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    decay = p["w0"] + (jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]).astype(jnp.float32)
+    lw = -jnp.exp(decay.astype(jnp.float32))  # log w  (<= 0)
+    # Keep the WKV path head-sharded over TP end-to-end (wr/wk/wv are
+    # column-sharded, so their outputs are born sharded; the hints stop
+    # GSPMD from gathering them back to replicated around the scan).
+    # Single-token decode skips the hints: per-token reshard collectives
+    # cost more than they save at S == 1 (measured).
+    if s <= 1:
+        ctx = None
+    dp, tp = (ctx.dp_axes, ctx.tp_axis) if ctx is not None else (None, None)
+    shard = lambda a: parallel.hint(a, ctx, dp, None, tp, None)  # noqa: E731
+    r = shard((xr @ p["wr"]).reshape(b, s, h, n))
+    k = shard((xk @ p["wk"]).reshape(b, s, h, n))
+    v = shard((xv @ p["wv"]).reshape(b, s, h, n))
+    g = parallel.hint(jax.nn.silu(xg @ p["wg"]), ctx, dp, None, tp)
+    lw = shard(lw.reshape(b, s, h, n))
+
+    if state is None:
+        state = jnp.zeros((b, h, n, n), jnp.float32)
+    state = parallel.hint(state, ctx, dp, tp)
+    if s % WKV_CHUNK == 0 and s > WKV_CHUNK:
+        # Chunked-parallel form: C-times less state traffic, MXU-shaped
+        # inner matmuls (EXPERIMENTS.md Section Perf, rwkv hillclimb).
+        out, state = _wkv6_chunked(r, k, v, lw, p["u"], state)
+    else:
+        out, state = _wkv6_scan(r, k, v, jnp.exp(lw), p["u"], state)
+    state = parallel.hint(state, ctx, dp, tp)
+    # Per-head group norm (local under head sharding).
+    out = shard(out)
+    mu = out.mean(axis=-1, keepdims=True)
+    var = out.var(axis=-1, keepdims=True)
+    out = ((out - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(b, s, d)
+    out = parallel.hint(out, ctx, dp, None, tp)
+    out = out * p["gn_scale"] + p["gn_bias"]
+    out = (out.astype(x.dtype) * g) @ p["wo"]
+    # Land the row-parallel output sequence-sharded: the TP partial sums
+    # lower to a reduce-scatter instead of all-reduce + slice.
+    out = parallel.hint(out, ctx, dp, tp)
+    return out, state, x[:, -1, :]
+
+
+def rwkv_channel_mix(p, x, cfg: ModelConfig, shift_prev=None, ctx=None):
+    """Tensor-parallel FFN: wk column- / wv row-sharded, hidden F-sharded
+    (keeps single-token decode weight traffic at 1/tp per chip)."""
+    b, s, d = x.shape
+    if shift_prev is None:
+        shift_prev = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([shift_prev[:, None, :], x[:, :-1, :]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    dp, tp = (ctx.dp_axes, ctx.tp_axis) if ctx is not None else (None, None)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = parallel.hint(k, ctx, dp, None, tp)  # (B, S, F/tp) hidden sharded
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+
+# ==========================================================================
+# Mamba-1 (hymba SSM branch)
+# ==========================================================================
+
+
+def init_mamba(kg: common.KeyGen, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    pdt = common.dtype_of(cfg.param_dtype)
+    a_init = jnp.tile(
+        jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))[None, :], (di, 1)
+    )
+    return {
+        "w_in": common.dense_init(kg(), (d, 2 * di), pdt),
+        "conv": common.dense_init(kg(), (cfg.conv_kernel, di), pdt, scale=0.5),
+        "conv_b": jnp.zeros((di,), pdt),
+        "w_x": common.dense_init(kg(), (di, dt_rank + 2 * n), pdt),
+        "w_dt": common.dense_init(kg(), (dt_rank, di), pdt),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "a_log": a_init,
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": common.dense_init(kg(), (di, d), pdt, scale=0.02 / max(cfg.num_layers, 1) ** 0.5),
+    }
+
+
+def _causal_conv(x, kernel, bias, conv_state=None):
+    """Depthwise causal conv.  x: (B,S,Di); kernel: (K,Di).
+
+    conv_state: (B, K-1, Di) tail of the previous chunk (decode).
+    Returns (y, new_conv_state).
+    """
+    kk = kernel.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([conv_state, x], axis=1)  # (B, S+K-1, Di)
+    y = sum(
+        xx[:, i : i + x.shape[1], :] * kernel[i][None, None, :] for i in range(kk)
+    )
+    return y + bias, xx[:, -(kk - 1) :, :]
+
+
+def mamba(p, x, cfg: ModelConfig, state=None, conv_state=None):
+    """Selective SSM.  x: (B,S,D) -> (B,S,D).  state: (B,Di,N)."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+
+    xz = x @ p["w_in"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi, conv_state = _causal_conv(xi, p["conv"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+
+    xdbc = xi @ p["w_x"]
+    dt = jax.nn.softplus(
+        (xdbc[..., :dt_rank] @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,S,Di)
+    bmat = xdbc[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,S,N)
+    cmat = xdbc[..., dt_rank + n :].astype(jnp.float32)  # (B,S,N)
+    a = -jnp.exp(p["a_log"])  # (Di,N)
+
+    if state is None:
+        state = jnp.zeros((b, di, n), jnp.float32)
+
+    xif = xi.astype(jnp.float32)
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs  # (B,Di),(B,N),(B,N),(B,Di)
+        da = jnp.exp(dt_t[..., None] * a[None])  # (B,Di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(bmat, 1, 0),
+        jnp.moveaxis(cmat, 1, 0),
+        jnp.moveaxis(xif, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xif * p["d_skip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], state, conv_state

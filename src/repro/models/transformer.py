@@ -1,0 +1,335 @@
+"""Block definitions and the scanned layer stack for every family.
+
+One scanned, weight-stacked layer body per family keeps the HLO size
+independent of depth (61-layer deepseek compiles as fast as 12-layer
+whisper).  Non-uniform leading layers (deepseek's first dense layers) run
+as separate unscanned blocks.  Per-layer static-ish variation (gemma2's
+local/global alternation, hymba's three global layers) is expressed as a
+*traced* per-layer window input so the scan body stays uniform.
+
+Modes: "train" (no cache), "prefill" (returns cache), "decode" (one token,
+cache in/out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import common, ffn, mla, parallel, ssm
+from repro.models.parallel import ParallelContext
+
+BIG_WINDOW = 1 << 30
+
+
+# --------------------------------------------------------------------------
+# per-layer window pattern
+# --------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    l = cfg.num_layers
+    w = np.full((l,), BIG_WINDOW, np.int32)
+    if cfg.layer_pattern == "alt_local_global" and cfg.sliding_window:
+        w[0::2] = cfg.sliding_window  # even layers local (gemma2)
+    elif cfg.layer_pattern == "mostly_local" and cfg.sliding_window:
+        w[:] = cfg.sliding_window
+        for g in cfg.global_layers:
+            if g < l:
+                w[g] = BIG_WINDOW
+    return w
+
+
+# --------------------------------------------------------------------------
+# block init
+# --------------------------------------------------------------------------
+
+
+def _norm_params(cfg: ModelConfig, with_bias: bool):
+    pdt = common.dtype_of(cfg.param_dtype)
+    p = {"scale": jnp.ones((cfg.d_model,), pdt)}
+    if with_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), pdt)
+    return p
+
+
+def _uses_layer_norm(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "audio")
+
+
+def _norm(p, x, cfg: ModelConfig):
+    if "bias" in p:
+        return common.layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return common.rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_lm_block(kg: common.KeyGen, cfg: ModelConfig, *, moe_layer: bool):
+    ln = _uses_layer_norm(cfg)
+    p: dict[str, Any] = {
+        "ln1": _norm_params(cfg, ln),
+        "ln2": _norm_params(cfg, ln),
+    }
+    p["attn"] = mla.init_mla(kg, cfg) if cfg.use_mla else attn_lib.init_attention(kg, cfg)
+    if cfg.post_norms:
+        p["ln1_post"] = _norm_params(cfg, ln)
+        p["ln2_post"] = _norm_params(cfg, ln)
+    if moe_layer:
+        p["moe"] = ffn.init_moe_ffn(kg, cfg)
+    else:
+        p["ffn"] = ffn.init_dense_ffn(kg, cfg)
+    return p
+
+
+def init_rwkv_block(kg: common.KeyGen, cfg: ModelConfig):
+    return {
+        "ln1": _norm_params(cfg, True),
+        "ln2": _norm_params(cfg, True),
+        "tm": ssm.init_rwkv_time_mix(kg, cfg),
+        "cm": ssm.init_rwkv_channel_mix(kg, cfg),
+    }
+
+
+def init_hymba_block(kg: common.KeyGen, cfg: ModelConfig):
+    pdt = common.dtype_of(cfg.param_dtype)
+    return {
+        "ln1": _norm_params(cfg, False),
+        "ln2": _norm_params(cfg, False),
+        "attn": attn_lib.init_attention(kg, cfg),
+        "mamba": ssm.init_mamba(kg, cfg),
+        "ffn": ffn.init_dense_ffn(kg, cfg),
+        "attn_out_norm": jnp.ones((cfg.d_model,), pdt),
+        "ssm_out_norm": jnp.ones((cfg.d_model,), pdt),
+    }
+
+
+def init_encoder_block(kg: common.KeyGen, cfg: ModelConfig):
+    return {
+        "ln1": _norm_params(cfg, True),
+        "ln2": _norm_params(cfg, True),
+        "attn": attn_lib.init_attention(kg, cfg),
+        "ffn": ffn.init_dense_ffn(kg, cfg),
+    }
+
+
+def init_decoder_block(kg: common.KeyGen, cfg: ModelConfig):
+    return {
+        "ln1": _norm_params(cfg, True),
+        "ln_x": _norm_params(cfg, True),
+        "ln2": _norm_params(cfg, True),
+        "attn": attn_lib.init_attention(kg, cfg),
+        "cross": attn_lib.init_attention(kg, cfg),
+        "ffn": ffn.init_dense_ffn(kg, cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# block forward (full sequence)
+# --------------------------------------------------------------------------
+
+
+def lm_block_full(
+    p,
+    x,
+    cfg: ModelConfig,
+    ctx: Optional[ParallelContext],
+    *,
+    window,
+    bias,
+    moe_layer: bool,
+    return_cache: bool = False,
+    cache_len: int = 0,
+):
+    h = _norm(p["ln1"], x, cfg)
+    if cfg.use_mla:
+        a, cache = mla.mla_full(
+            p["attn"], h, cfg, return_cache=return_cache, cache_len=cache_len,
+            ctx=ctx,
+        )
+    else:
+        a, cache = attn_lib.attention_full(
+            p["attn"], h, cfg, window=window,
+            return_cache=return_cache, cache_len=cache_len,
+        )
+    if cfg.post_norms:
+        a = _norm(p["ln1_post"], a, cfg)
+    x = x + a
+
+    h = _norm(p["ln2"], x, cfg)
+    if moe_layer:
+        f, counts = ffn.moe_ffn(p["moe"], h, bias, cfg, ctx)
+    else:
+        f = ffn.dense_ffn(p["ffn"], h, cfg)
+        counts = _zero_counts(cfg, ctx)
+    if cfg.post_norms:
+        f = _norm(p["ln2_post"], f, cfg)
+    x = common.grad_dtype_barrier(x + f)
+    return x, cache, counts
+
+
+def _zero_counts(cfg: ModelConfig, ctx):
+    e = max(cfg.n_routed_experts, 1)
+    if ctx is None:
+        return jnp.zeros((e,), jnp.float32)
+    return jnp.zeros((ctx.dp_size, ctx.tp_size, e), jnp.float32)
+
+
+def lm_block_decode(p, x, cache, pos, cfg: ModelConfig, ctx, *, window, bias, moe_layer):
+    h = _norm(p["ln1"], x, cfg)
+    if cfg.use_mla:
+        a, cache = mla.mla_decode(p["attn"], h, cache, pos, cfg)
+    else:
+        a, cache = attn_lib.attention_decode(p["attn"], h, cache, pos, cfg, window=window)
+    if cfg.post_norms:
+        a = _norm(p["ln1_post"], a, cfg)
+    x = x + a
+    h = _norm(p["ln2"], x, cfg)
+    if moe_layer:
+        f, counts = ffn.moe_ffn(p["moe"], h, bias, cfg, ctx)
+    else:
+        f = ffn.dense_ffn(p["ffn"], h, cfg)
+        counts = _zero_counts(cfg, ctx)
+    if cfg.post_norms:
+        f = _norm(p["ln2_post"], f, cfg)
+    return x + f, cache, counts
+
+
+def rwkv_block(p, x, cfg: ModelConfig, state=None, ctx=None):
+    """state: None (train) or dict(wkv, tm_shift, cm_shift).
+
+    Sequence parallelism: the residual stream and every elementwise region
+    (norms, ddlerp, token shift, channel mix) are sharded over the TP axis
+    on the *sequence* dim; only the WKV recurrence runs sequence-gathered
+    (it is sequential in S) and is head-sharded instead.  GSPMD inserts
+    the S-gather before the time-mix matmuls and a reduce-scatter after
+    wo -- the Megatron-SP schedule, derived from these constraints.
+    """
+    st = state or {}
+    dp, tp = (ctx.dp_axes, ctx.tp_axis) if ctx is not None else (None, None)
+    sp = lambda a: parallel.hint(a, ctx, dp, tp)  # noqa: E731  (B, S/tp, D)
+    x = sp(x)
+    h, wkv, tm_shift = ssm.rwkv_time_mix(
+        p["tm"], _norm(p["ln1"], x, cfg), cfg,
+        state=st.get("wkv"), shift_prev=st.get("tm_shift"), ctx=ctx,
+    )
+    x = sp(x + sp(h))
+    h, cm_shift = ssm.rwkv_channel_mix(
+        p["cm"], _norm(p["ln2"], x, cfg), cfg, shift_prev=st.get("cm_shift"),
+        ctx=ctx,
+    )
+    x = common.grad_dtype_barrier(sp(x + h))
+    new_state = {"wkv": wkv, "tm_shift": tm_shift, "cm_shift": cm_shift}
+    return x, new_state
+
+
+def hymba_block(
+    p, x, cfg: ModelConfig, *, window, mode: str, cache=None, pos=None, cache_len=0
+):
+    h = _norm(p["ln1"], x, cfg)
+    st = cache or {}
+    if mode == "decode":
+        a, kv = attn_lib.attention_decode(
+            p["attn"], h, {"k": st["k"], "v": st["v"]}, pos, cfg, window=window
+        )
+    else:
+        a, kv = attn_lib.attention_full(
+            p["attn"], h, cfg, window=window,
+            return_cache=(mode == "prefill"), cache_len=cache_len,
+        )
+    s, ssm_state, conv_state = ssm.mamba(
+        p["mamba"], h, cfg, state=st.get("ssm"), conv_state=st.get("conv")
+    )
+    fused = 0.5 * (
+        common.rms_norm(a, p["attn_out_norm"], cfg.norm_eps)
+        + common.rms_norm(s, p["ssm_out_norm"], cfg.norm_eps)
+    )
+    x = x + fused
+    x = common.grad_dtype_barrier(
+        x + ffn.dense_ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg)
+    )
+    new_cache = None
+    if mode != "train":
+        new_cache = {"ssm": ssm_state, "conv": conv_state}
+        if kv is not None:
+            new_cache.update(kv)
+        elif mode == "decode":
+            new_cache.update({"k": st["k"], "v": st["v"]})
+    return x, new_cache
+
+
+def encoder_block(p, x, cfg: ModelConfig):
+    h = _norm(p["ln1"], x, cfg)
+    a, _ = attn_lib.attention_full(p["attn"], h, cfg, window=BIG_WINDOW,
+                                   causal=False, use_rope=False)
+    x = x + a
+    x = x + ffn.dense_ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg)
+    return common.grad_dtype_barrier(x)
+
+
+def decoder_block(
+    p, x, enc_out, cfg: ModelConfig, *, mode: str, cache=None, pos=None, cache_len=0
+):
+    st = cache or {}
+    h = _norm(p["ln1"], x, cfg)
+    if mode == "decode":
+        a, kv = attn_lib.attention_decode(
+            p["attn"], h, {"k": st["k"], "v": st["v"]}, pos, cfg,
+            window=BIG_WINDOW, use_rope=False,
+        )
+    else:
+        a, kv = attn_lib.attention_full(
+            p["attn"], h, cfg, window=BIG_WINDOW, use_rope=False,
+            return_cache=(mode == "prefill"), cache_len=cache_len,
+        )
+    x = x + a
+    h = _norm(p["ln_x"], x, cfg)
+    if mode == "decode":
+        c = attn_lib.cross_attention_decode(
+            p["cross"], h, {"k": st["cross_k"], "v": st["cross_v"]}, cfg
+        )
+        cross_kv = {"k": st["cross_k"], "v": st["cross_v"]}
+    else:
+        c, _ = attn_lib.attention_full(
+            p["cross"], h, cfg, window=BIG_WINDOW, kv_src=enc_out,
+            causal=False, use_rope=False,
+        )
+        cross_kv = (
+            attn_lib.precompute_cross_kv(p["cross"], enc_out, cfg)
+            if mode == "prefill"
+            else None
+        )
+    x = x + c
+    x = common.grad_dtype_barrier(
+        x + ffn.dense_ffn(p["ffn"], _norm(p["ln2"], x, cfg), cfg)
+    )
+    new_cache = None
+    if mode != "train":
+        new_cache = {}
+        if kv is not None:
+            new_cache.update(kv)
+        if cross_kv is not None:
+            new_cache["cross_k"] = cross_kv["k"]
+            new_cache["cross_v"] = cross_kv["v"]
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# scanned stacks
+# --------------------------------------------------------------------------
+
+
+def scan_stack(body, x, stacked_params, xs, cfg: ModelConfig):
+    """Run ``body(p_l, x, xs_l) -> (x, ys_l)`` over stacked layers."""
+
+    def f(carry, inputs):
+        p_l, xs_l = inputs
+        out, ys = body(p_l, carry, xs_l)
+        return out, ys
+
+    if cfg.remat:
+        f = jax.checkpoint(f, prevent_cse=False)
+    return jax.lax.scan(f, x, (stacked_params, xs))

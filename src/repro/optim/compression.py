@@ -1,0 +1,60 @@
+"""Error-feedback gradient compression for the DP all-reduce.
+
+Top-k magnitude sparsification with a residual accumulator [Stich et al.;
+Lin et al. DGC]: each step the worker sends only the largest ``ratio``
+fraction of gradient entries (per tensor) and folds the rest into a local
+residual added back next step.  Convergence-safe thanks to error feedback.
+
+Implemented as a pytree transform usable around any optimiser:
+
+    comp_state = compression.init(params)
+    grads, comp_state, stats = compression.compress(grads, comp_state, ratio)
+
+On a real multi-host run the compressed (values, indices) pairs are what
+crosses the DP axis; here the dense masked tensor stands in (the bytes
+saved are reported analytically in ``stats`` since GSPMD's all-reduce does
+not take sparse operands).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def _topk_mask(x: jnp.ndarray, ratio: float) -> jnp.ndarray:
+    n = x.size
+    k = max(int(n * ratio), 1)
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress(grads, residual, ratio: float = 0.01):
+    """Returns (sparse_grads, new_residual, stats)."""
+
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = _topk_mask(acc, ratio)
+        sent = acc * mask
+        return sent.astype(g.dtype), acc - sent, mask.sum()
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    sent = tdef.unflatten([o[0] for o in out])
+    new_res = tdef.unflatten([o[1] for o in out])
+    total = sum(int(g.size) for g in flat_g)
+    kept = sum(o[2] for o in out)
+    stats = {
+        "kept_fraction": kept / total,
+        # Bytes over the DP axis if sent as (f16 value, i32 index) pairs:
+        "compressed_bytes": kept * 6.0,
+        "dense_bytes": float(total * 2),
+    }
+    return sent, new_res, stats

@@ -1,0 +1,113 @@
+"""Elastic scaling and straggler policy for multi-pod training.
+
+On node failure (or planned resize), the runtime must pick a new mesh from
+the surviving hosts, re-shard the checkpointed state onto it, and resume
+the data stream exactly where it stopped.  The pieces:
+
+* ``plan_mesh``  -- largest valid (pod, data, model) factorisation of the
+  surviving chip count, preferring to keep the model axis intact (changing
+  TP degree would invalidate compiled kernels' efficiency assumptions and
+  expert divisibility), shedding data-parallel replicas instead.
+* ``remesh_plan`` -- describes what changes: dp_size, per-shard batch rows,
+  whether recompilation is required.
+* ``StragglerMonitor`` -- CARE-style detection: per-host step-duration
+  approximations are maintained from sparse reports (ET-x: a host reports
+  only when its deviation from its last report exceeds x standard
+  deviations -- the paper's error-triggered pattern applied to telemetry),
+  and persistent stragglers are proposed for eviction, triggering an
+  elastic re-plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    pods: int
+    data: int
+    model: int
+    dropped_chips: int
+
+    @property
+    def chips(self) -> int:
+        return self.pods * self.data * self.model
+
+
+def plan_mesh(
+    available_chips: int,
+    *,
+    model_axis: int = 16,
+    chips_per_pod: int = 256,
+    global_batch: int = 256,
+) -> MeshPlan:
+    """Largest usable mesh: keep TP fixed, shrink DP to what divides."""
+    if available_chips < model_axis:
+        raise ValueError(f"need at least {model_axis} chips (TP axis)")
+    pods = max(available_chips // chips_per_pod, 1)
+    per_pod = min(available_chips // pods, chips_per_pod)
+    data = per_pod // model_axis
+    # dp must divide the global batch to keep the stream re-shardable
+    while data > 1 and global_batch % (data * pods):
+        data -= 1
+    used = pods * data * model_axis
+    return MeshPlan(
+        pods=pods, data=data, model=model_axis,
+        dropped_chips=available_chips - used,
+    )
+
+
+def remesh_plan(old: MeshPlan, new: MeshPlan) -> dict:
+    return {
+        "recompile": (old.model != new.model) or (old.data != new.data)
+        or (old.pods != new.pods),
+        "dp_old": old.pods * old.data,
+        "dp_new": new.pods * new.data,
+        "reshard_params": old.model != new.model,
+        "chips": (old.chips, new.chips),
+    }
+
+
+class StragglerMonitor:
+    """ET-x telemetry: hosts report step time only on significant drift."""
+
+    def __init__(self, num_hosts: int, et_threshold: float = 3.0,
+                 evict_after: int = 5, slow_factor: float = 1.5):
+        self.approx = np.zeros(num_hosts)  # balancer-side approximation
+        self.et_threshold = et_threshold
+        self.evict_after = evict_after
+        self.slow_factor = slow_factor
+        self.strikes = np.zeros(num_hosts, dtype=int)
+        self.messages = 0
+        self.observations = 0
+
+    def host_report(self, host: int, step_time: float) -> bool:
+        """Host-side trigger: report iff |obs - approx| > x * sigma.
+
+        The very first observation of a host always reports (the monitor
+        has no state to emulate from -- cold-starting silently would skew
+        the fleet median).  Returns True if a message was sent.
+        """
+        self.observations += 1
+        sigma = max(self.approx.std(), 1e-3)
+        first = self.approx[host] == 0
+        if first or abs(step_time - self.approx[host]) > self.et_threshold * sigma:
+            self.approx[host] = step_time
+            self.messages += 1
+            return True
+        return False
+
+    def evictions(self) -> list[int]:
+        """Hosts persistently slower than slow_factor x median."""
+        med = np.median(self.approx[self.approx > 0]) if (self.approx > 0).any() else 0
+        if med <= 0:
+            return []
+        slow = self.approx > self.slow_factor * med
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        return [int(h) for h in np.nonzero(self.strikes >= self.evict_after)[0]]
+
+    @property
+    def message_rate(self) -> float:
+        return self.messages / max(self.observations, 1)

@@ -1,0 +1,144 @@
+"""Train-step factory: loss -> grads -> AdamW -> CARE balancer advance.
+
+Two compiled programs implement the paper's sparse synchronisation at the
+framework level (DESIGN.md Section 2.1):
+
+* ``train_step``      -- no balancer sync: the only cross-device traffic is
+  the gradient reduction and the MoE all-to-alls; the balancer advances by
+  local emulation (the paper's approximation component).
+* ``train_step_sync`` -- additionally snaps the balancer approximation to
+  the exact global counts (the (L, DP, TP, E) -> (L, E) reduction is the
+  paper's "message").
+
+The host-side loop (``launch/train.py``) picks the program per step from
+the DT-x schedule or the ET-x trigger scalar returned in the metrics --
+the 1-bit flag that replaces the full sync on quiet steps.
+
+Microbatch gradient accumulation runs as a ``lax.scan`` over microbatches
+with the optimiser applied once -- the standard memory/efficiency shape for
+large-batch training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import moe_balancer
+from repro.models import model
+from repro.models.parallel import ParallelContext
+from repro.optim import adamw
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.OptState
+    balancer: Optional[moe_balancer.BalancerState]
+    step: jnp.ndarray
+
+
+def init_state(key, cfg: ModelConfig, ctx: Optional[ParallelContext] = None):
+    params = model.init_params(key, cfg)
+    bal = None
+    if cfg.moe:
+        l = model.num_scanned_layers(cfg)
+        e = cfg.n_routed_experts
+        shape = (l, e) if ctx is None else (l, ctx.dp_size, ctx.tp_size, e)
+        z = jnp.zeros(shape, jnp.float32)
+        bal = moe_balancer.BalancerState(
+            load_approx=z,
+            true_load=z,
+            true_counts=z,
+            bias=z,
+            steps_since_sync=jnp.zeros((), jnp.int32),
+        )
+    return TrainState(
+        params=params,
+        opt=adamw.init(params),
+        balancer=bal,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptimConfig,
+    ctx: Optional[ParallelContext] = None,
+    *,
+    sync: bool = False,
+    microbatches: int = 1,
+):
+    """Build the jittable step.  ``sync`` selects the balancer-sync program."""
+
+    def loss_fn(params, batch, bias):
+        loss, aux = model.train_loss(params, batch, cfg, ctx, bias)
+        return loss, aux
+
+    def step_fn(state: TrainState, batch):
+        bias = None
+        if cfg.moe and state.balancer is not None:
+            bias = moe_balancer.selection_bias(state.balancer, cfg.care)
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        if microbatches == 1:
+            (loss, aux), grads = grad_fn(state.params, batch, bias)
+            counts = aux["counts"]
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+
+            def acc(carry, mbatch):
+                g_acc, loss_acc, counts_acc = carry
+                (loss, aux), g = grad_fn(state.params, mbatch, bias)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                c = aux["counts"]
+                counts_acc = counts_acc + c if c is not None else counts_acc
+                return (g_acc, loss_acc + loss, counts_acc), None
+
+            zero_c = (
+                jnp.zeros_like(state.balancer.true_counts)
+                if state.balancer is not None
+                else jnp.zeros(())
+            )
+            (grads, loss, counts), _ = jax.lax.scan(
+                acc, (zero_g, jnp.zeros(()), zero_c), mb
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            counts = counts if state.balancer is not None else None
+
+        params, opt, opt_metrics = adamw.update(grads, state.opt, state.params, opt_cfg)
+
+        balancer = state.balancer
+        trigger = jnp.zeros((), bool)
+        if balancer is not None and counts is not None:
+            balancer = moe_balancer.post_step_update(balancer, counts, cfg.care)
+            trigger = moe_balancer.needs_sync(balancer, cfg.care)
+            if sync:
+                balancer = moe_balancer.sync(balancer, cfg.care)
+
+        metrics = {
+            "loss": loss,
+            "sync_trigger": trigger,
+            **opt_metrics,
+        }
+        new_state = TrainState(
+            params=params, opt=opt, balancer=balancer, step=state.step + 1
+        )
+        return new_state, metrics
+
+    return step_fn

@@ -1,0 +1,142 @@
+"""Hypothesis property tests for CARE invariants.
+
+Rather than driving the full simulator through hypothesis (slow under jit),
+these test the *approximation component* state machine directly on random
+arrival/departure sample paths, checking the paper's structural identities:
+
+* Eq. (11): the error depends only on true-vs-emulated departure counts.
+* Prop 6.7 / Eq. (18): deterministic AQ bounds for DT-x and ET-x.
+* Prop 6.4 / 6.8: message-count bounds.
+* Flow conservation (Eq. 1).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.care import approx as approx_lib
+
+
+def _replay(arrivals, services, x, kind, comm, msr_slots=4):
+    """Replay a single-server sample path through the emulation machinery.
+
+    arrivals: list[bool] per slot; services: per-job sizes (slots).
+    Returns (max_err_end_of_slot, messages, departures).
+    """
+    acfg = approx_lib.ApproxConfig(kind=kind, msr_slots=msr_slots, x=x)
+    emu = approx_lib.EmuState.init(jnp.zeros((1,), jnp.int32), acfg)
+    q_true = 0
+    head_rem = 0
+    fifo: list[int] = []
+    deps_since = 0
+    msgs = 0
+    deps = 0
+    max_err = 0
+    job = 0
+    for arr in arrivals:
+        if arr:
+            size = services[job % len(services)]
+            job += 1
+            fifo.append(size)
+            if q_true == 0:
+                head_rem = size
+            q_true += 1
+            emu = approx_lib.emu_arrival(emu, jnp.array(0), acfg)
+        if q_true > 0:
+            head_rem -= 1
+            if head_rem <= 0:
+                q_true -= 1
+                deps += 1
+                deps_since += 1
+                fifo.pop(0)
+                head_rem = fifo[0] if fifo else 0
+        emu = approx_lib.emu_drain_slot(emu, acfg)
+        err = int(abs(q_true - int(emu.q_app[0])))
+        if comm == "dt":
+            trig = deps_since >= x
+        elif comm == "et":
+            trig = err >= x
+        else:
+            trig = False
+        if trig:
+            msgs += 1
+            deps_since = 0
+            emu = approx_lib.emu_message_reset(
+                emu, jnp.array([q_true], jnp.int32), jnp.array([True]), acfg
+            )
+        max_err = max(max_err, int(abs(q_true - int(emu.q_app[0]))))
+    return max_err, msgs, deps
+
+
+path = st.lists(st.booleans(), min_size=10, max_size=120)
+sizes = st.lists(st.integers(1, 9), min_size=1, max_size=40)
+xs = st.integers(2, 5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(path, sizes, xs, st.sampled_from(["basic", "msr_x"]))
+def test_thm23_aq_bound(arrivals, services, x, kind):
+    """DT-x with basic/MSR-x keeps end-of-slot error <= x-1 on ANY path."""
+    max_err, msgs, deps = _replay(arrivals, services, x, kind, "dt")
+    assert max_err <= x - 1
+    assert msgs <= deps // x + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(path, sizes, xs, st.sampled_from(["basic", "msr", "msr_x"]))
+def test_et_aq_bound_any_emulation(arrivals, services, x, kind):
+    """ET-x bounds the error for ANY emulation algorithm (Prop 6.8)."""
+    max_err, _, _ = _replay(arrivals, services, x, kind, "et")
+    assert max_err <= x - 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(path, sizes, xs)
+def test_et_msrx_message_bound(arrivals, services, x):
+    """ET-x + MSR-x: emulated deps capped at x-1 so a message needs >= x
+    true departures (Sec 6.4): M <= D/x (+1 boundary)."""
+    _, msgs, deps = _replay(arrivals, services, x, "msr_x", "et")
+    assert msgs <= deps // x + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(path, sizes)
+def test_basic_overestimates(arrivals, services):
+    """The basic approximation can never under-estimate the queue."""
+    acfg = approx_lib.ApproxConfig(kind="basic", msr_slots=4, x=3)
+    emu = approx_lib.EmuState.init(jnp.zeros((1,), jnp.int32), acfg)
+    q_true, head_rem, fifo = 0, 0, []
+    job = 0
+    for arr in arrivals:
+        if arr:
+            size = services[job % len(services)]
+            job += 1
+            fifo.append(size)
+            if q_true == 0:
+                head_rem = size
+            q_true += 1
+            emu = approx_lib.emu_arrival(emu, jnp.array(0), acfg)
+        if q_true > 0:
+            head_rem -= 1
+            if head_rem <= 0:
+                q_true -= 1
+                fifo.pop(0)
+                head_rem = fifo[0] if fifo else 0
+        emu = approx_lib.emu_drain_slot(emu, acfg)
+        assert int(emu.q_app[0]) >= q_true
+
+
+@settings(max_examples=20, deadline=None)
+@given(path, sizes, st.integers(2, 4))
+def test_msrx_truncation(arrivals, services, x):
+    """MSR-x never emulates more than x-1 departures between messages."""
+    acfg = approx_lib.ApproxConfig(kind="msr_x", msr_slots=2, x=x)
+    emu = approx_lib.EmuState.init(jnp.zeros((1,), jnp.int32), acfg)
+    for arr in arrivals:
+        if arr:
+            emu = approx_lib.emu_arrival(emu, jnp.array(0), acfg)
+        emu = approx_lib.emu_drain_slot(emu, acfg)
+        assert int(emu.emu_deps[0]) <= x - 1
+        assert int(emu.q_app[0]) >= 0

@@ -1,0 +1,135 @@
+"""Behaviour tests for the CARE slotted simulator against the paper's claims."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, simulate
+from repro.core.care import metrics, theory
+
+KEY = jax.random.key(7)
+T = 30_000
+
+
+def _run(**kw):
+    return simulate(KEY, SimConfig(slots=T, **kw))
+
+
+class TestTheorem23:
+    """DT-x / ET-x with basic or MSR-x: AQ <= x-1 and M <= D/x, always."""
+
+    @pytest.mark.parametrize("comm", ["dt", "et"])
+    @pytest.mark.parametrize("approx", ["basic", "msr_x"])
+    @pytest.mark.parametrize("x", [2, 3, 5])
+    def test_bounds(self, comm, approx, x):
+        r = _run(load=0.9, policy="jsaq", comm=comm, approx=approx, x=x)
+        assert r.max_aq <= x - 1
+        assert r.messages <= r.departures / x + 1
+        assert not r.overflow
+
+    def test_et_any_emulation_bounded(self):
+        # Prop 6.8: ET-x bounds AQ for ANY emulation algorithm, incl. MSR.
+        for x in (2, 4):
+            r = _run(load=0.95, policy="jsaq", comm="et", approx="msr", x=x)
+            assert r.max_aq <= x - 1
+
+
+class TestTheorem25:
+    """ET-x + MSR: relative communication decays quadratically (heavy load)."""
+
+    def test_quadratic_decay(self):
+        rel = {}
+        for x in (2, 4, 8):
+            r = _run(load=0.95, policy="jsaq", comm="et", approx="msr", x=x)
+            rel[x] = r.msgs_per_departure
+        # Monotone and at least quadratically decreasing between x and 2x.
+        assert rel[4] < rel[2] / 2.5
+        assert rel[8] < rel[4] / 2.5
+        # Paper abstract: error <= 2 (x=3) with < ~17% of full communication.
+        r3 = _run(load=0.95, policy="jsaq", comm="et", approx="msr", x=3)
+        assert r3.msgs_per_departure < theory.et_msr_relative_comm_backlogged(3)
+
+    def test_below_heavy_load_bound(self):
+        # Fig 6: measured communication is below the 1/(x^2-x) upper bound.
+        for x in (3, 5):
+            r = _run(load=0.95, policy="jsaq", comm="et", approx="msr", x=x)
+            assert r.msgs_per_departure <= theory.et_msr_relative_comm_backlogged(x)
+
+
+class TestPerformanceOrdering:
+    """Fig 3: JSQ <= JSAQ(ET-3, MSR) <= SQ2-ish << RR << Random at high load."""
+
+    @pytest.fixture(scope="class")
+    def results(self):
+        out = {}
+        out["jsq"] = _run(load=0.95, policy="jsq", comm="none")
+        out["jsaq"] = _run(load=0.95, policy="jsaq", comm="et", x=3, approx="msr")
+        out["sq2"] = _run(load=0.95, policy="sq2", comm="none")
+        out["rr"] = _run(load=0.95, policy="rr", comm="none")
+        out["random"] = _run(load=0.95, policy="random", comm="none")
+        return out
+
+    def test_jsq_best(self, results):
+        m = {k: metrics.jct_summary(v.jct)["mean"] for k, v in results.items()}
+        assert m["jsq"] <= m["jsaq"] <= m["rr"]
+        assert m["rr"] < m["random"]
+
+    def test_jsaq_beats_sq2_with_sparse_comm(self, results):
+        # The headline: JSAQ + ET-3 + MSR rivals SQ(2) using ~10% of the
+        # communication JSQ needs (SQ(2) itself needs >= 1 msg/job).
+        m_jsaq = metrics.jct_summary(results["jsaq"].jct)["mean"]
+        m_sq2 = metrics.jct_summary(results["sq2"].jct)["mean"]
+        assert m_jsaq <= m_sq2 * 1.10
+        assert results["jsaq"].msgs_per_departure < 0.15
+
+    def test_mass_conservation(self, results):
+        for name, r in results.items():
+            assert r.arrivals == r.departures + int(r.final_q.sum()), name
+
+
+class TestApproximationSemantics:
+    def test_basic_never_underestimates(self):
+        # Basic approx >= true queue always  =>  JSAQ w/ basic + frequent DT
+        # cannot misroute to a long queue believed short; check via max_aq==
+        # deps-since-msg bound and via a direct invariant run.
+        r = _run(load=0.8, policy="jsaq", comm="dt", approx="basic", x=3)
+        assert r.max_aq <= 2
+
+    def test_jsaq_equals_jsq_with_x1(self):
+        # ET-1 forces a message on any error: approximations are exact at
+        # slot ends, so JSAQ makes the same decisions as JSQ.
+        r_jsaq = _run(load=0.9, policy="jsaq", comm="et", approx="msr", x=1)
+        r_jsq = _run(load=0.9, policy="jsq", comm="none")
+        m1 = metrics.jct_summary(r_jsaq.jct)["mean"]
+        m2 = metrics.jct_summary(r_jsq.jct)["mean"]
+        assert abs(m1 - m2) / m2 < 0.05
+        assert r_jsaq.max_aq == 0
+
+    def test_rt_has_no_deterministic_bound_but_tracks(self):
+        r = _run(load=0.9, policy="jsaq", comm="rt", rt_rate=0.02, approx="msr")
+        # No deterministic guarantee (Sec 6.2) -- just sanity: errors finite,
+        # system stable.
+        assert r.max_aq < r.max_queue + 1
+        assert not r.overflow
+
+
+class TestSSC:
+    """Finite-n trend of Theorem 7.3: queue gap stays o(sqrt(n))."""
+
+    def test_gap_shrinks_in_diffusion_scale(self):
+        # n indexes the event rate; in slot units we scale horizon and mean
+        # service together, keeping per-unit-time rates Theta(n).
+        gaps = []
+        for n, slots in [(1, 20_000), (4, 80_000)]:
+            cfg = SimConfig(
+                servers=10,
+                slots=slots,
+                load=0.95,
+                mean_service=10 * n,
+                policy="jsaq",
+                comm="et",
+                x=2,
+                approx="msr",
+            )
+            r = simulate(KEY, cfg)
+            gaps.append(r.queue_gap_sup / np.sqrt(n))
+        assert gaps[1] <= gaps[0] * 1.5  # scaled gap does not blow up

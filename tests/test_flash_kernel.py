@@ -1,0 +1,69 @@
+"""Pallas flash-attention kernel vs the pure-jnp oracle (interpret=True).
+
+Shape/dtype sweep per the kernel-testing contract: every (S, T, heads,
+GQA group, dtype, mask variant) cell asserts allclose against
+``kernels.ref.flash_attention_ref``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _qkv(key, b, s, t, h, kvh, dh, dv, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, t, kvh, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, t, kvh, dv), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _run(q, k, v, **kw):
+    scale = kw.pop("scale", 1.0 / q.shape[-1] ** 0.5)
+    out = ops.flash_attention(q, k, v, scale=scale, interpret=True, **kw)
+    want = ref.flash_attention_ref(q, k, v, scale=scale, **kw)
+    tol = 2e-2 if q.dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,t", [(128, 128), (128, 256), (256, 128)])
+def test_flash_kernel_causal(dtype, s, t):
+    if t < s:
+        pytest.skip("queries beyond keys are fully masked")
+    q, k, v = _qkv(jax.random.key(0), 2, s, t, 4, 4, 64, 64, dtype)
+    _run(q, k, v, causal=True)
+
+
+@pytest.mark.parametrize("g", [2, 4])
+def test_flash_kernel_gqa(g):
+    q, k, v = _qkv(jax.random.key(1), 1, 128, 256, 4, 4 // g, 32, 32,
+                   jnp.float32)
+    _run(q, k, v, causal=True)
+
+
+def test_flash_kernel_window():
+    q, k, v = _qkv(jax.random.key(2), 1, 256, 256, 2, 2, 64, 64, jnp.float32)
+    _run(q, k, v, causal=True, window=100)
+
+
+def test_flash_kernel_softcap():
+    q, k, v = _qkv(jax.random.key(3), 1, 128, 128, 2, 2, 64, 64, jnp.float32)
+    _run(q, k, v, causal=True, softcap=50.0)
+
+
+def test_flash_kernel_non_causal():
+    q, k, v = _qkv(jax.random.key(4), 1, 128, 256, 2, 2, 64, 128,
+                   jnp.float32)
+    _run(q, k, v, causal=False)
+
+
+def test_flash_kernel_rejects_ragged():
+    q, k, v = _qkv(jax.random.key(5), 1, 96, 128, 2, 2, 64, 64, jnp.float32)
+    with pytest.raises(ValueError):
+        ops.flash_attention(q, k, v, scale=0.125, interpret=True)

@@ -1,0 +1,208 @@
+"""Unit + property tests for the CARE MoE balancer and the dispatch sim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import CareConfig
+from repro.core import moe_balancer
+from repro.core.dispatch_sim import DispatchSimConfig, simulate
+
+
+def _state(l=2, e=8):
+    return moe_balancer.BalancerState.init(l, e)
+
+
+class TestSelectionBias:
+    def test_zero_when_balanced(self):
+        s = _state()
+        s = dataclasses.replace(s, load_approx=jnp.full((2, 8), 5.0))
+        b = moe_balancer.selection_bias(s, CareConfig())
+        np.testing.assert_allclose(np.asarray(b), 0.0, atol=1e-5)
+
+    def test_positive_for_overloaded(self):
+        s = _state(1, 4)
+        s = dataclasses.replace(
+            s, load_approx=jnp.asarray([[10.0, 1.0, 1.0, 1.0]])
+        )
+        b = np.asarray(moe_balancer.selection_bias(s, CareConfig()))
+        assert b[0, 0] > 0 and (b[0, 1:] < 0).all()
+
+    def test_disabled_is_zero(self):
+        s = _state()
+        s = dataclasses.replace(
+            s, load_approx=jax.random.uniform(jax.random.key(0), (2, 8))
+        )
+        b = moe_balancer.selection_bias(s, CareConfig(enabled=False))
+        assert not np.asarray(b).any()
+
+    def test_clip_bounds_proportional_term(self):
+        cfg = CareConfig(bias_alpha=0.3, bias_clip=2.0)
+        s = _state(1, 4)
+        s = dataclasses.replace(
+            s, load_approx=jnp.asarray([[1000.0, 0.0, 0.0, 0.0]])
+        )
+        b = np.asarray(moe_balancer.selection_bias(s, cfg))
+        assert np.abs(b).max() <= cfg.bias_alpha * cfg.bias_clip + 1e-6
+
+
+class TestPostStepUpdate:
+    def test_drain_and_accumulate(self):
+        cfg = CareConfig(drain=0.5, gamma=0.0)
+        s = _state(1, 4)
+        counts = jnp.asarray([[4.0, 0.0, 0.0, 0.0]])
+        s = moe_balancer.post_step_update(s, counts, cfg)
+        np.testing.assert_allclose(np.asarray(s.load_approx[0, 0]), 2.0)
+        np.testing.assert_allclose(np.asarray(s.true_counts), np.asarray(counts))
+        assert int(s.steps_since_sync) == 1
+
+    def test_integral_bias_zero_mean(self):
+        cfg = CareConfig(gamma=0.1)
+        s = _state(1, 4)
+        for _ in range(5):
+            s = moe_balancer.post_step_update(
+                s, jnp.asarray([[8.0, 2.0, 1.0, 1.0]]), cfg
+            )
+        b = np.asarray(s.bias)
+        np.testing.assert_allclose(b.mean(axis=-1), 0.0, atol=1e-5)
+        assert b[0, 0] > 0  # persistently overloaded expert accumulates bias
+
+    def test_integral_cancels_persistent_skew(self):
+        """PI controller drives a constant-skew dispatch toward balance."""
+        cfg = CareConfig(bias_alpha=0.3, gamma=0.05)
+        s = _state(1, 8)
+        skew = jnp.asarray([2.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, -1.0])
+        tokens = 256
+
+        def dispatch(bias):
+            # Soft router: counts proportional to softmax(skew - bias).
+            p = jax.nn.softmax(skew - bias[0])
+            return (tokens * p)[None, :]
+
+        imb0 = imb = None
+        for i in range(200):
+            counts = dispatch(moe_balancer.selection_bias(s, cfg))
+            s = moe_balancer.post_step_update(s, counts, cfg)
+            imb = float(jnp.max(counts) / jnp.mean(counts))
+            if i == 0:
+                imb0 = imb
+        assert imb0 > 2.0  # skewed at the start
+        assert imb < 1.15  # integral bias cancelled the skew
+
+
+class TestSync:
+    def test_single_dispatcher_snap_is_noop(self):
+        """Remark 4.6: one dispatcher knows everything -- nothing to learn."""
+        cfg = CareConfig()
+        s = _state(1, 4)
+        for c in ([[3.0, 1.0, 0.0, 0.0]], [[0.0, 2.0, 2.0, 0.0]]):
+            s = moe_balancer.post_step_update(s, jnp.asarray(c), cfg)
+        before = np.asarray(s.load_approx)
+        s2 = moe_balancer.sync(s, cfg)
+        np.testing.assert_allclose(np.asarray(s2.load_approx), before)
+        assert int(s2.steps_since_sync) == 0
+        assert not np.asarray(s2.true_counts).any()
+
+    def test_multi_dispatcher_snap_to_global_mean(self):
+        cfg = CareConfig()
+        z = jnp.zeros((1, 2, 1, 4), jnp.float32)
+        s = moe_balancer.BalancerState(
+            load_approx=z,
+            true_load=jnp.asarray(
+                [[[[4.0, 0.0, 0.0, 0.0]], [[0.0, 4.0, 0.0, 0.0]]]]
+            ),
+            true_counts=z,
+            bias=z,
+            steps_since_sync=jnp.asarray(3, jnp.int32),
+        )
+        s2 = moe_balancer.sync(s, cfg)
+        got = np.asarray(s2.load_approx)
+        np.testing.assert_allclose(got[0, 0, 0], [2.0, 2.0, 0.0, 0.0])
+        np.testing.assert_allclose(got[0, 1, 0], [2.0, 2.0, 0.0, 0.0])
+
+
+class TestNeedsSync:
+    def test_dt_counts_steps(self):
+        cfg = CareConfig(comm="dt", x=3)
+        s = _state()
+        for i in range(3):
+            assert not bool(moe_balancer.needs_sync(s, cfg)) or i == 3
+            s = moe_balancer.post_step_update(s, jnp.ones((2, 8)), cfg)
+        assert bool(moe_balancer.needs_sync(s, cfg))
+
+    def test_et_fires_on_divergence(self):
+        cfg = CareConfig(comm="et", x=2)
+        s = _state(1, 4)
+        s = dataclasses.replace(
+            s,
+            load_approx=jnp.asarray([[0.0, 0.0, 0.0, 0.0]]),
+            true_load=jnp.asarray([[10.0, 1.0, 1.0, 0.0]]),
+        )
+        assert bool(moe_balancer.needs_sync(s, cfg))
+
+    def test_et_silent_when_exact(self):
+        cfg = CareConfig(comm="et", x=2)
+        s = _state()
+        for _ in range(10):
+            s = moe_balancer.post_step_update(s, jnp.ones((2, 8)), cfg)
+        assert not bool(moe_balancer.needs_sync(s, cfg))
+
+
+@given(
+    counts=st.lists(
+        st.lists(st.floats(0.0, 100.0), min_size=4, max_size=4),
+        min_size=1,
+        max_size=6,
+    ),
+    drain=st.floats(0.1, 0.99),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_true_load_tracks_emulation_single_dispatcher(counts, drain):
+    """With one dispatcher, load_approx == true_load at every step."""
+    cfg = CareConfig(drain=drain)
+    s = moe_balancer.BalancerState.init(1, 4)
+    for c in counts:
+        s = moe_balancer.post_step_update(s, jnp.asarray([c]), cfg)
+        np.testing.assert_allclose(
+            np.asarray(s.load_approx), np.asarray(s.true_load), rtol=1e-5
+        )
+
+
+class TestDispatchSim:
+    @pytest.fixture(scope="class")
+    def small(self):
+        return dict(experts=16, dispatchers=4, tokens_per_step=64, top_k=2,
+                    steps=200)
+
+    def test_exact_bounds_error(self, small):
+        r = simulate(0, DispatchSimConfig(comm="exact", x=1, **small))
+        # Error is measured before the snap: bounded by one step's surprise.
+        assert r.max_err < 8.0
+        assert r.msgs_per_step == small["dispatchers"]
+
+    def test_et_bounds_error_near_threshold(self, small):
+        x = 3
+        r = simulate(0, DispatchSimConfig(comm="et", x=x, **small))
+        # Between messages the error stays below x + one step's growth.
+        assert r.max_err < x + 6.0
+
+    def test_et_uses_less_communication(self, small):
+        r_et = simulate(0, DispatchSimConfig(comm="et", x=4, **small))
+        r_ex = simulate(0, DispatchSimConfig(comm="exact", x=1, **small))
+        assert r_et.messages < 0.5 * r_ex.messages
+
+    def test_bias_beats_no_bias(self, small):
+        r_b = simulate(0, DispatchSimConfig(comm="et", x=4, **small))
+        r_nb = simulate(
+            0, DispatchSimConfig(enabled=False, comm="off", **small)
+        )
+        assert r_b.tail_gap < 0.5 * r_nb.tail_gap
+
+    def test_queue_is_stable_under_balancing(self, small):
+        r = simulate(0, DispatchSimConfig(comm="et", x=4, **small))
+        # Utilisation < 1 and balanced -> backlog stays bounded (no blow-up).
+        assert r.tail_backlog < 50 * DispatchSimConfig(**small).mu

@@ -1,0 +1,81 @@
+"""Chunked-parallel WKV6 must match the sequential recurrence exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+
+def _inputs(key, b, s, h, n, decay_scale=1.0):
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, s, h, n), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, h, n), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, h, n), jnp.float32)
+    # log-decay <= 0 with realistic spread: lw = -exp(decay).
+    decay = decay_scale * jax.random.normal(ks[3], (b, s, h, n), jnp.float32)
+    lw = -jnp.exp(decay)
+    u = 0.5 * jax.random.normal(ks[4], (h, n), jnp.float32)
+    s0 = jax.random.normal(ks[5], (b, h, n, n), jnp.float32)
+    return r, k, v, lw, u, s0
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 32), (128, 32), (96, 16), (64, 64)])
+def test_chunked_matches_scan(s, chunk):
+    r, k, v, lw, u, s0 = _inputs(jax.random.key(0), 2, s, 3, 8)
+    out_seq, st_seq = ssm._wkv6_scan(r, k, v, jnp.exp(lw), u, s0)
+    out_ch, st_ch = ssm._wkv6_chunked(r, k, v, lw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out_ch), np.asarray(out_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_ch), np.asarray(st_seq),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_matches_scan_strong_decay():
+    """Large decays (w ~ 0) must stay finite and accurate.
+
+    Without the lw >= -30 clamp the in-chunk cumsum differences cancel
+    catastrophically in f32 (0.07 max error vs a float64 sequential
+    reference); with it the chunked form is within 3e-4 of float64.
+    """
+    r, k, v, lw, u, s0 = _inputs(jax.random.key(1), 1, 64, 2, 8,
+                                 decay_scale=3.0)
+    out_seq, st_seq = ssm._wkv6_scan(r, k, v, jnp.exp(lw), u, s0)
+    out_ch, st_ch = ssm._wkv6_chunked(r, k, v, lw, u, s0, chunk=32)
+    assert np.isfinite(np.asarray(out_ch)).all()
+    np.testing.assert_allclose(np.asarray(out_ch), np.asarray(out_seq),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_ch), np.asarray(st_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_grads_finite():
+    r, k, v, lw, u, s0 = _inputs(jax.random.key(2), 1, 64, 2, 8)
+
+    def loss(args):
+        r, k, v, lw = args
+        out, st = ssm._wkv6_chunked(r, k, v, lw, u, s0, chunk=32)
+        return jnp.sum(out**2) + jnp.sum(st**2)
+
+    g = jax.grad(loss)((r, k, v, lw))
+    for a in g:
+        assert np.isfinite(np.asarray(a)).all()
+
+
+def test_time_mix_dispatches_to_chunked():
+    """rwkv_time_mix output is invariant to the scan/chunked dispatch."""
+    from repro.configs import get_config
+    from repro.models import common
+
+    cfg = get_config("rwkv6-1.6b").reduced()
+    kg = common.KeyGen(jax.random.key(0))
+    p = ssm.init_rwkv_time_mix(kg, cfg)
+    b, s, d = 2, ssm.WKV_CHUNK * 2, cfg.d_model  # divisible -> chunked
+    x = 0.1 * jax.random.normal(jax.random.key(1), (b, s, d), jnp.float32)
+    out_c, st_c, _ = ssm.rwkv_time_mix(p, x, cfg)
+    # odd length -> falls back to the sequential scan
+    x2 = jnp.concatenate([x, x[:, :1]], axis=1)
+    out_s, st_s, _ = ssm.rwkv_time_mix(p, x2, cfg)
+    np.testing.assert_allclose(
+        np.asarray(out_c), np.asarray(out_s[:, : s]), rtol=2e-3, atol=2e-3
+    )
