@@ -6,26 +6,121 @@ exact-state baselines (JSQ, SQ(2), Round Robin) against CARE combinations:
 * JSAQ + ET-x + MSR    for x in {2, 3, 5, 7}   (the sparse-comm champion);
 * JSAQ + DT-x + MSR-x  for x in {2, 3, 5}      (the high-comm regime winner);
 
-reporting mean / p50 / p99 / p99.9 JCT, the measured relative communication,
-and the headline checks from the paper:
+reporting mean / p50 / p99 / p99.9 JCT (pooled over a seed sweep run as one
+``simulate_batch`` vmapped scan), the measured relative communication, and
+the headline checks from the paper:
 
 * ET-3 + MSR rivals SQ(2) (mean JCT within ~10%) using ~10% of JSQ's
   messages (Fig 3 / Fig 10);
 * ET-x + MSR still beats Round Robin at < 2% relative communication
   (Fig 10 / Fig 12).
+
+Beyond the paper, two scenario rows exercise the workload layer end to end
+at load 0.95: ``bursty`` (MMPP-modulated arrivals, burst_intensity 1.7) and
+``hetero`` (half the servers at rate 1.5x, half at 0.5x, with drain-time
+aware JSAQ) -- both still satisfy the ET error bound.
+
+In quick mode the module also measures the ``simulate_batch`` speedup: 8
+seeds in one batched (and, when multiple local devices are visible,
+pmap-sharded) scan vs 8 sequential ``simulate`` calls (row
+``jct/batch_speedup``; both paths pre-warmed so jit compilation is
+excluded, best-of-3 each).  The speedup scales with the device count the
+harness exposes (``benchmarks/run.py`` forces one XLA CPU device per core):
+the scan body fuses into a compute-bound loop, so on CPU the win comes
+from device-level parallelism, not from vmap alone.
 """
 from __future__ import annotations
 
+import time
+
+import jax
 import numpy as np
 
 from benchmarks import common
 from repro.core.care import metrics, slotted_sim
+
+SEEDS = (0, 1, 2, 3)
+SPEEDUP_SEEDS = tuple(range(100, 108))
 
 
 def _cfg(slots, load, **kw):
     return slotted_sim.SimConfig(
         servers=common.SERVERS, slots=slots, load=load, **kw
     )
+
+
+def _pooled(results):
+    """Pool JCT samples and average scalar metrics over a seed sweep."""
+    jct = np.concatenate([r.jct for r in results]) if results else np.array([])
+    return jct
+
+
+def _mean_rel(results, policy, sqd):
+    return float(
+        np.mean([metrics.relative_communication(r, policy, sqd) for r in results])
+    )
+
+
+def _batch_speedup_row(slots: int) -> dict:
+    """8 sequential simulate() calls vs one simulate_batch() over 8 seeds."""
+    cfg = _cfg(slots, 0.95, policy="jsaq", comm="et", x=3, approx="msr")
+    # Warm both jit caches (same batch width!) so the timing excludes
+    # compilation, then take the best of a few repetitions of each path.
+    slotted_sim.simulate(jax.random.key(999), cfg)
+    slotted_sim.simulate_batch([900 + s for s in range(len(SPEEDUP_SEEDS))], cfg)
+
+    t_seq = float("inf")
+    t_batch = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        seq = [
+            slotted_sim.simulate(jax.random.key(s), cfg) for s in SPEEDUP_SEEDS
+        ]
+        t_seq = min(t_seq, time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        batch = slotted_sim.simulate_batch(list(SPEEDUP_SEEDS), cfg)
+        t_batch = min(t_batch, time.perf_counter() - t0)
+
+    # vmap is semantics-preserving: the batch must reproduce the sequential
+    # runs exactly, otherwise the speedup row is meaningless.
+    agree = all(
+        s.messages == b.messages and s.max_aq == b.max_aq
+        for s, b in zip(seq, batch)
+    )
+    return common.row(
+        "jct/batch_speedup",
+        t_batch,
+        slots * len(SPEEDUP_SEEDS),
+        common.fmt_derived(
+            seeds=len(SPEEDUP_SEEDS),
+            devices=jax.local_device_count(),
+            t_seq_s=t_seq,
+            t_batch_s=t_batch,
+            speedup=t_seq / max(t_batch, 1e-9),
+            batch_matches_sequential=agree,
+        ),
+        speedup=t_seq / max(t_batch, 1e-9),
+    )
+
+
+def _scenario_variants(slots):
+    hetero_rates = tuple(1.5 if i < common.SERVERS // 2 else 0.5
+                         for i in range(common.SERVERS))
+    return [
+        ("bursty/et3_msr",
+         _cfg(slots, 0.95, policy="jsaq", comm="et", x=3, approx="msr",
+              arrival="mmpp", burst_intensity=1.7)),
+        ("bursty/sq2",
+         _cfg(slots, 0.95, policy="sq2", comm="none",
+              arrival="mmpp", burst_intensity=1.7)),
+        ("hetero/et3_msr",
+         _cfg(slots, 0.95, policy="jsaq", comm="et", x=3, approx="msr",
+              service_rates=hetero_rates)),
+        ("hetero/sq2",
+         _cfg(slots, 0.95, policy="sq2", comm="none",
+              service_rates=hetero_rates)),
+    ]
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -52,19 +147,21 @@ def run(quick: bool = False) -> list[dict]:
 
         results = {}
         for name, cfg in variants:
-            res, wall = common.timed_simulate(0, cfg)
+            res, wall = common.timed_simulate_batch(SEEDS, cfg)
             results[name] = res
-            summ = metrics.jct_summary(res.jct)
-            rel = metrics.relative_communication(res, cfg.policy, cfg.sqd)
+            jct = _pooled(res)
+            summ = metrics.jct_summary(jct)
+            rel = _mean_rel(res, cfg.policy, cfg.sqd)
             rows.append(
                 common.row(
                     f"jct/load{load}/{name}",
                     wall,
-                    slots,
+                    slots * len(SEEDS),
                     common.fmt_derived(
                         mean_jct=summ["mean"],
                         p99=summ["p99"],
                         rel_comm=rel,
+                        seeds=len(SEEDS),
                     ),
                     mean_jct=summ["mean"],
                     p50=summ["p50"],
@@ -76,13 +173,17 @@ def run(quick: bool = False) -> list[dict]:
 
         # Headline checks (paper Figs 3 / 10 / 12), evaluated at this load.
         if "et3_msr" in results:
-            m_et3 = float(np.mean(results["et3_msr"].jct))
-            m_sq2 = float(np.mean(results["sq2"].jct))
-            m_rr = float(np.mean(results["rr"].jct))
-            rel3 = results["et3_msr"].msgs_per_departure
+            m_et3 = float(_pooled(results["et3_msr"]).mean())
+            m_sq2 = float(_pooled(results["sq2"]).mean())
+            m_rr = float(_pooled(results["rr"]).mean())
+            rel3 = float(np.mean(
+                [r.msgs_per_departure for r in results["et3_msr"]]
+            ))
             sparse_name = f"et{max(et_xs)}_msr"
-            m_sparse = float(np.mean(results[sparse_name].jct))
-            rel_sparse = results[sparse_name].msgs_per_departure
+            m_sparse = float(_pooled(results[sparse_name]).mean())
+            rel_sparse = float(np.mean(
+                [r.msgs_per_departure for r in results[sparse_name]]
+            ))
             rows.append(
                 common.row(
                     f"jct/load{load}/headline",
@@ -100,4 +201,33 @@ def run(quick: bool = False) -> list[dict]:
                     ),
                 )
             )
+
+    # Scenario layer: bursty arrivals and heterogeneous service rates,
+    # end to end through simulate_batch.
+    for name, cfg in _scenario_variants(slots):
+        res, wall = common.timed_simulate_batch(SEEDS, cfg)
+        jct = _pooled(res)
+        summ = metrics.jct_summary(jct)
+        rel = _mean_rel(res, cfg.policy, cfg.sqd)
+        max_aq = max(r.max_aq for r in res)
+        rows.append(
+            common.row(
+                f"jct/scenario/{name}",
+                wall,
+                slots * len(SEEDS),
+                common.fmt_derived(
+                    mean_jct=summ["mean"],
+                    p99=summ["p99"],
+                    rel_comm=rel,
+                    max_aq=max_aq,
+                    aq_ok=bool(cfg.comm != "et" or max_aq <= cfg.x - 1),
+                ),
+                mean_jct=summ["mean"],
+                p99=summ["p99"],
+                rel_comm=rel,
+            )
+        )
+
+    if quick:
+        rows.append(_batch_speedup_row(slots))
     return rows

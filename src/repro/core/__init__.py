@@ -4,8 +4,11 @@ from repro.core.care import (  # noqa: F401
     SimConfig,
     SimResult,
     approx,
+    comm,
     metrics,
     routing,
     simulate,
+    simulate_batch,
     theory,
+    workload,
 )

@@ -5,9 +5,16 @@ Sparse Communication" / "CARE: Resource Allocation Using Sparse Communication".
 
 Components
 ----------
+comm        -- the communication protocol core (RT / DT / ET / ET+RT hybrid /
+               exact trigger evaluation + message accounting); the single
+               implementation shared by every tier (slotted sim, MoE
+               dispatch sim, serving engine)
 approx      -- approximation algorithms (basic / MSR / MSR-x queue emulation)
 routing     -- resource-allocation policies (JSQ / JSAQ / SQ(d) / RR / Random)
-slotted_sim -- discrete-time slotted simulator (paper Section 9), lax.scan based
+workload    -- arrival processes (Bernoulli / bursty MMPP) and heterogeneous
+               per-server service-rate schedules
+slotted_sim -- discrete-time slotted simulator (paper Section 9), lax.scan
+               based; ``simulate_batch`` vmaps it over a batch of seeds
 metrics     -- AQ / communication / JCT-CCDF metrics
 theory      -- closed-form bounds from Theorems 2.3, 2.4, 2.5
 """
@@ -16,5 +23,13 @@ from repro.core.care.slotted_sim import (  # noqa: F401
     SimConfig,
     SimResult,
     simulate,
+    simulate_batch,
 )
-from repro.core.care import approx, metrics, routing, theory  # noqa: F401
+from repro.core.care import (  # noqa: F401
+    approx,
+    comm,
+    metrics,
+    routing,
+    theory,
+    workload,
+)

@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
+import jax
 import jax.numpy as jnp
 
 ApproxKind = Literal["basic", "msr", "msr_x"]
@@ -45,9 +46,6 @@ class ApproxConfig:
     kind: ApproxKind = "msr"
     msr_slots: int = 30
     x: int = 3
-
-
-import jax
 
 
 @jax.tree_util.register_dataclass
@@ -89,13 +87,38 @@ def emu_arrival(state: EmuState, server: jnp.ndarray, cfg: ApproxConfig) -> EmuS
     return EmuState(q_app=q_app, head_rem=head_rem, emu_deps=state.emu_deps)
 
 
-def emu_drain_slot(state: EmuState, cfg: ApproxConfig) -> EmuState:
+def emu_arrival_masked(
+    state: EmuState, sel: jnp.ndarray, cfg: ApproxConfig
+) -> EmuState:
+    """Register arrivals on the servers in the bool mask ``sel`` (``(K,)``).
+
+    Branch-free form of :func:`emu_arrival` (identical semantics when at most
+    one entry of ``sel`` is set and the caller masks it by the admit flag):
+    dense ``where``/add ops instead of a ``lax.cond`` + scatter, so the
+    update stays vectorised under ``jax.vmap`` (batched simulation) where a
+    cond would lower to a both-branches select and a scatter to a serial
+    per-batch loop.
+    """
+    was_empty = state.q_app == 0
+    q_app = state.q_app + sel.astype(jnp.int32)
+    head_rem = jnp.where(sel & was_empty, cfg.msr_slots, state.head_rem)
+    return EmuState(q_app=q_app, head_rem=head_rem, emu_deps=state.emu_deps)
+
+
+def emu_drain_slot(
+    state: EmuState, cfg: ApproxConfig, units: jnp.ndarray | None = None
+) -> EmuState:
     """Advance the emulated queues by one time slot (vectorised over servers).
 
     ``basic``: no drain.  ``msr``: the emulated head departs after
     ``msr_slots`` busy slots.  ``msr_x``: same, but departures freeze once
     ``emu_deps == x - 1`` (Definition 4.9: subsequent jobs get service
     ``inf``).
+
+    ``units`` (optional, ``(K,)`` int) is the per-server work completed this
+    slot under heterogeneous service rates (``workload.service_units``); the
+    schedule is deterministic so the balancer mirrors it exactly.  ``None``
+    means the homogeneous unit-rate setting.
     """
     if cfg.kind == "basic":
         return state
@@ -107,7 +130,8 @@ def emu_drain_slot(state: EmuState, cfg: ApproxConfig) -> EmuState:
         allowed = jnp.ones_like(busy)
     ticking = busy & allowed
 
-    head_rem = jnp.where(ticking, state.head_rem - 1, state.head_rem)
+    dec = 1 if units is None else units
+    head_rem = jnp.where(ticking, state.head_rem - dec, state.head_rem)
     dep = ticking & (head_rem <= 0)
     q_app = jnp.where(dep, state.q_app - 1, state.q_app)
     emu_deps = jnp.where(dep, state.emu_deps + 1, state.emu_deps)

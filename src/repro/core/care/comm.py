@@ -1,0 +1,179 @@
+"""Unified communication component of the CARE model (paper Section 2.1.2).
+
+Single source of truth for *when a server reports its exact state to the
+balancer*.  Every tier of the repo -- the slotted simulator
+(``care/slotted_sim.py``), the multi-dispatcher MoE simulation
+(``core/dispatch_sim.py``) and the serving engine (``serve/engine.py``) --
+imports its trigger evaluation and message accounting from here, so the
+paper's protocol exists exactly once and cannot drift between tiers.
+
+Patterns (paper Section 2.1.2 / Section 6):
+
+* ``rt``     -- Rate-Triggered RT-r: a message every ``rt_period`` slots
+  (``r = 1/rt_period`` messages/slot).  No deterministic error bound
+  (Section 6.2), purely time-driven.
+* ``dt``     -- Departure-Triggered DT-x: a message after every ``x``
+  departures.  With basic/MSR-x emulation this gives ``AQ <= x-1``
+  (Theorem 2.3) at relative communication ``1/x``.
+* ``et``     -- Error-Triggered ET-x: a message as soon as the (mirrored)
+  approximation error reaches ``x``.  Bounds ``AQ <= x-1`` for *any*
+  emulation algorithm (Prop 6.8); with MSR the relative communication
+  decays as ``O(1/x^2)`` under heavy load (Theorem 2.5).
+* ``et_rt``  -- hybrid ET-x with an RT fallback: triggers on error >= x
+  *or* after ``rt_period`` silent slots, whichever comes first.  Keeps the
+  deterministic ET bound while capping staleness in light-traffic /
+  idle regimes where ET alone can stay silent arbitrarily long.
+* ``exact``  -- full-state baseline: one message per departure
+  (Prop 6.1), the denominator of "relative communication".
+* ``none``   -- never trigger (exact-state policies whose communication is
+  accounted analytically, or pure open-loop emulation).
+
+The module is pure and vectorised over the server axis.  It is written
+against the shared ``numpy``/``jax.numpy`` array API: pass ``xp=jnp``
+(default) inside jitted ``lax.scan`` bodies, or ``xp=np`` from host-side
+hot loops such as the serving dispatcher -- both produce identical
+trigger decisions and message counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CommKind = Literal["none", "rt", "dt", "et", "et_rt", "exact"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CommConfig:
+    """Static communication-pattern configuration (hashable).
+
+    Attributes:
+      kind: which trigger pattern runs (see module docstring).
+      x: DT-x departure count / ET-x error threshold.  Stored as a float so
+        tiers measuring error in fractional units (e.g. tokens / mu) can use
+        the same comparison; integer thresholds behave identically.
+      rt_period: RT-r message period in slots; also the staleness cap of the
+        ``et_rt`` hybrid.
+    """
+
+    kind: CommKind = "et"
+    x: float = 3
+    rt_period: int = 100
+
+    @staticmethod
+    def from_rate(kind: CommKind, x: float = 3, rt_rate: float = 0.01) -> "CommConfig":
+        """Build a config from a per-slot message *rate* (RT-r convention)."""
+        period = max(int(round(1.0 / max(rt_rate, 1e-9))), 1)
+        return CommConfig(kind=kind, x=x, rt_period=period)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CommState:
+    """Per-server trigger bookkeeping, shape ``(K,)`` (+ scalar totals).
+
+    ``deps_since_msg`` / ``slots_since_msg`` count departures / slots since
+    each server's last message; ``msgs`` is the running message total.
+    Fields may be ``jax.numpy`` or ``numpy`` arrays -- the two backends are
+    interchangeable (see module docstring).
+    """
+
+    deps_since_msg: Any  # (K,) int32
+    slots_since_msg: Any  # (K,) int32
+    msgs: Any  # () int32 total messages sent
+
+    @staticmethod
+    def init(k: int, xp=jnp) -> "CommState":
+        return CommState(
+            deps_since_msg=xp.zeros((k,), xp.int32),
+            slots_since_msg=xp.zeros((k,), xp.int32),
+            msgs=xp.zeros((), xp.int32),
+        )
+
+
+def trigger(
+    cfg: CommConfig,
+    *,
+    err=None,
+    deps_since=None,
+    slots_since=None,
+    new_deps=None,
+    xp=jnp,
+):
+    """Pure trigger predicate on already-advanced counters.
+
+    The single place the RT/DT/ET comparisons live.  :func:`evaluate` calls
+    this after advancing its per-server counters; stateless callers (e.g.
+    the training-tier balancer's host-level ``needs_sync``) call it directly
+    with whatever scalar/vector counters they track.  Only the operands the
+    ``cfg.kind`` needs may be ``None``-free.
+    """
+    if cfg.kind == "rt":
+        return slots_since >= cfg.rt_period
+    if cfg.kind == "dt":
+        return deps_since >= cfg.x
+    if cfg.kind == "et":
+        return err >= cfg.x
+    if cfg.kind == "et_rt":
+        return (err >= cfg.x) | (slots_since >= cfg.rt_period)
+    if cfg.kind == "exact":
+        return new_deps > 0
+    if cfg.kind == "none":
+        return xp.zeros(xp.shape(deps_since), bool)
+    raise ValueError(f"unknown communication kind: {cfg.kind}")
+
+
+def evaluate(
+    state: CommState,
+    cfg: CommConfig,
+    err,
+    new_deps,
+    xp=jnp,
+) -> Tuple[Any, CommState]:
+    """Advance the pattern by one slot and evaluate the trigger.
+
+    Order matches the paper's slot semantics (and the seed simulator
+    bit-for-bit): this slot's departures and the elapsed slot are counted
+    *before* the trigger comparison, so a message fires in the same slot the
+    condition is met and the end-of-slot error obeys ``AQ <= x-1`` for DT-x
+    and ET-x (Theorem 2.3).
+
+    Args:
+      state: current :class:`CommState`.
+      cfg: static :class:`CommConfig` (Python-level; callers specialise).
+      err: ``(K,)`` current approximation error per server (any real dtype).
+      new_deps: ``(K,)`` departures that completed this slot (int).
+      xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.
+
+    Returns:
+      ``(triggered, state')`` where ``triggered`` is a ``(K,)`` bool mask of
+      servers that send a message this slot (the caller snaps its
+      approximation to the truth for exactly these servers) and ``state'``
+      has counters reset for triggered servers and ``msgs`` accumulated.
+    """
+    deps_since = state.deps_since_msg + new_deps
+    slots_since = state.slots_since_msg + 1
+
+    triggered = trigger(
+        cfg,
+        err=err,
+        deps_since=deps_since,
+        slots_since=slots_since,
+        new_deps=new_deps,
+        xp=xp,
+    )
+
+    if cfg.kind == "exact":
+        # Full state information costs one message per departure (Prop 6.1),
+        # even when several departures share a slot.
+        sent = xp.sum(new_deps, dtype=xp.int32)
+    else:
+        sent = xp.sum(triggered, dtype=xp.int32)
+
+    return triggered, CommState(
+        deps_since_msg=xp.where(triggered, 0, deps_since),
+        slots_since_msg=xp.where(triggered, 0, slots_since),
+        msgs=state.msgs + sent,
+    )

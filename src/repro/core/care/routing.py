@@ -59,20 +59,30 @@ def route(
     rr_ptr: jnp.ndarray,
     key: jax.Array,
     d: int = 2,
+    inv_rate: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch one job.  Returns ``(server, rr_ptr')``.
 
     ``policy`` is static (Python-level), so jitted callers specialise on it.
+    ``inv_rate`` (optional, ``(K,)``) supplies ``1/r_i`` under heterogeneous
+    service rates: the shortest-queue family then minimises the *expected
+    drain time* ``q_i / r_i`` rather than the raw length, so a queue of 4 at
+    a double-speed server beats a queue of 3 at a half-speed one.
     """
     k = q_true.shape[0]
+    if inv_rate is None:
+        scaled_true, scaled_app = q_true, q_app
+    else:
+        scaled_true = q_true.astype(jnp.float32) * inv_rate
+        scaled_app = q_app.astype(jnp.float32) * inv_rate
     if policy == "jsq":
-        return route_shortest(q_true, key), rr_ptr
+        return route_shortest(scaled_true, key), rr_ptr
     if policy == "jsaq":
-        return route_shortest(q_app, key), rr_ptr
+        return route_shortest(scaled_app, key), rr_ptr
     if policy == "sq2":
-        return route_sqd(q_true, 2, key), rr_ptr
+        return route_sqd(scaled_true, 2, key), rr_ptr
     if policy == "sqd":
-        return route_sqd(q_true, d, key), rr_ptr
+        return route_sqd(scaled_true, d, key), rr_ptr
     if policy == "rr":
         server, ptr = route_rr(rr_ptr, k)
         return server.astype(jnp.int32), ptr

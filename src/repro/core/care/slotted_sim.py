@@ -3,21 +3,30 @@
 Dynamics (matching the paper's simulation setting exactly):
 
 * K parallel FIFO servers, a single load balancer.
-* In every slot, one job arrives with probability ``load`` (Bernoulli).
+* In every slot, one job arrives with probability ``load`` (Bernoulli), or
+  according to a bursty MMPP-modulated process (``cfg.arrival = "mmpp"``,
+  see :mod:`repro.core.care.workload`).
 * Job service requirements are i.i.d. Geometric(1/K) (mean K slots), drawn
   per job at arrival time so that *the same input* (arrival times and sizes)
   can be replayed under every policy -- the paper's comparison method.
-* A busy server completes one unit of work per slot.
+* A busy server completes one unit of work per slot -- or ``r_i`` units under
+  heterogeneous service rates (``cfg.service_rates``), realised by the
+  deterministic credit schedule of :func:`workload.service_units` which the
+  balancer mirrors exactly.
 
 Within a slot the order of operations is:
 
-  1. arrival (if any) is routed using the *pre-slot* state;
+  1. arrival (if any) is routed using the *pre-slot* state; a full FIFO
+     (``q >= buffer_cap``) *drops* the arrival (counted in ``dropped``)
+     instead of admitting it;
   2. every busy server works one unit; the head job departs when its
      remaining requirement reaches zero;
   3. the balancer's emulation advances one slot (approximation component);
-  4. the communication pattern evaluates its trigger and any triggered
-     server sends a message carrying its exact queue length, which snaps the
-     approximation to the truth.
+  4. the communication pattern (:mod:`repro.core.care.comm` -- the single
+     trigger implementation shared with the MoE dispatch simulator and the
+     serving engine) evaluates its trigger and any triggered server sends a
+     message carrying its exact queue length, which snaps the approximation
+     to the truth.
 
 Because a message fires in the same slot in which the trigger condition is
 met, the end-of-slot approximation error satisfies ``AQ <= x - 1`` for DT-x
@@ -26,27 +35,43 @@ and ET-x (Theorem 2.3) -- asserted by the tests.
 The whole simulation is a single ``jax.lax.scan``; all per-server state is
 vectorised and job FIFOs are circular buffers carried through the scan, so
 the simulator jit-compiles once per (policy, pattern, approximation) triple
-and runs at native speed on CPU/TPU.
+and runs at native speed on CPU/TPU.  :func:`simulate_batch` vmaps the same
+scan over a batch of PRNG keys, amortising per-op dispatch overhead across
+seeds -- the entry point the benchmarks use for seed sweeps.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Literal
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.care import approx as approx_lib
+from repro.core.care import comm as comm_lib
 from repro.core.care import routing as routing_lib
+from repro.core.care import workload as workload_lib
 
-CommKind = Literal["none", "rt", "dt", "et"]
+CommKind = comm_lib.CommKind
 
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Static simulation configuration (hashable; jit specialises on it)."""
+    """Static simulation configuration (hashable; jit specialises on it).
+
+    Scenario knobs beyond the paper's Section 9.1 setting:
+
+    * ``arrival="mmpp"`` with ``burst_intensity`` / ``burst_stay`` switches
+      to bursty Markov-modulated arrivals (long-run rate still ``load``).
+    * ``service_rates`` (length-``servers`` tuple) gives each server a speed
+      in work units/slot; ``rate_aware=True`` makes the shortest-queue
+      family minimise expected drain time ``q_i / r_i`` instead of raw
+      queue length.
+    * ``comm="et_rt"`` enables the hybrid ET-x trigger with an RT fallback
+      every ``1/rt_rate`` slots (staleness cap in light traffic).
+    """
 
     servers: int = 30
     slots: int = 100_000
@@ -60,10 +85,21 @@ class SimConfig:
     approx: approx_lib.ApproxKind = "msr"
     buffer_cap: int = 2048  # per-server FIFO capacity (power of two).
     sqd: int = 2
+    # Scenario layer (see module docstring / workload.py).
+    arrival: str = "bernoulli"  # "bernoulli" | "mmpp"
+    burst_intensity: float = 1.6
+    burst_stay: float = 0.98
+    service_rates: Optional[Tuple[float, ...]] = None
+    rate_aware: bool = True
 
     def approx_config(self) -> approx_lib.ApproxConfig:
         return approx_lib.ApproxConfig(
             kind=self.approx, msr_slots=self.mean_service, x=self.x
+        )
+
+    def comm_config(self) -> comm_lib.CommConfig:
+        return comm_lib.CommConfig.from_rate(
+            self.comm, x=self.x, rt_rate=self.rt_rate
         )
 
 
@@ -72,24 +108,18 @@ class SimResult:
     """Simulation outputs (host-side numpy)."""
 
     jct: np.ndarray  # (num_jobs,) job completion times in slots (>=1)
-    arrivals: int
+    arrivals: int  # admitted arrivals (offered minus dropped)
     departures: int
     messages: int
     max_aq: int  # sup_t AQ(t) observed at slot ends
     max_queue: int
-    overflow: bool
+    overflow: bool  # any arrival dropped on a full FIFO
     per_server_arrivals: np.ndarray  # (K,)
     final_q: np.ndarray  # (K,)
     # messages per departure; the exact-state baseline is 1 (Prop 6.1).
     msgs_per_departure: float = 0.0
     queue_gap_sup: int = 0  # sup_t max_ij |Q_i - Q_j| (for SSC experiments)
-
-
-def _geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
-    """i.i.d. Geometric(1/mean) sizes with support {1, 2, ...}."""
-    u = jax.random.uniform(key, (n,), jnp.float32, 1e-7, 1.0 - 1e-7)
-    sizes = jnp.floor(jnp.log1p(-u) / np.log1p(-1.0 / mean)) + 1.0
-    return jnp.maximum(sizes, 1.0).astype(jnp.int32)
+    dropped: int = 0  # arrivals rejected because the FIFO was full
 
 
 @dataclasses.dataclass
@@ -99,16 +129,14 @@ class _Carry:
     buf_jid: jnp.ndarray  # (K, B) circular FIFO of job ids (arrival slots)
     head_ptr: jnp.ndarray  # (K,) FIFO head index
     emu: approx_lib.EmuState
-    deps_since_msg: jnp.ndarray  # (K,)
-    slots_since_msg: jnp.ndarray  # (K,)
+    comm: comm_lib.CommState  # shared trigger bookkeeping + message total
     rr_ptr: jnp.ndarray  # () round-robin pointer
-    msgs: jnp.ndarray  # () total messages
     deps: jnp.ndarray  # () total departures
-    arrs: jnp.ndarray  # () total arrivals
+    arrs: jnp.ndarray  # () total admitted arrivals
+    dropped: jnp.ndarray  # () arrivals rejected on a full FIFO
     per_srv: jnp.ndarray  # (K,) arrivals per server
     max_aq: jnp.ndarray  # () running sup of end-of-slot AQ
     max_q: jnp.ndarray  # () running sup of max queue length
-    overflow: jnp.ndarray  # () bool, FIFO capacity exceeded
     gap_sup: jnp.ndarray  # () running sup of max_ij |Q_i - Q_j|
 
 
@@ -117,80 +145,73 @@ jax.tree_util.register_dataclass(
 )
 
 
-def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
-    """Run one slotted simulation; returns host-side metrics."""
+def _prep(key: jax.Array, cfg: SimConfig):
+    """Draw the replayable workload: (arrive, sizes, slot_keys)."""
     k_arr, k_size, k_scan = jax.random.split(key, 3)
     t = cfg.slots
-    arrive = jax.random.bernoulli(k_arr, cfg.load, (t,))
-    sizes = _geometric_sizes(k_size, t, cfg.mean_service)
+    if cfg.arrival == "mmpp":
+        arrive = workload_lib.mmpp_arrivals(
+            k_arr, t, cfg.load, cfg.burst_intensity, cfg.burst_stay
+        )
+    else:
+        arrive = workload_lib.bernoulli_arrivals(k_arr, t, cfg.load)
+    sizes = workload_lib.geometric_sizes(k_size, t, cfg.mean_service)
     slot_keys = jax.random.split(k_scan, t)
-
-    out = _simulate_jit(arrive, sizes, slot_keys, cfg)
-    (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, overflow,
-     gap_sup) = map(np.asarray, out)
-
-    arrive_np = np.asarray(arrive)
-    arrival_slots = np.nonzero(arrive_np)[0]
-    comp = comp_slot[arrival_slots]
-    done = comp >= 0
-    jct = comp[done] - arrival_slots[done] + 1
-
-    deps_i = int(deps)
-    msgs_i = int(msgs)
-    return SimResult(
-        jct=jct.astype(np.int64),
-        arrivals=int(arrs),
-        departures=deps_i,
-        messages=msgs_i,
-        max_aq=int(max_aq),
-        max_queue=int(max_q),
-        overflow=bool(overflow),
-        per_server_arrivals=per_srv,
-        final_q=final_q,
-        msgs_per_departure=(msgs_i / deps_i) if deps_i else 0.0,
-        queue_gap_sup=int(gap_sup),
-    )
+    return arrive, sizes, slot_keys
 
 
-@functools.partial(jax.jit, static_argnums=(3,))
-def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
+def _sim_core(arrive, sizes, slot_keys, cfg: SimConfig):
+    """One full slotted run as a lax.scan; traceable (also under vmap)."""
     k = cfg.servers
     b = cfg.buffer_cap
     acfg = cfg.approx_config()
-    rt_period = max(int(round(1.0 / max(cfg.rt_rate, 1e-9))), 1)
+    ccfg = cfg.comm_config()
+    if cfg.service_rates is not None:
+        rates = jnp.asarray(cfg.service_rates, jnp.float32)
+        inv_rate = 1.0 / rates if cfg.rate_aware else None
+    else:
+        rates = None
+        inv_rate = None
 
     def slot(c: _Carry, xs):
         arr, size, jid, skey = xs
 
         # --- 1. arrival & routing -------------------------------------
         server, rr_ptr = routing_lib.route(
-            cfg.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey, d=cfg.sqd
+            cfg.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
+            d=cfg.sqd, inv_rate=inv_rate,
         )
-        tail = (c.head_ptr[server] + c.q_true[server]) % b
-        overflow = c.overflow | (arr & (c.q_true[server] >= b))
-        buf_jid = jax.lax.cond(
-            arr,
-            lambda bj: bj.at[server, tail].set(jid),
-            lambda bj: bj,
-            c.buf_jid,
+        # Dense one-hot arithmetic instead of scalar gathers / scatters /
+        # conds: under vmap those lower to serial per-batch-element loops
+        # (or both-branch selects), which destroys the batched-scan
+        # throughput; elementwise (K,) ops stay fully vectorised.
+        onehot = jnp.arange(k, dtype=jnp.int32) == server
+        q_sel = jnp.sum(jnp.where(onehot, c.q_true, 0))
+        # A full FIFO drops the arrival (counted) rather than letting the
+        # tail wrap onto the live head entry.
+        admit = arr & (q_sel < b)
+        dropped = c.dropped + (arr & ~admit).astype(jnp.int32)
+        sel = onehot & admit
+        head_sel = jnp.sum(jnp.where(onehot, c.head_ptr, 0))
+        tail = (head_sel + q_sel) % b
+        # Masked one-element scatter (the ring itself still needs indexing).
+        buf_jid = c.buf_jid.at[server, tail].set(
+            jnp.where(admit, jid, c.buf_jid[server, tail])
         )
-        was_idle = c.q_true[server] == 0
-        q_true = jnp.where(arr, c.q_true.at[server].add(1), c.q_true)
-        head_rem = jnp.where(
-            arr & was_idle, c.head_rem.at[server].set(size), c.head_rem
-        )
-        emu = jax.lax.cond(
-            arr,
-            lambda e: approx_lib.emu_arrival(e, server, acfg),
-            lambda e: e,
-            c.emu,
-        )
-        arrs = c.arrs + arr.astype(jnp.int32)
-        per_srv = jnp.where(arr, c.per_srv.at[server].add(1), c.per_srv)
+        q_true = c.q_true + sel.astype(jnp.int32)
+        head_rem = jnp.where(sel & (c.q_true == 0), size, c.head_rem)
+        emu = approx_lib.emu_arrival_masked(c.emu, sel, acfg)
+        arrs = c.arrs + admit.astype(jnp.int32)
+        per_srv = c.per_srv + sel.astype(jnp.int32)
 
         # --- 2. service ------------------------------------------------
         busy = q_true > 0
-        head_rem = jnp.where(busy, head_rem - 1, head_rem)
+        if rates is None:
+            units = None
+            head_rem = jnp.where(busy, head_rem - 1, head_rem)
+        else:
+            units = workload_lib.service_units(jid, rates)
+            head_rem = jnp.where(busy, head_rem - units, head_rem)
         dep = busy & (head_rem <= 0)
         departed_jid = jnp.where(
             dep, buf_jid[jnp.arange(k), c.head_ptr % b], -1
@@ -202,27 +223,16 @@ def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
         next_size = sizes[jnp.clip(next_jid, 0, sizes.shape[0] - 1)]
         head_rem = jnp.where(dep & (q_true > 0), next_size, head_rem)
         deps = c.deps + jnp.sum(dep, dtype=jnp.int32)
-        deps_since_msg = c.deps_since_msg + dep.astype(jnp.int32)
 
         # --- 3. emulation drain -----------------------------------------
-        emu = approx_lib.emu_drain_slot(emu, acfg)
+        emu = approx_lib.emu_drain_slot(emu, acfg, units=units)
 
-        # --- 4/5. communication trigger ---------------------------------
+        # --- 4/5. communication trigger (shared core, comm.py) ----------
         err = approx_lib.approximation_error(emu, q_true)
-        slots_since_msg = c.slots_since_msg + 1
-        if cfg.comm == "rt":
-            triggered = slots_since_msg >= rt_period
-        elif cfg.comm == "dt":
-            triggered = deps_since_msg >= cfg.x
-        elif cfg.comm == "et":
-            triggered = err >= cfg.x
-        else:  # "none": exact-state policies count messages analytically.
-            triggered = jnp.zeros((k,), bool)
-
-        msgs = c.msgs + jnp.sum(triggered, dtype=jnp.int32)
+        triggered, comm_state = comm_lib.evaluate(
+            c.comm, ccfg, err, dep.astype(jnp.int32)
+        )
         emu = approx_lib.emu_message_reset(emu, q_true, triggered, acfg)
-        deps_since_msg = jnp.where(triggered, 0, deps_since_msg)
-        slots_since_msg = jnp.where(triggered, 0, slots_since_msg)
 
         # --- 6. metrics ---------------------------------------------------
         aq = jnp.max(jnp.abs(q_true - emu.q_app))
@@ -233,16 +243,14 @@ def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
             buf_jid=buf_jid,
             head_ptr=head_ptr,
             emu=emu,
-            deps_since_msg=deps_since_msg,
-            slots_since_msg=slots_since_msg,
+            comm=comm_state,
             rr_ptr=rr_ptr,
-            msgs=msgs,
             deps=deps,
             arrs=arrs,
+            dropped=dropped,
             per_srv=per_srv,
             max_aq=jnp.maximum(c.max_aq, aq),
             max_q=jnp.maximum(c.max_q, jnp.max(q_true)),
-            overflow=overflow,
             gap_sup=jnp.maximum(c.gap_sup, gap),
         )
         return carry, departed_jid
@@ -254,16 +262,14 @@ def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
         buf_jid=jnp.full((k, b), -1, jnp.int32),
         head_ptr=jnp.zeros((k,), jnp.int32),
         emu=approx_lib.EmuState.init(jnp.zeros((k,), jnp.int32), acfg),
-        deps_since_msg=jnp.zeros((k,), jnp.int32),
-        slots_since_msg=jnp.zeros((k,), jnp.int32),
+        comm=comm_lib.CommState.init(k),
         rr_ptr=jnp.zeros((), jnp.int32),
-        msgs=jnp.zeros((), jnp.int32),
         deps=jnp.zeros((), jnp.int32),
         arrs=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
         per_srv=jnp.zeros((k,), jnp.int32),
         max_aq=jnp.zeros((), jnp.int32),
         max_q=jnp.zeros((), jnp.int32),
-        overflow=jnp.zeros((), bool),
         gap_sup=jnp.zeros((), jnp.int32),
     )
     xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys)
@@ -280,16 +286,102 @@ def _simulate_jit(arrive, sizes, slot_keys, cfg: SimConfig):
     )
     return (
         comp_slot,
-        final.msgs,
+        final.comm.msgs,
         final.deps,
         final.arrs,
         final.max_aq,
         final.max_q,
         final.per_srv,
         final.q_true,
-        final.overflow,
+        final.dropped,
         final.gap_sup,
     )
+
+
+_simulate_jit = jax.jit(_sim_core, static_argnums=(3,))
+
+
+def _batch_one(key, cfg: SimConfig):
+    arrive, sizes, slot_keys = _prep(key, cfg)
+    return (arrive,) + _sim_core(arrive, sizes, slot_keys, cfg)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _simulate_batch_jit(keys, cfg: SimConfig):
+    return jax.vmap(lambda k: _batch_one(k, cfg))(keys)
+
+
+@functools.lru_cache(maxsize=None)
+def _simulate_batch_pmap(cfg: SimConfig):
+    """Device-sharded batch: pmap over local devices, vmap within each."""
+    return jax.pmap(jax.vmap(lambda k: _batch_one(k, cfg)))
+
+
+def _finalize(arrive_np: np.ndarray, out, cfg: SimConfig) -> SimResult:
+    """Convert one run's device outputs into a host-side SimResult."""
+    (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
+     gap_sup) = (np.asarray(o) for o in out)
+
+    arrival_slots = np.nonzero(arrive_np)[0]
+    comp = comp_slot[arrival_slots]
+    done = comp >= 0
+    jct = comp[done] - arrival_slots[done] + 1
+
+    deps_i = int(deps)
+    msgs_i = int(msgs)
+    return SimResult(
+        jct=jct.astype(np.int64),
+        arrivals=int(arrs),
+        departures=deps_i,
+        messages=msgs_i,
+        max_aq=int(max_aq),
+        max_queue=int(max_q),
+        overflow=bool(dropped > 0),
+        per_server_arrivals=per_srv,
+        final_q=final_q,
+        msgs_per_departure=(msgs_i / deps_i) if deps_i else 0.0,
+        queue_gap_sup=int(gap_sup),
+        dropped=int(dropped),
+    )
+
+
+def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
+    """Run one slotted simulation; returns host-side metrics."""
+    arrive, sizes, slot_keys = _prep(key, cfg)
+    out = _simulate_jit(arrive, sizes, slot_keys, cfg)
+    return _finalize(np.asarray(arrive), out, cfg)
+
+
+def simulate_batch(
+    keys: jax.Array | Sequence[int], cfg: SimConfig, *, shard: bool = True
+) -> list[SimResult]:
+    """Run a batch of simulations in one batched scan (one per PRNG key).
+
+    ``keys`` is either a batched PRNG key array or a sequence of integer
+    seeds.  Numerically identical to calling :func:`simulate` per key (vmap
+    is semantics-preserving -- asserted by the tests), but executes every
+    run in a single program.  When more than one local device is visible
+    (TPU/GPU, or CPU with ``--xla_force_host_platform_device_count``, which
+    ``benchmarks/run.py`` sets) and the batch divides evenly, the batch is
+    additionally *sharded across devices* with ``pmap`` -- that is where the
+    wall-clock win comes from on CPU, since the slotted scan body fuses into
+    a compute-bound loop that a single core can't amortise further.
+    """
+    if not isinstance(keys, jax.Array):
+        keys = jnp.stack([jax.random.key(int(s)) for s in keys])
+    n = keys.shape[0]
+    n_dev = jax.local_device_count()
+    if shard and n_dev > 1 and n % n_dev == 0:
+        out = _simulate_batch_pmap(cfg)(keys.reshape(n_dev, n // n_dev))
+        out_np = [np.asarray(o).reshape((n,) + np.shape(o)[2:]) for o in out]
+    else:
+        out = _simulate_batch_jit(keys, cfg)
+        out_np = [np.asarray(o) for o in out]
+    arrive, rest = out_np[0], out_np[1:]
+    return [
+        _finalize(arrive[i], tuple(o[i] for o in rest), cfg)
+        for i in range(n)
+    ]
 
 
 def exact_state_messages(result: SimResult, policy: str, sqd: int = 2) -> int:

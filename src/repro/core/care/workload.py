@@ -1,0 +1,87 @@
+"""Workload layer: arrival processes and service-rate scenarios.
+
+The seed simulator hard-coded the paper's Section 9.1 setting -- Bernoulli
+arrivals and Geometric(1/K) sizes on homogeneous unit-rate servers.  This
+module generalises both axes so the slotted simulator can exercise the
+regimes studied in the hyper-scalable / sparse-feedback literature
+(van der Boor et al., PAPERS.md) without touching the scan body:
+
+* **Arrivals** -- ``bernoulli`` (the paper's default) or ``mmpp``: a
+  two-state Markov-modulated Bernoulli process.  The chain alternates
+  between a *burst* state with arrival probability
+  ``min(burst_intensity * load, 1)`` and a *lull* state chosen so the
+  long-run rate is exactly ``load``; ``burst_stay`` is the per-slot
+  probability of remaining in the current state (mean burst length
+  ``1/(1-burst_stay)`` slots).  ``burst_intensity = 1`` degenerates to
+  Bernoulli.
+* **Sizes** -- i.i.d. Geometric(1/mean) work units, drawn at arrival time so
+  the same input replays under every policy (the paper's comparison
+  method).
+* **Service rates** -- per-server speeds ``r_i`` in work units per slot.
+  Speeds are realised by a deterministic credit schedule:
+  ``units_i(t) = floor((t+1) r_i) - floor(t r_i)``, so a rate-0.5 server
+  works every other slot and a rate-1.5 server alternates 1/2 units.  The
+  schedule is a pure function of the slot index -- the balancer can mirror
+  it exactly, which is what lets the MSR emulation stay correct under
+  heterogeneity (the emulated queue drains with the *same* units).
+
+All functions are jax-traceable and used both per-simulation and under
+``jax.vmap`` inside :func:`repro.core.care.slotted_sim.simulate_batch`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
+    """i.i.d. Geometric(1/mean) sizes with support {1, 2, ...}."""
+    u = jax.random.uniform(key, (n,), jnp.float32, 1e-7, 1.0 - 1e-7)
+    sizes = jnp.floor(jnp.log1p(-u) / np.log1p(-1.0 / mean)) + 1.0
+    return jnp.maximum(sizes, 1.0).astype(jnp.int32)
+
+
+def bernoulli_arrivals(key: jax.Array, slots: int, load: float) -> jnp.ndarray:
+    """One potential arrival per slot with probability ``load``."""
+    return jax.random.bernoulli(key, load, (slots,))
+
+
+def mmpp_arrivals(
+    key: jax.Array,
+    slots: int,
+    load: float,
+    burst_intensity: float = 1.6,
+    burst_stay: float = 0.98,
+) -> jnp.ndarray:
+    """Bursty arrivals: 2-state Markov-modulated Bernoulli, mean rate ``load``.
+
+    The symmetric chain spends half its time in each state, so with burst
+    rate ``lam_hi = min(burst_intensity * load, 1)`` the lull rate
+    ``lam_lo = 2 * load - lam_hi`` keeps the long-run arrival rate at
+    ``load`` (``lam_lo`` is clipped at 0; intensities beyond ``2`` saturate).
+    """
+    lam_hi = min(burst_intensity * load, 1.0)
+    lam_lo = max(2.0 * load - lam_hi, 0.0)
+    k_switch, k_arr = jax.random.split(key)
+    switch = jax.random.uniform(k_switch, (slots,)) >= burst_stay
+    u_arr = jax.random.uniform(k_arr, (slots,))
+
+    def step(state, xs):
+        sw, u = xs
+        state = jnp.where(sw, 1 - state, state)
+        lam = jnp.where(state == 1, lam_hi, lam_lo)
+        return state, u < lam
+
+    _, arrive = jax.lax.scan(step, jnp.zeros((), jnp.int32), (switch, u_arr))
+    return arrive
+
+
+def service_units(slot_idx: jnp.ndarray, rates: jnp.ndarray) -> jnp.ndarray:
+    """Work units each server completes in slot ``slot_idx`` (credit schedule).
+
+    Deterministic in the slot index: ``floor((t+1) r) - floor(t r)``.  The
+    long-run average is exactly ``r`` units/slot per server.
+    """
+    t = slot_idx.astype(jnp.float32)
+    return (jnp.floor((t + 1.0) * rates) - jnp.floor(t * rates)).astype(jnp.int32)

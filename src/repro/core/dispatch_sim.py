@@ -25,7 +25,10 @@ structure mapped onto expert parallelism:
   arrivals), and departures at the known service rate ``mu`` (MSR), with
   the same idleness reflection.  The emulation error is driven by the
   unobserved preference drift of the *other* dispatchers.
-* Messages carry the exact queue state (paper Section 2.1.2):
+* Messages carry the exact queue state (paper Section 2.1.2); the
+  trigger evaluation and message accounting come from the shared
+  protocol core ``repro.core.care.comm`` (see ``comm_config()`` for how
+  this tier's modes map onto it):
     - ``exact`` -- every dispatcher syncs every step (D messages/step,
       the 1-message-per-departure-batch baseline);
     - ``dt-x``  -- all dispatchers sync every x steps;
@@ -50,6 +53,8 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.care import comm as comm_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +83,25 @@ class DispatchSimConfig:
         arrivals = self.dispatchers * self.tokens_per_step * self.top_k
         return arrivals / (self.load * self.experts)
 
+    def comm_config(self) -> comm_lib.CommConfig:
+        """Map this tier's comm names onto the shared protocol core.
+
+        ``exact`` (every dispatcher syncs every step) is RT with period 1;
+        ``dt`` here is the paper's *time*-synchronised variant (all
+        dispatchers every x steps), i.e. RT with period x; ``et`` is ET-x
+        with the error measured in units of ``mu`` tokens; ``off`` never
+        triggers.
+        """
+        if self.comm == "exact":
+            return comm_lib.CommConfig(kind="rt", rt_period=1)
+        if self.comm == "dt":
+            return comm_lib.CommConfig(kind="rt", rt_period=self.x)
+        if self.comm == "et":
+            return comm_lib.CommConfig(kind="et", x=self.x)
+        if self.comm == "off":
+            return comm_lib.CommConfig(kind="none")
+        raise ValueError(f"unknown comm mode: {self.comm}")
+
 
 @dataclasses.dataclass
 class DispatchSimResult:
@@ -101,11 +125,12 @@ def _rel(load):
 def _sim(key, cfg: DispatchSimConfig):
     d, e, t, k = cfg.dispatchers, cfg.experts, cfg.tokens_per_step, cfg.top_k
     mu = cfg.mu
+    ccfg = cfg.comm_config()
     k_base, k_scan = jax.random.split(key)
     base = cfg.base_skew * jax.random.normal(k_base, (e,))
 
     def step(carry, skey):
-        pref, q_true, q_app, bias, step_i, msgs = carry
+        pref, q_true, q_app, bias, comm_state = carry
         k1, k2 = jax.random.split(skey)
         pref = pref + cfg.drift * jax.random.normal(k1, (d, e))
         logits = (
@@ -141,21 +166,15 @@ def _sim(key, cfg: DispatchSimConfig):
 
         err = jnp.max(jnp.abs(q_app - q_true[None, :]), axis=-1) / mu  # (D,)
 
-        if cfg.comm == "exact":
-            trigger = jnp.ones((d,), bool)
-        elif cfg.comm == "dt":
-            trigger = jnp.broadcast_to((step_i % cfg.x) == (cfg.x - 1), (d,))
-        elif cfg.comm == "et":
-            trigger = err >= cfg.x
-        else:  # off
-            trigger = jnp.zeros((d,), bool)
-
+        # Shared protocol core: one trigger implementation for all tiers.
+        trigger, comm_state = comm_lib.evaluate(
+            comm_state, ccfg, err, jnp.zeros((d,), jnp.int32)
+        )
         q_app = jnp.where(trigger[:, None], q_true[None, :], q_app)
-        msgs = msgs + jnp.sum(trigger.astype(jnp.int32))
 
         backlog = jnp.mean(q_true)
         gap = jnp.max(q_true) - jnp.min(q_true)
-        carry = (pref, q_true, q_app, bias, step_i + 1, msgs)
+        carry = (pref, q_true, q_app, bias, comm_state)
         return carry, (backlog, gap, jnp.max(err))
 
     init = (
@@ -163,12 +182,13 @@ def _sim(key, cfg: DispatchSimConfig):
         jnp.zeros((e,)),
         jnp.zeros((d, e)),
         jnp.zeros((d, e)),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
+        comm_lib.CommState.init(d),
     )
     keys = jax.random.split(k_scan, cfg.steps)
-    (_, _, _, _, _, msgs), (backlog, gap, errs) = jax.lax.scan(step, init, keys)
-    return backlog, gap, errs, msgs
+    (_, _, _, _, comm_state), (backlog, gap, errs) = jax.lax.scan(
+        step, init, keys
+    )
+    return backlog, gap, errs, comm_state.msgs
 
 
 def simulate(seed: int, cfg: DispatchSimConfig) -> DispatchSimResult:

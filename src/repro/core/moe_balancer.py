@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CareConfig
+from repro.core.care import comm as comm_lib
 
 _EPS = 1e-6
 
@@ -156,10 +157,17 @@ def needs_sync(state: BalancerState, cfg: CareConfig) -> jnp.ndarray:
     pattern; the host reads this scalar (1 bit) instead of the full counts.
     """
     if cfg.comm == "dt":
-        return state.steps_since_sync >= cfg.x
+        # Time-synchronised every x steps == RT with period x in
+        # shared-core terms (cf. DispatchSimConfig.comm_config).
+        return comm_lib.trigger(
+            comm_lib.CommConfig(kind="rt", rt_period=cfg.x),
+            slots_since=state.steps_since_sync,
+        )
     mean_load = jnp.mean(state.true_load, axis=-1, keepdims=True) + _EPS
     err = jnp.abs(state.true_load - state.load_approx) / mean_load
-    return jnp.max(err) >= cfg.x
+    return comm_lib.trigger(
+        comm_lib.CommConfig(kind="et", x=cfg.x), err=jnp.max(err)
+    )
 
 
 def balance_metrics(counts: jnp.ndarray) -> dict:

@@ -6,14 +6,23 @@ JSAQ over *approximated* per-replica queue occupancy.  Replicas mirror the
 dispatcher's emulation (they know both their true state and, because
 updates are deterministic, exactly what the dispatcher believes -- the
 paper's information asymmetry) and send a correction message only when the
-error reaches ``x`` (ET-x) -- so dispatcher<->replica control traffic is
-sparse even at high request rates.
+trigger of the shared protocol core (:mod:`repro.core.care.comm`, the same
+RT/DT/ET/hybrid implementation the slotted and MoE-dispatch simulators use,
+run here on its ``numpy`` backend) fires -- so dispatcher<->replica control
+traffic is sparse even at high request rates.
 
 The engine is discrete-time (slot = one decode iteration across replicas),
 matching the paper's simulation setting; each replica runs continuous
 batching with a fixed decode-slot budget, admitting queued requests as
 slots free up.  Completion requires ``decode_len`` iterations after a
 prefill cost proportional to the prompt.
+
+Replica state is fully vectorised: decode slots are a ``(replicas,
+decode_slots)`` remaining-work matrix and pending requests live in
+per-replica circular ring buffers, so one engine step is a handful of
+numpy array ops regardless of how many requests are in flight -- the hot
+loop never iterates Python request objects (they are only materialised at
+admission/completion boundaries, O(arrivals + completions) per slot).
 
 ``model_fn`` is pluggable: ``None`` runs the queueing dynamics only (used
 by benchmarks to measure JCT distributions at scale); a real
@@ -22,10 +31,11 @@ by benchmarks to measure JCT distributions at scale); a real
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Callable, Optional
 
 import numpy as np
+
+from repro.core.care import comm as comm_lib
 
 
 @dataclasses.dataclass
@@ -43,100 +53,144 @@ class EngineConfig:
     num_replicas: int = 8
     decode_slots: int = 16  # concurrent sequences per replica
     et_x: int = 4  # ET threshold on queue-occupancy error
-    comm: str = "et"  # "et" | "dt" | "rt" | "exact"
+    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact"
     dt_x: int = 4
     rt_period: int = 16
     msr_drain: float = 1.0  # emulated completions per slot per busy replica
 
-
-class Replica:
-    """One replica group: continuous batching over admitted requests."""
-
-    def __init__(self, cfg: EngineConfig):
-        self.queue: deque[Request] = deque()
-        self.active: list[list] = []  # [request, remaining_work]
-        self.cfg = cfg
-        self.completions = 0
-
-    @property
-    def occupancy(self) -> int:
-        return len(self.queue) + len(self.active)
-
-    def admit(self, req: Request, now: int):
-        self.queue.append(req)
-
-    def step(self, now: int) -> list[Request]:
-        # admit while decode slots free
-        while self.queue and len(self.active) < self.cfg.decode_slots:
-            r = self.queue.popleft()
-            r.started = now
-            self.active.append([r, r.prefill_cost + r.decode_len])
-        done = []
-        for entry in self.active:
-            entry[1] -= 1
-            if entry[1] <= 0:
-                entry[0].finished = now
-                done.append(entry[0])
-        self.active = [e for e in self.active if e[1] > 0]
-        self.completions += len(done)
-        return done
+    def comm_config(self) -> comm_lib.CommConfig:
+        """This tier's trigger parameters in shared-core terms."""
+        if self.comm == "et":
+            return comm_lib.CommConfig(kind="et", x=self.et_x)
+        if self.comm == "dt":
+            return comm_lib.CommConfig(kind="dt", x=self.dt_x)
+        if self.comm == "rt":
+            return comm_lib.CommConfig(kind="rt", rt_period=self.rt_period)
+        if self.comm == "et_rt":
+            return comm_lib.CommConfig(
+                kind="et_rt", x=self.et_x, rt_period=self.rt_period
+            )
+        if self.comm == "exact":
+            return comm_lib.CommConfig(kind="exact")
+        raise ValueError(f"unknown comm mode: {self.comm}")
 
 
 class CareDispatcher:
-    """JSAQ over approximated occupancy + ET/DT/RT correction messages."""
+    """JSAQ over approximated occupancy + shared-core correction triggers.
 
-    def __init__(self, cfg: EngineConfig, seed: int = 0):
+    All per-replica state is vectorised numpy: ``active_rem``/``active_rid``
+    hold the decode slots (0 remaining == free), ``_q_rid``/``_q_head``/
+    ``_q_len`` are per-replica FIFO rings of pending request ids, and the
+    trigger bookkeeping is a :class:`repro.core.care.comm.CommState`.
+    """
+
+    def __init__(self, cfg: EngineConfig, seed: int = 0, queue_cap: int = 4096):
+        r, s = cfg.num_replicas, cfg.decode_slots
         self.cfg = cfg
-        self.replicas = [Replica(cfg) for _ in range(cfg.num_replicas)]
-        self.approx = np.zeros(cfg.num_replicas)  # emulated occupancy
-        self.deps_since = np.zeros(cfg.num_replicas, dtype=int)
-        self.slots_since = np.zeros(cfg.num_replicas, dtype=int)
-        self.messages = 0
+        self._ccfg = cfg.comm_config()
+        self.active_rem = np.zeros((r, s), np.int64)
+        self.active_rid = np.full((r, s), -1, np.int64)
+        self._qcap = queue_cap
+        self._q_rid = np.full((r, queue_cap), -1, np.int64)
+        self._q_head = np.zeros(r, np.int64)
+        self._q_len = np.zeros(r, np.int64)
+        self.approx = np.zeros(r)  # emulated occupancy
+        self.comm = comm_lib.CommState.init(r, xp=np)
         self.total_completions = 0
         self.rng = np.random.default_rng(seed)
+        # rid-indexed request metadata (grown on demand).
+        self._work = np.zeros(1024, np.int64)
+        self._started = np.full(1024, -1, np.int64)
+        self._store: dict[int, Request] = {}
+
+    @property
+    def messages(self) -> int:
+        return int(self.comm.msgs)
+
+    def true_occupancy(self) -> np.ndarray:
+        """Exact per-replica occupancy (queued + active), shape (R,)."""
+        return self._q_len + (self.active_rem > 0).sum(axis=1)
+
+    def _ensure_rid(self, rid: int):
+        while rid >= self._work.shape[0]:
+            self._work = np.concatenate([self._work, np.zeros_like(self._work)])
+            self._started = np.concatenate(
+                [self._started, np.full_like(self._started, -1)]
+            )
+
+    def _grow_queues(self):
+        r = self.cfg.num_replicas
+        new = np.full((r, 2 * self._qcap), -1, np.int64)
+        for i in range(r):  # linearise each ring into the new buffer
+            idx = (self._q_head[i] + np.arange(self._q_len[i])) % self._qcap
+            new[i, : self._q_len[i]] = self._q_rid[i, idx]
+        self._q_rid, self._q_head, self._qcap = new, np.zeros(r, np.int64), 2 * self._qcap
 
     def route(self, req: Request, now: int) -> int:
         if self.cfg.comm == "exact":
-            occ = np.array([r.occupancy for r in self.replicas], float)
+            occ = self.true_occupancy().astype(float)
         else:
             occ = self.approx
         j = int(self.rng.choice(np.flatnonzero(occ == occ.min())))
-        self.replicas[j].admit(req, now)
+        if self._q_len[j] >= self._qcap:
+            self._grow_queues()
+        self._ensure_rid(req.rid)
+        # A zero-work request still occupies a decode slot for one
+        # iteration (matches the pre-vectorisation engine, where the first
+        # decrement completed it); without the clamp it would sit at
+        # rem == 0 forever and never be marked done.
+        self._work[req.rid] = max(req.prefill_cost + req.decode_len, 1)
+        self._store[req.rid] = req
+        tail = (self._q_head[j] + self._q_len[j]) % self._qcap
+        self._q_rid[j, tail] = req.rid
+        self._q_len[j] += 1
         self.approx[j] += 1  # arrival known to the dispatcher (Eq. 10)
         return j
 
     def step(self, now: int) -> list[Request]:
         cfg = self.cfg
-        finished: list[Request] = []
-        completions = np.zeros(cfg.num_replicas, dtype=int)
-        for i, rep in enumerate(self.replicas):
-            done = rep.step(now)
-            completions[i] = len(done)
-            finished.extend(done)
-        self.total_completions += int(completions.sum())
-        self.deps_since += completions
-        self.slots_since += 1
+        rows = np.arange(cfg.num_replicas)[:, None]
 
-        # MSR drain: emulate service at the nominal completion rate.
+        # 1. admit: fill free decode slots from the pending rings, FIFO.
+        free = self.active_rem <= 0
+        free_rank = np.cumsum(free, axis=1) - 1
+        n_admit = np.minimum(self._q_len, free.sum(axis=1))
+        take = free & (free_rank < n_admit[:, None])
+        if take.any():
+            qidx = (self._q_head[:, None] + free_rank) % self._qcap
+            rid = self._q_rid[rows, qidx]
+            self.active_rid = np.where(take, rid, self.active_rid)
+            self.active_rem = np.where(take, self._work[rid], self.active_rem)
+            self._started[rid[take]] = now
+            self._q_head = (self._q_head + n_admit) % self._qcap
+            self._q_len = self._q_len - n_admit
+
+        # 2. service: one decode iteration on every active slot.
+        active = self.active_rem > 0
+        self.active_rem = self.active_rem - active
+        done = active & (self.active_rem == 0)
+        completions = done.sum(axis=1)
+        finished: list[Request] = []
+        if done.any():
+            for rid in self.active_rid[done]:
+                req = self._store.pop(int(rid))
+                req.started = int(self._started[rid])
+                req.finished = now
+                finished.append(req)
+            self.active_rid[done] = -1
+        self.total_completions += int(completions.sum())
+
+        # 3. MSR drain: emulate service at the nominal completion rate.
         busy = self.approx > 0
         self.approx = np.maximum(self.approx - cfg.msr_drain * busy, 0.0)
 
-        # server-side triggers (replicas mirror the emulation exactly)
-        true_occ = np.array([r.occupancy for r in self.replicas], float)
+        # 4. trigger (replicas mirror the emulation exactly) -- shared core.
+        true_occ = self.true_occupancy().astype(float)
         err = np.abs(true_occ - self.approx)
-        if cfg.comm == "et":
-            trig = err >= cfg.et_x
-        elif cfg.comm == "dt":
-            trig = self.deps_since >= cfg.dt_x
-        elif cfg.comm == "rt":
-            trig = self.slots_since >= cfg.rt_period
-        else:  # exact: one message per completion
-            trig = completions > 0
-            self.messages += int(completions.sum()) - int(trig.sum())
-        self.messages += int(trig.sum())
+        trig, self.comm = comm_lib.evaluate(
+            self.comm, self._ccfg, err, completions, xp=np
+        )
         self.approx = np.where(trig, true_occ, self.approx)
-        self.deps_since = np.where(trig, 0, self.deps_since)
-        self.slots_since = np.where(trig, 0, self.slots_since)
         return finished
 
 
