@@ -312,8 +312,16 @@ def _simulate_batch_jit(keys, cfg: SimConfig):
 
 
 @functools.lru_cache(maxsize=None)
-def _simulate_batch_pmap(cfg: SimConfig):
-    """Device-sharded batch: pmap over local devices, vmap within each."""
+def _simulate_batch_pmap(cfg: SimConfig, n_dev: int):
+    """Device-sharded batch: pmap over local devices, vmap within each.
+
+    ``n_dev`` is part of the cache key: a pmap built for a different
+    ``jax.local_device_count()`` (e.g. before a topology change in-process)
+    would otherwise be silently reused and fail or undershard.
+    """
+    assert n_dev == jax.local_device_count(), (
+        "cached pmap requested for a stale device topology"
+    )
     return jax.pmap(jax.vmap(lambda k: _batch_one(k, cfg)))
 
 
@@ -372,7 +380,7 @@ def simulate_batch(
     n = keys.shape[0]
     n_dev = jax.local_device_count()
     if shard and n_dev > 1 and n % n_dev == 0:
-        out = _simulate_batch_pmap(cfg)(keys.reshape(n_dev, n // n_dev))
+        out = _simulate_batch_pmap(cfg, n_dev)(keys.reshape(n_dev, n // n_dev))
         out_np = [np.asarray(o).reshape((n,) + np.shape(o)[2:]) for o in out]
     else:
         out = _simulate_batch_jit(keys, cfg)
