@@ -9,12 +9,29 @@ Prop 6.1) of:
 * ET-x + MSR-x  (Fig 7) -- expected below the Thm 2.3 bound 1/x but above
   the ET+MSR curve.
 
-Each cell runs a seed sweep through ``simulate_batch`` (one vmapped scan);
-the relative communication is averaged over seeds while the deterministic
-guarantee AQ <= x-1 (Prop 6.8) is re-checked on *every* seed.
+The whole ``(load, x)`` grid of a figure runs as **one compiled program**
+(``slotted_sim.simulate_grid``: load and x are traced ``Scenario``
+operands, vmapped over the flattened cell x seed axis and sharded across
+devices with ``shard_map``); only the approximation *kind* differs between
+the two figures, so the full benchmark compiles exactly two programs
+instead of one per cell.  The relative communication is averaged over
+seeds while the deterministic guarantee AQ <= x-1 (Prop 6.8) is re-checked
+on *every* seed.
+
+In quick mode two extra rows record the fusion win on this box:
+
+* ``grid/compile_count`` -- programs compiled for the figure grids vs the
+  number of grid cells;
+* ``grid/speedup`` -- end-to-end wall clock of the fused grid (cold,
+  including its compile) vs the pre-grid per-cell path (one fresh compile
+  per cell, seeds sharded when they divide the device count -- the old
+  ``pmap`` behaviour), with per-cell results verified identical.
 """
 from __future__ import annotations
 
+import time
+
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -23,49 +40,166 @@ from repro.core.care import slotted_sim, theory
 XS = (2, 3, 4, 5, 6, 7, 8)
 SEEDS = (0, 1, 2, 3)
 
+FIGS = (
+    ("fig6_et_msr", "msr", theory.et_msr_relative_comm_backlogged),
+    ("fig7_et_msrx", "msr_x", theory.dt_relative_comm),
+)
+
+
+def _grid_cells(slots: int, xs) -> list[tuple[str, int, slotted_sim.SimConfig]]:
+    cells = []
+    for fig, approx, _ in FIGS:
+        for load in common.LOADS:
+            for x in xs:
+                cells.append(
+                    (
+                        fig,
+                        x,
+                        slotted_sim.SimConfig(
+                            servers=common.SERVERS,
+                            slots=slots,
+                            load=load,
+                            policy="jsaq",
+                            comm="et",
+                            x=x,
+                            approx=approx,
+                        ),
+                    )
+                )
+    return cells
+
+
+def _percell_path(cfgs, seeds):
+    """The pre-grid behaviour: one fresh compiled program per cell.
+
+    Mirrors the old ``simulate_batch`` exactly -- a vmapped scan per
+    ``SimConfig``, sharded over local devices only when the seed count
+    divides them (the old ``pmap`` condition) -- but built fresh per cell
+    so every cell pays its own compile, as it did when ``SimConfig`` was a
+    static jit argument.
+    """
+    keys = slotted_sim._as_keys(list(seeds))
+    n_dev = jax.local_device_count()
+    if len(seeds) % n_dev != 0:
+        n_dev = 1
+    results = []
+    for cfg in cfgs:
+        static, scn = cfg.static_part(), cfg.scenario()
+        batched = jax.vmap(lambda key: slotted_sim._run_one(key, scn, static))
+        if n_dev > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
+            batched = shard_map(
+                batched, mesh=mesh, in_specs=(P("runs"),), out_specs=P("runs")
+            )
+        out = jax.jit(batched)(keys)
+        out_np = [np.asarray(o) for o in out]
+        results.append(
+            [
+                slotted_sim._finalize(
+                    out_np[0][i], tuple(o[i] for o in out_np[1:])
+                )
+                for i in range(len(seeds))
+            ]
+        )
+    return results
+
+
+def _fusion_rows(cells, slots: int) -> list[dict]:
+    """Measure the fused grid vs the per-cell loop, both cold."""
+    cfgs = [cfg for _, _, cfg in cells]
+    compiles_before = slotted_sim.grid_compile_count()
+
+    t0 = time.perf_counter()
+    grid_results, _ = common.timed_simulate_grid(cfgs, SEEDS)
+    t_grid = time.perf_counter() - t0
+    n_programs = slotted_sim.grid_compile_count() - compiles_before
+
+    t0 = time.perf_counter()
+    percell_results = _percell_path(cfgs, SEEDS)
+    t_percell = time.perf_counter() - t0
+
+    match = all(
+        g.messages == p.messages
+        and g.max_aq == p.max_aq
+        and np.array_equal(g.jct, p.jct)
+        for grow, prow in zip(grid_results, percell_results)
+        for g, p in zip(grow, prow)
+    )
+    total_slots = slots * len(cfgs) * len(SEEDS)
+    speedup = t_percell / max(t_grid, 1e-9)
+    return [
+        common.row(
+            "grid/compile_count",
+            0.0,
+            slots,
+            common.fmt_derived(
+                programs=n_programs, cells=len(cfgs), seeds=len(SEEDS)
+            ),
+            programs=n_programs,
+            cells=len(cfgs),
+        ),
+        common.row(
+            "grid/speedup",
+            t_grid,
+            total_slots,
+            common.fmt_derived(
+                t_grid_s=t_grid,
+                t_percell_s=t_percell,
+                speedup=speedup,
+                grid_matches_percell=match,
+                devices=jax.local_device_count(),
+            ),
+            speedup=speedup,
+            # Top-level boolean so the trajectory diff treats a broken
+            # grid-vs-percell equivalence as a CI-failing regression.
+            grid_matches_percell=bool(match),
+        ),
+    ]
+
 
 def run(quick: bool = False) -> list[dict]:
     slots = common.sim_slots(quick)
     xs = (2, 3, 5, 8) if quick else XS
+    cells = _grid_cells(slots, xs)
+
     rows: list[dict] = []
-    for fig, approx, bound_fn in (
-        ("fig6_et_msr", "msr", theory.et_msr_relative_comm_backlogged),
-        ("fig7_et_msrx", "msr_x", theory.dt_relative_comm),
-    ):
-        for load in common.LOADS:
-            for x in xs:
-                cfg = slotted_sim.SimConfig(
-                    servers=common.SERVERS,
-                    slots=slots,
-                    load=load,
-                    policy="jsaq",
-                    comm="et",
-                    x=x,
-                    approx=approx,
-                )
-                res, wall = common.timed_simulate_batch(SEEDS, cfg)
-                rel = float(np.mean([r.msgs_per_departure for r in res]))
-                max_aq = max(r.max_aq for r in res)
-                bound = float(bound_fn(x))
-                ok_aq = max_aq <= x - 1
-                ok_bound = rel <= bound + 1e-9
-                rows.append(
-                    common.row(
-                        f"{fig}/load{load}/x{x}",
-                        wall,
-                        slots * len(SEEDS),
-                        common.fmt_derived(
-                            rel_comm=rel,
-                            bound=bound,
-                            below_bound=ok_bound,
-                            max_aq=max_aq,
-                            aq_ok=ok_aq,
-                            seeds=len(SEEDS),
-                        ),
-                        rel_comm=rel,
-                        bound=bound,
-                        max_aq=max_aq,
-                        ok=bool(ok_aq and ok_bound),
-                    )
-                )
-    return rows
+    # In quick mode, time the cold fused grid against the per-cell loop
+    # first (this also fills the cell cache the figure rows read from).
+    if quick:
+        fusion_rows = _fusion_rows(cells, slots)
+    else:
+        fusion_rows = []
+
+    cfgs = [cfg for _, _, cfg in cells]
+    results, walls = common.timed_simulate_grid(cfgs, SEEDS)
+
+    bound_fns = {fig: bound_fn for fig, _, bound_fn in FIGS}
+    for (fig, x, cfg), res, wall in zip(cells, results, walls):
+        rel = float(np.mean([r.msgs_per_departure for r in res]))
+        max_aq = max(r.max_aq for r in res)
+        bound = float(bound_fns[fig](x))
+        ok_aq = max_aq <= x - 1
+        ok_bound = rel <= bound + 1e-9
+        rows.append(
+            common.row(
+                f"{fig}/load{cfg.load}/x{x}",
+                wall,
+                slots * len(SEEDS),
+                common.fmt_derived(
+                    rel_comm=rel,
+                    bound=bound,
+                    below_bound=ok_bound,
+                    max_aq=max_aq,
+                    aq_ok=ok_aq,
+                    seeds=len(SEEDS),
+                ),
+                rel_comm=rel,
+                bound=bound,
+                max_aq=max_aq,
+                ok=bool(ok_aq and ok_bound),
+            )
+        )
+    return rows + fusion_rows

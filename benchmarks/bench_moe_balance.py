@@ -36,7 +36,7 @@ from benchmarks import common
 from repro.configs import get_config
 from repro.configs.base import CareConfig
 from repro.core import moe_balancer
-from repro.core.dispatch_sim import DispatchSimConfig, simulate
+from repro.core.dispatch_sim import DispatchSimConfig, dispatch_batch
 from repro.data import pipeline
 from repro.optim import adamw
 from repro.train import train_loop
@@ -174,7 +174,8 @@ def _section_b(quick: bool) -> list[dict]:
     results = {}
     for name, cfg in regimes:
         t0 = time.perf_counter()
-        rs = [simulate(seed, cfg) for seed in range(seeds)]
+        # All seeds in one vmapped scan (dispatch_batch), not a Python loop.
+        rs = dispatch_batch(range(seeds), cfg)
         wall = time.perf_counter() - t0
         agg = {
             "tail_gap": float(np.mean([r.tail_gap for r in rs])),

@@ -1,16 +1,22 @@
-"""Shared benchmark plumbing: timed simulation runs, a result cache, rows.
+"""Shared benchmark plumbing: grid-fused simulation runs, a cell cache, rows.
 
 Every benchmark module exposes ``run(quick: bool) -> list[dict]``; each row
 must carry ``name``, ``us_per_call`` and ``derived`` (the CSV contract of
 ``benchmarks/run.py``) plus any extra columns for the extended report.
 
-Simulations are cached by (seed(s), SimConfig) because several paper tables
-slice the same runs (e.g. the Fig 6 communication sweep and the Thm 2.3
-verification reuse identical (comm, approx, x) cells).
+Simulation sweeps go through :func:`timed_simulate_grid`: the caller hands
+over its *entire* figure grid as a list of ``SimConfig`` cells; the helper
+groups cells by their static part (shapes + kinds) and runs each group as
+**one compiled program** via ``slotted_sim.simulate_grid`` -- one jit,
+vmapped over the flattened (cell x seed) axis, shard_map-sharded across
+local devices.  Compile count per figure is therefore O(#static groups),
+not O(#cells).
 
-Seed sweeps go through :func:`timed_simulate_batch`, which drives
-``slotted_sim.simulate_batch`` -- all seeds run in one vmapped scan, so a
-batch costs roughly one sequential run's wall time rather than ``n``.
+Results are cached per ``(seed, SimConfig)`` cell because several paper
+tables slice the same runs (e.g. the Fig 6 communication sweep and the
+Thm 2.3 verification reuse identical (comm, approx, x) cells);
+:func:`timed_simulate` and :func:`timed_simulate_batch` serve from the
+same cache.
 """
 from __future__ import annotations
 
@@ -21,8 +27,8 @@ import jax
 
 from repro.core.care import slotted_sim
 
-_SIM_CACHE: dict = {}
-_BATCH_CACHE: dict = {}
+# (seed, SimConfig) -> (SimResult, attributed wall seconds)
+_CELL_CACHE: dict = {}
 
 DEFAULT_SLOTS = 100_000
 QUICK_SLOTS = 20_000
@@ -36,41 +42,63 @@ def sim_slots(quick: bool) -> int:
     return QUICK_SLOTS if quick else DEFAULT_SLOTS
 
 
+def timed_simulate_grid(
+    cfgs: Sequence[slotted_sim.SimConfig], seeds: Sequence[int]
+):
+    """Run a figure grid fused: one ``simulate_grid`` call per static group.
+
+    Returns ``(results, walls)`` aligned with ``cfgs``: ``results[i]`` is
+    the list of per-seed :class:`SimResult` for cell ``i`` and ``walls[i]``
+    its attributed wall time (a group's wall is split evenly across its
+    cells).  Cells already in the cache are served from it and charged
+    their original attributed wall time.
+    """
+    seeds = tuple(int(s) for s in seeds)
+    pending: dict = {}  # StaticConfig -> {cfg: None} (ordered, deduped)
+    for cfg in cfgs:
+        if any((s, cfg) not in _CELL_CACHE for s in seeds):
+            pending.setdefault(cfg.static_part(), {})[cfg] = None
+    for static, group in pending.items():
+        group_cfgs = list(group)
+        t0 = time.perf_counter()
+        grid = slotted_sim.simulate_grid(
+            list(seeds), static, [c.scenario() for c in group_cfgs]
+        )
+        wall = time.perf_counter() - t0
+        per_seed = wall / (len(group_cfgs) * len(seeds))
+        for cfg, cell in zip(group_cfgs, grid):
+            for s, r in zip(seeds, cell):
+                _CELL_CACHE[(s, cfg)] = (r, per_seed)
+    results, walls = [], []
+    for cfg in cfgs:
+        cached = [_CELL_CACHE[(s, cfg)] for s in seeds]
+        results.append([r for r, _ in cached])
+        walls.append(sum(w for _, w in cached))
+    return results, walls
+
+
 def timed_simulate(seed: int, cfg: slotted_sim.SimConfig):
     """simulate() with wall-time capture and (seed, cfg) memoisation.
 
     Returns (SimResult, wall_seconds).  Cached calls return the original
-    wall time so ``us_per_call`` stays meaningful.
+    (attributed) wall time so ``us_per_call`` stays meaningful.
     """
-    key = (seed, cfg)
-    if key not in _SIM_CACHE:
-        # A batched sweep may already contain this (seed, cfg) cell --
-        # reuse it (batch wall time attributed evenly across its seeds).
-        for (seeds, bcfg), (results, wall) in _BATCH_CACHE.items():
-            if bcfg == cfg and seed in seeds:
-                _SIM_CACHE[key] = (
-                    results[tuple(seeds).index(seed)], wall / len(seeds)
-                )
-                break
-        else:
-            t0 = time.perf_counter()
-            res = slotted_sim.simulate(jax.random.key(seed), cfg)
-            _SIM_CACHE[key] = (res, time.perf_counter() - t0)
-    return _SIM_CACHE[key]
+    key = (int(seed), cfg)
+    if key not in _CELL_CACHE:
+        t0 = time.perf_counter()
+        res = slotted_sim.simulate(jax.random.key(seed), cfg)
+        _CELL_CACHE[key] = (res, time.perf_counter() - t0)
+    return _CELL_CACHE[key]
 
 
 def timed_simulate_batch(seeds: Sequence[int], cfg: slotted_sim.SimConfig):
-    """simulate_batch() with wall-time capture and (seeds, cfg) memoisation.
+    """simulate_batch() with wall-time capture and per-cell memoisation.
 
-    Returns (list[SimResult], wall_seconds) -- one result per seed, computed
-    in a single vmapped scan.
+    Returns (list[SimResult], wall_seconds) -- one result per seed; the
+    one-cell special case of :func:`timed_simulate_grid`.
     """
-    key = (tuple(seeds), cfg)
-    if key not in _BATCH_CACHE:
-        t0 = time.perf_counter()
-        res = slotted_sim.simulate_batch(list(seeds), cfg)
-        _BATCH_CACHE[key] = (res, time.perf_counter() - t0)
-    return _BATCH_CACHE[key]
+    results, walls = timed_simulate_grid([cfg], seeds)
+    return results[0], walls[0]
 
 
 def row(name: str, wall_s: float, slots: int, derived: str, **extra) -> dict:

@@ -1,0 +1,164 @@
+"""Mechanically diff two benchmark trajectory files (``run.py --json``).
+
+Closes the ROADMAP "record and diff trajectories" item: CI uploads a
+``BENCH_*.json`` artifact per PR, and this tool compares any two such
+files row by row, failing on metric regressions beyond tolerance.
+
+Usage:
+  python -m benchmarks.diff BASELINE.json NEW.json [--rtol 0.02]
+      [--atol 1e-9] [--perf-rtol R] [--allow-missing]
+
+Rules (mechanical on purpose -- no per-benchmark knowledge):
+
+* Records are keyed by ``name``; the ``derived`` string and ``name`` are
+  never compared (they restate the numeric columns).
+* Wall-clock fields -- ``us_per_call``, ``speedup`` and any field ending in
+  ``_s`` -- are machine-dependent and skipped unless ``--perf-rtol`` is
+  given (then they are compared *one-sided*: only slowdowns/losses fail).
+* Numeric fields present in both records must satisfy
+  ``|new - old| <= atol + rtol * |old|``; a NaN appearing (or resolving)
+  on one side only is a regression, never a silent pass.
+* A compared baseline field missing from the new record is a regression
+  (the gate must not weaken silently; regenerate the baseline for
+  deliberate schema changes).
+* Boolean fields are pass/fail flags: ``True -> False`` is a regression,
+  ``False -> True`` an improvement.
+* A baseline row missing from the new file is a coverage regression
+  (suppress with ``--allow-missing``, e.g. for ``--only`` runs); rows only
+  in the new file are reported as additions and never fail.
+
+Exit status: 0 clean, 1 regressions found, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PERF_FIELDS = {"us_per_call", "speedup"}
+SKIP_FIELDS = {"name", "derived"}
+
+
+def _is_perf(field: str) -> bool:
+    return field in PERF_FIELDS or field.endswith("_s")
+
+
+def _index(records: list[dict]) -> dict[str, dict]:
+    return {r["name"]: r for r in records if "name" in r}
+
+
+def _perf_regressed(field: str, old: float, new: float, rtol: float) -> bool:
+    """One-sided perf check: higher time / lower speedup is a regression."""
+    if field == "speedup" or field.endswith("speedup"):
+        return new < old * (1.0 - rtol)
+    return new > old * (1.0 + rtol)
+
+
+def diff_records(
+    baseline: list[dict],
+    new: list[dict],
+    rtol: float = 0.02,
+    atol: float = 1e-9,
+    perf_rtol: float | None = None,
+    allow_missing: bool = False,
+) -> tuple[list[str], list[str]]:
+    """Compare trajectories; returns (regressions, notes)."""
+    old_by, new_by = _index(baseline), _index(new)
+    regressions: list[str] = []
+    notes: list[str] = []
+
+    for name in old_by:
+        if name not in new_by:
+            msg = f"row disappeared: {name}"
+            (notes if allow_missing else regressions).append(msg)
+    for name in new_by:
+        if name not in old_by:
+            notes.append(f"new row: {name}")
+
+    for name, old in old_by.items():
+        newr = new_by.get(name)
+        if newr is None:
+            continue
+        for field, ov in old.items():
+            if field in SKIP_FIELDS:
+                continue
+            if _is_perf(field) and perf_rtol is None:
+                continue  # machine-dependent and not compared: ignore
+            if field not in newr:
+                # A metric column vanishing is itself a regression: the
+                # gate must not weaken silently (regenerate the baseline
+                # for deliberate schema changes).
+                regressions.append(f"{name}.{field}: field disappeared")
+                continue
+            nv = newr[field]
+            if isinstance(ov, bool) or isinstance(nv, bool):
+                if bool(ov) and not bool(nv):
+                    regressions.append(
+                        f"{name}.{field}: flag regressed True -> {nv}"
+                    )
+                continue
+            if not isinstance(ov, (int, float)) or not isinstance(
+                nv, (int, float)
+            ):
+                continue  # strings / nested values: not compared
+            if math.isnan(float(nv)) != math.isnan(float(ov)):
+                regressions.append(f"{name}.{field}: {ov} -> {nv} (NaN)")
+                continue
+            if math.isnan(float(nv)):
+                continue  # NaN on both sides: equal by convention
+            if _is_perf(field):
+                if _perf_regressed(field, float(ov), float(nv), perf_rtol):
+                    regressions.append(
+                        f"{name}.{field}: perf regressed {ov} -> {nv}"
+                    )
+                continue
+            # Inverted form so an unexpected non-finite value can never
+            # slip through a False comparison.
+            if not (abs(float(nv) - float(ov)) <= atol + rtol * abs(float(ov))):
+                regressions.append(
+                    f"{name}.{field}: {ov} -> {nv} (rtol {rtol})"
+                )
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--rtol", type=float, default=0.02,
+                    help="relative tolerance for metric fields")
+    ap.add_argument("--atol", type=float, default=1e-9)
+    ap.add_argument("--perf-rtol", type=float, default=None,
+                    help="also compare wall-clock fields, one-sided, at "
+                         "this relative tolerance (default: skip them)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="rows missing from NEW are notes, not failures")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    regressions, notes = diff_records(
+        baseline, new, rtol=args.rtol, atol=args.atol,
+        perf_rtol=args.perf_rtol, allow_missing=args.allow_missing,
+    )
+    for n in notes:
+        print(f"note: {n}")
+    for r in regressions:
+        print(f"REGRESSION: {r}")
+    print(
+        f"{len(regressions)} regression(s), {len(notes)} note(s) across "
+        f"{len(_index(baseline))} baseline rows"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,8 +3,13 @@
 Usage:
   PYTHONPATH=src python -m benchmarks.run                 # all benchmarks
   PYTHONPATH=src python -m benchmarks.run --only jct      # substring filter
+  PYTHONPATH=src python -m benchmarks.run --only jct,ssc  # several filters
   PYTHONPATH=src python -m benchmarks.run --quick         # reduced sizes
   PYTHONPATH=src python -m benchmarks.run --json out.json # structured output
+
+Trajectories recorded with ``--json`` (CI uploads one as a ``BENCH_*``
+artifact per PR) are compared mechanically with ``benchmarks/diff.py``,
+which fails on metric regressions beyond tolerance.
 
 Prints ``name,us_per_call,derived`` CSV rows to stdout.  With ``--json`` the
 same rows (plus any extra per-row columns the modules attach, e.g.
@@ -13,14 +18,17 @@ records -- one object per row with at least ``name``, ``us_per_call`` and
 ``derived`` -- so ``BENCH_*.json`` trajectories can be recorded across PRs
 and diffed mechanically.
 
-Simulation-backed benchmarks sweep seeds through
-``repro.core.care.slotted_sim.simulate_batch`` (all seeds in one vmapped
-scan; see the ``jct/batch_speedup`` row in quick mode) and can exercise the
-scenario knobs of ``SimConfig`` beyond the paper's setting: bursty MMPP
-arrivals (``arrival="mmpp"``, ``burst_intensity``, ``burst_stay``),
-heterogeneous per-server service rates (``service_rates``, with
-drain-time-aware JSAQ via ``rate_aware``), and the hybrid ``comm="et_rt"``
-trigger (ET-x with an RT staleness cap).
+Simulation-backed benchmarks submit their *entire figure grid* through
+``benchmarks.common.timed_simulate_grid``, which groups cells by their
+static part and runs each group as one compiled program
+(``slotted_sim.simulate_grid``: scenario knobs are traced operands, the
+flattened cell x seed axis is shard_map-sharded across local devices; see
+the ``grid/compile_count`` / ``grid/speedup`` rows in quick mode).  The
+scenario knobs go beyond the paper's setting: bursty MMPP arrivals
+(``arrival="mmpp"``, ``burst_intensity``, ``burst_stay``), heterogeneous
+per-server service rates (``service_rates``, with drain-time-aware JSAQ
+via ``rate_aware``), and the hybrid ``comm="et_rt"`` trigger (ET-x with an
+RT staleness cap).
 
 The mapping to paper artifacts:
 
@@ -77,7 +85,11 @@ def _jsonable(v):
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="substring filter on module name")
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma-separated substring filter(s) on module names",
+    )
     ap.add_argument("--quick", action="store_true", help="reduced problem sizes")
     ap.add_argument(
         "--json",
@@ -93,8 +105,9 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     failures = 0
     records: list[dict] = []
+    only = [s for s in args.only.split(",") if s]
     for mod_name in BENCHES:
-        if args.only and args.only not in mod_name:
+        if only and not any(s in mod_name for s in only):
             continue
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.perf_counter()

@@ -1,14 +1,18 @@
 """Core library: the paper's contribution (CARE) as composable JAX modules."""
 
 from repro.core.care import (  # noqa: F401
+    Scenario,
     SimConfig,
     SimResult,
+    StaticConfig,
     approx,
     comm,
     metrics,
     routing,
     simulate,
     simulate_batch,
+    simulate_grid,
+    stack_scenarios,
     theory,
     workload,
 )

@@ -14,16 +14,25 @@ routing     -- resource-allocation policies (JSQ / JSAQ / SQ(d) / RR / Random)
 workload    -- arrival processes (Bernoulli / bursty MMPP) and heterogeneous
                per-server service-rate schedules
 slotted_sim -- discrete-time slotted simulator (paper Section 9), lax.scan
-               based; ``simulate_batch`` vmaps it over a batch of seeds
+               based; configuration is split into a static ``StaticConfig``
+               (shapes + kinds; jit specialises) and a traced ``Scenario``
+               pytree (load / x / rt_rate / burst / service_rates
+               operands); ``simulate_grid`` runs a whole scenario grid as
+               one compiled program, vmapped over (cell x seed) and
+               sharded across devices with ``shard_map``
 metrics     -- AQ / communication / JCT-CCDF metrics
 theory      -- closed-form bounds from Theorems 2.3, 2.4, 2.5
 """
 
 from repro.core.care.slotted_sim import (  # noqa: F401
+    Scenario,
     SimConfig,
     SimResult,
+    StaticConfig,
     simulate,
     simulate_batch,
+    simulate_grid,
+    stack_scenarios,
 )
 from repro.core.care import (  # noqa: F401
     approx,

@@ -33,14 +33,19 @@ ApproxKind = Literal["basic", "msr", "msr_x"]
 
 @dataclasses.dataclass(frozen=True)
 class ApproxConfig:
-    """Static configuration of the approximation algorithm.
+    """Configuration of the approximation algorithm.
 
     Attributes:
-      kind: which approximation algorithm the balancer runs.
+      kind: which approximation algorithm the balancer runs.  Always a
+        Python string (selects code paths at trace time).
       msr_slots: mean service requirement in slots (``1/mu`` in slot units);
         the deterministic service time assigned to every emulated job.
       x: the truncation parameter for ``msr_x`` (emulated departures are
-        capped at ``x - 1``).  Ignored for other kinds.
+        capped at ``x - 1``).  Ignored for other kinds.  May be a Python
+        int *or a traced scalar* -- the truncation comparison consumes it
+        as an array operand so a grid of x values shares one compiled
+        program (``slotted_sim.simulate_grid``); a config holding a tracer
+        must not be used as a static jit argument.
     """
 
     kind: ApproxKind = "msr"

@@ -47,15 +47,25 @@ CommKind = Literal["none", "rt", "dt", "et", "et_rt", "exact"]
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
-    """Static communication-pattern configuration (hashable).
+    """Communication-pattern configuration: static kind, numeric thresholds.
 
     Attributes:
-      kind: which trigger pattern runs (see module docstring).
+      kind: which trigger pattern runs (see module docstring).  Always a
+        Python string -- it selects code paths via ``if`` at trace time, so
+        it is compile-time by construction.
       x: DT-x departure count / ET-x error threshold.  Stored as a float so
         tiers measuring error in fractional units (e.g. tokens / mu) can use
         the same comparison; integer thresholds behave identically.
       rt_period: RT-r message period in slots; also the staleness cap of the
         ``et_rt`` hybrid.
+
+    ``x`` and ``rt_period`` may be Python numbers *or traced scalars*: the
+    trigger comparisons consume them as array operands, which is what lets
+    the slotted simulator run a whole ``(load, x, rt_rate)`` grid as one
+    compiled program (``slotted_sim.simulate_grid``).  A config holding
+    tracers must not be hashed (i.e. never passed as a static jit
+    argument); callers build it *inside* the traced function from the
+    static kind plus scenario operands.
     """
 
     kind: CommKind = "et"
@@ -142,7 +152,8 @@ def evaluate(
 
     Args:
       state: current :class:`CommState`.
-      cfg: static :class:`CommConfig` (Python-level; callers specialise).
+      cfg: :class:`CommConfig` -- ``kind`` is Python-level (callers
+        specialise on it); ``x`` / ``rt_period`` may be traced operands.
       err: ``(K,)`` current approximation error per server (any real dtype).
       new_deps: ``(K,)`` departures that completed this slot (int).
       xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.

@@ -67,7 +67,10 @@ def route(
     ``inv_rate`` (optional, ``(K,)``) supplies ``1/r_i`` under heterogeneous
     service rates: the shortest-queue family then minimises the *expected
     drain time* ``q_i / r_i`` rather than the raw length, so a queue of 4 at
-    a double-speed server beats a queue of 3 at a half-speed one.
+    a double-speed server beats a queue of 3 at a half-speed one.  It is an
+    array operand (a traced ``Scenario.service_rates`` derivative in the
+    grid simulator), so rate profiles can vary per grid cell without
+    recompiling; only its presence/absence is structural.
     """
     k = q_true.shape[0]
     if inv_rate is None:

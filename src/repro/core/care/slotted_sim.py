@@ -32,12 +32,44 @@ Because a message fires in the same slot in which the trigger condition is
 met, the end-of-slot approximation error satisfies ``AQ <= x - 1`` for DT-x
 and ET-x (Theorem 2.3) -- asserted by the tests.
 
+Static/traced split
+-------------------
+
+The paper's headline artifacts are *grids* over ``(load, x, rt_rate,
+scenario)``.  To run a whole grid as one compiled program, the
+configuration is split in two:
+
+* :class:`StaticConfig` -- the *structure* of the program: array shapes
+  (``servers``, ``slots``, ``buffer_cap``) and the policy / communication /
+  approximation / arrival **kinds**, which select code paths via Python
+  ``if``.  XLA must specialise on these; they are hashable static jit
+  arguments and changing any of them costs a recompile.
+* :class:`Scenario` -- a registered pytree of *traced array operands*:
+  ``load``, ``x``, ``rt_rate`` (carried as the derived ``rt_period``
+  operand), ``burst_intensity``/``burst_stay`` (carried as the derived
+  ``lam_hi``/``lam_lo`` operands) and ``service_rates``.  Trigger
+  thresholds and arrival/rate schedules consume these as arrays, so any
+  number of scenario cells share one compiled program.
+
+:class:`SimConfig` remains the user-facing cell description; it is exactly
+``static_part() + scenario()``.  Derived operands (``rt_period``,
+``lam_hi``, ``lam_lo``) are computed host-side in float64 at
+:class:`Scenario` construction so the traced program is bit-identical to
+the historical compile-per-cell program (golden-tested in
+``tests/test_grid.py``).
+
 The whole simulation is a single ``jax.lax.scan``; all per-server state is
 vectorised and job FIFOs are circular buffers carried through the scan, so
-the simulator jit-compiles once per (policy, pattern, approximation) triple
-and runs at native speed on CPU/TPU.  :func:`simulate_batch` vmaps the same
-scan over a batch of PRNG keys, amortising per-op dispatch overhead across
-seeds -- the entry point the benchmarks use for seed sweeps.
+the simulator jit-compiles **once per StaticConfig** and runs at native
+speed on CPU/TPU.  Batching entry points:
+
+* :func:`simulate` -- one key, one cell.
+* :func:`simulate_batch` -- vmap over a batch of PRNG keys for one cell.
+* :func:`simulate_grid` -- the sweep entry point: one jit, ``vmap`` over
+  the flattened ``(scenario x seed)`` axis, sharded across local devices
+  with ``shard_map``.  Ragged batches are padded up to the device count
+  (and the padding dropped on the way out), so they no longer fall back to
+  a single device the way the old ``pmap`` path did.
 """
 from __future__ import annotations
 
@@ -48,6 +80,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.care import approx as approx_lib
 from repro.core.care import comm as comm_lib
@@ -58,8 +92,101 @@ CommKind = comm_lib.CommKind
 
 
 @dataclasses.dataclass(frozen=True)
+class StaticConfig:
+    """The compile-time structure of the simulator program (hashable).
+
+    Only knobs that change the *traced program itself* live here: array
+    shapes (``servers``, ``slots``, ``buffer_cap``, ``mean_service`` --
+    the latter sizes nothing but selects the emulation constant, kept
+    static alongside the geometric-size stream it parameterises) and the
+    policy / comm / approx / arrival kinds plus the two rate flags, which
+    pick code paths via Python ``if`` at trace time.  Everything numeric a
+    figure sweeps lives in :class:`Scenario` instead.
+    """
+
+    servers: int = 30
+    slots: int = 100_000
+    mean_service: int = 30
+    policy: routing_lib.PolicyKind = "jsaq"
+    comm: CommKind = "et"
+    approx: approx_lib.ApproxKind = "msr"
+    buffer_cap: int = 2048
+    sqd: int = 2
+    arrival: str = "bernoulli"  # "bernoulli" | "mmpp"
+    use_rates: bool = False  # heterogeneous service_rates in play
+    rate_aware: bool = True
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Traced scenario operands -- one grid cell (a registered pytree).
+
+    The user-facing knobs ``rt_rate`` / ``burst_intensity`` are carried for
+    reporting, but the scan consumes the *derived* operands ``rt_period``
+    and ``lam_hi``/``lam_lo``: those derivations involve host float64
+    arithmetic (``round``, the MMPP rate balance), so they are computed
+    once at construction -- bit-identical to the historical
+    compile-per-cell program -- and traced as ready-made arrays.
+
+    Build cells with :meth:`create` (or ``SimConfig.scenario()``); stack
+    cells along a leading axis with :func:`stack_scenarios` to form the
+    batched operand :func:`simulate_grid` takes.
+    """
+
+    load: jnp.ndarray  # () f32 arrival rate
+    x: jnp.ndarray  # () i32 DT-x / ET-x parameter
+    rt_rate: jnp.ndarray  # () f32 RT-r rate (reporting; rt_period is used)
+    rt_period: jnp.ndarray  # () i32 derived RT period in slots
+    burst_intensity: jnp.ndarray  # () f32 MMPP knob (reporting)
+    burst_stay: jnp.ndarray  # () f32 MMPP per-slot stay probability
+    lam_hi: jnp.ndarray  # () f32 derived MMPP burst-state arrival rate
+    lam_lo: jnp.ndarray  # () f32 derived MMPP lull-state arrival rate
+    service_rates: jnp.ndarray  # (K,) f32 per-server speeds (ones if unused)
+
+    @staticmethod
+    def create(
+        servers: int,
+        load: float,
+        x: int = 3,
+        rt_rate: float = 0.01,
+        burst_intensity: float = 1.6,
+        burst_stay: float = 0.98,
+        service_rates: Optional[Sequence[float]] = None,
+    ) -> "Scenario":
+        lam_hi = min(burst_intensity * load, 1.0)
+        lam_lo = max(2.0 * load - lam_hi, 0.0)
+        period = max(int(round(1.0 / max(rt_rate, 1e-9))), 1)
+        rates = (
+            jnp.ones((servers,), jnp.float32)
+            if service_rates is None
+            else jnp.asarray(service_rates, jnp.float32)
+        )
+        return Scenario(
+            load=jnp.float32(load),
+            x=jnp.int32(x),
+            rt_rate=jnp.float32(rt_rate),
+            rt_period=jnp.int32(period),
+            burst_intensity=jnp.float32(burst_intensity),
+            burst_stay=jnp.float32(burst_stay),
+            lam_hi=jnp.float32(lam_hi),
+            lam_lo=jnp.float32(lam_lo),
+            service_rates=rates,
+        )
+
+
+def stack_scenarios(scenarios: Sequence[Scenario]) -> Scenario:
+    """Stack unbatched cells into one batched Scenario (leading axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
+@dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Static simulation configuration (hashable; jit specialises on it).
+    """One grid cell as the user sees it: static structure + scenario knobs.
+
+    ``SimConfig`` is hashable (benchmark caches key on it) and splits into
+    the two halves the compiled program takes: :meth:`static_part` (jit
+    specialises on it) and :meth:`scenario` (traced operands).
 
     Scenario knobs beyond the paper's Section 9.1 setting:
 
@@ -92,14 +219,30 @@ class SimConfig:
     service_rates: Optional[Tuple[float, ...]] = None
     rate_aware: bool = True
 
-    def approx_config(self) -> approx_lib.ApproxConfig:
-        return approx_lib.ApproxConfig(
-            kind=self.approx, msr_slots=self.mean_service, x=self.x
+    def static_part(self) -> StaticConfig:
+        return StaticConfig(
+            servers=self.servers,
+            slots=self.slots,
+            mean_service=self.mean_service,
+            policy=self.policy,
+            comm=self.comm,
+            approx=self.approx,
+            buffer_cap=self.buffer_cap,
+            sqd=self.sqd,
+            arrival=self.arrival,
+            use_rates=self.service_rates is not None,
+            rate_aware=self.rate_aware,
         )
 
-    def comm_config(self) -> comm_lib.CommConfig:
-        return comm_lib.CommConfig.from_rate(
-            self.comm, x=self.x, rt_rate=self.rt_rate
+    def scenario(self) -> Scenario:
+        return Scenario.create(
+            servers=self.servers,
+            load=self.load,
+            x=self.x,
+            rt_rate=self.rt_rate,
+            burst_intensity=self.burst_intensity,
+            burst_stay=self.burst_stay,
+            service_rates=self.service_rates,
         )
 
 
@@ -145,30 +288,42 @@ jax.tree_util.register_dataclass(
 )
 
 
-def _prep(key: jax.Array, cfg: SimConfig):
-    """Draw the replayable workload: (arrive, sizes, slot_keys)."""
+def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
+    """Draw the replayable workload: (arrive, sizes, slot_keys).
+
+    Fully traceable in the scenario operands (the arrival *kind* alone is
+    static), so a grid of cells shares one compiled workload generator.
+    """
     k_arr, k_size, k_scan = jax.random.split(key, 3)
-    t = cfg.slots
-    if cfg.arrival == "mmpp":
-        arrive = workload_lib.mmpp_arrivals(
-            k_arr, t, cfg.load, cfg.burst_intensity, cfg.burst_stay
+    t = static.slots
+    if static.arrival == "mmpp":
+        arrive = workload_lib.mmpp_arrivals_from_rates(
+            k_arr, t, scn.lam_hi, scn.lam_lo, scn.burst_stay
         )
     else:
-        arrive = workload_lib.bernoulli_arrivals(k_arr, t, cfg.load)
-    sizes = workload_lib.geometric_sizes(k_size, t, cfg.mean_service)
+        arrive = workload_lib.bernoulli_arrivals(k_arr, t, scn.load)
+    sizes = workload_lib.geometric_sizes(k_size, t, static.mean_service)
     slot_keys = jax.random.split(k_scan, t)
     return arrive, sizes, slot_keys
 
 
-def _sim_core(arrive, sizes, slot_keys, cfg: SimConfig):
-    """One full slotted run as a lax.scan; traceable (also under vmap)."""
-    k = cfg.servers
-    b = cfg.buffer_cap
-    acfg = cfg.approx_config()
-    ccfg = cfg.comm_config()
-    if cfg.service_rates is not None:
-        rates = jnp.asarray(cfg.service_rates, jnp.float32)
-        inv_rate = 1.0 / rates if cfg.rate_aware else None
+def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
+    """One full slotted run as a lax.scan; traceable (also under vmap).
+
+    ``static`` selects code paths (Python ``if`` on kinds); every numeric
+    scenario knob enters as a traced operand of ``scn``.
+    """
+    k = static.servers
+    b = static.buffer_cap
+    acfg = approx_lib.ApproxConfig(
+        kind=static.approx, msr_slots=static.mean_service, x=scn.x
+    )
+    ccfg = comm_lib.CommConfig(
+        kind=static.comm, x=scn.x, rt_period=scn.rt_period
+    )
+    if static.use_rates:
+        rates = scn.service_rates
+        inv_rate = 1.0 / rates if static.rate_aware else None
     else:
         rates = None
         inv_rate = None
@@ -178,8 +333,8 @@ def _sim_core(arrive, sizes, slot_keys, cfg: SimConfig):
 
         # --- 1. arrival & routing -------------------------------------
         server, rr_ptr = routing_lib.route(
-            cfg.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
-            d=cfg.sqd, inv_rate=inv_rate,
+            static.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
+            d=static.sqd, inv_rate=inv_rate,
         )
         # Dense one-hot arithmetic instead of scalar gathers / scatters /
         # conds: under vmap those lower to serial per-batch-element loops
@@ -298,34 +453,75 @@ def _sim_core(arrive, sizes, slot_keys, cfg: SimConfig):
     )
 
 
-_simulate_jit = jax.jit(_sim_core, static_argnums=(3,))
+def _run_one(key, scn: Scenario, static: StaticConfig):
+    """Workload draw + scan for one (key, scenario) pair; vmap-able."""
+    arrive, sizes, slot_keys = _prep(key, static, scn)
+    return (arrive,) + _sim_core(arrive, sizes, slot_keys, static, scn)
 
 
-def _batch_one(key, cfg: SimConfig):
-    arrive, sizes, slot_keys = _prep(key, cfg)
-    return (arrive,) + _sim_core(arrive, sizes, slot_keys, cfg)
+_simulate_jit = jax.jit(_run_one, static_argnums=(2,))
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _simulate_batch_jit(keys, cfg: SimConfig):
-    return jax.vmap(lambda k: _batch_one(k, cfg))(keys)
+_GRID_PROGRAMS: list = []  # jitted grid wrappers, one per (static, n_dev)
 
 
 @functools.lru_cache(maxsize=None)
-def _simulate_batch_pmap(cfg: SimConfig, n_dev: int):
-    """Device-sharded batch: pmap over local devices, vmap within each.
+def _grid_fn(static: StaticConfig, n_dev: int):
+    """The one compiled program for a whole grid: vmap inside shard_map.
 
-    ``n_dev`` is part of the cache key: a pmap built for a different
-    ``jax.local_device_count()`` (e.g. before a topology change in-process)
-    would otherwise be silently reused and fail or undershard.
+    Cached per (StaticConfig, device count) -- the device count is part of
+    the key so an in-process topology change can never reuse a mesh built
+    for a different shard count.  ``n_dev == 1`` skips the mesh entirely
+    (plain jitted vmap), which is also the path `shard=False` forces.
     """
-    assert n_dev == jax.local_device_count(), (
-        "cached pmap requested for a stale device topology"
+    batched = jax.vmap(lambda key, scn: _run_one(key, scn, static))
+    if n_dev <= 1:
+        fn = jax.jit(batched)
+    else:
+        mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
+        fn = jax.jit(shard_map(
+            batched, mesh=mesh, in_specs=(P("runs"), P("runs")),
+            out_specs=P("runs"),
+        ))
+    _GRID_PROGRAMS.append(fn)
+    return fn
+
+
+def grid_compile_count() -> int:
+    """Total XLA programs compiled by the grid path so far.
+
+    Sums the compiled-shape cache sizes of every (StaticConfig,
+    device-count) jitted wrapper: re-invoking a cached wrapper with a new
+    flattened batch length retraces and compiles a fresh executable, and
+    that counts too -- this is real compile work, not wrapper
+    instantiations.
+    """
+    # _cache_size is a private jax API (present on the pinned 0.4.x); a
+    # future jax that drops it degrades to counting wrapper instantiations
+    # rather than breaking every quick-mode benchmark run.
+    return sum(
+        getattr(f, "_cache_size", lambda: 1)() for f in _GRID_PROGRAMS
     )
-    return jax.pmap(jax.vmap(lambda k: _batch_one(k, cfg)))
 
 
-def _finalize(arrive_np: np.ndarray, out, cfg: SimConfig) -> SimResult:
+def _pad_indices(n: int, n_dev: int) -> np.ndarray:
+    """Gather indices padding ``n`` runs up to a multiple of ``n_dev``.
+
+    The pad entries re-run existing cells (wrap-around), so a ragged batch
+    shards across *all* devices instead of falling back to one; the caller
+    drops outputs beyond ``n``.  Handles ``n < n_dev`` too.
+    """
+    n_pad = ((n + n_dev - 1) // n_dev) * n_dev
+    return np.arange(n_pad) % n
+
+
+def _as_keys(keys: jax.Array | Sequence[int]) -> jax.Array:
+    if isinstance(keys, jax.Array):
+        return keys
+    return jnp.stack([jax.random.key(int(s)) for s in keys])
+
+
+def _finalize(arrive_np: np.ndarray, out) -> SimResult:
     """Convert one run's device outputs into a host-side SimResult."""
     (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
      gap_sup) = (np.asarray(o) for o in out)
@@ -354,10 +550,76 @@ def _finalize(arrive_np: np.ndarray, out, cfg: SimConfig) -> SimResult:
 
 
 def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
-    """Run one slotted simulation; returns host-side metrics."""
-    arrive, sizes, slot_keys = _prep(key, cfg)
-    out = _simulate_jit(arrive, sizes, slot_keys, cfg)
-    return _finalize(np.asarray(arrive), out, cfg)
+    """Run one slotted simulation; returns host-side metrics.
+
+    Routes through the same traced core as :func:`simulate_grid`, so all
+    cells sharing a :class:`StaticConfig` share one compiled program.
+    """
+    out = _simulate_jit(key, cfg.scenario(), cfg.static_part())
+    return _finalize(np.asarray(out[0]), out[1:])
+
+
+def simulate_grid(
+    keys: jax.Array | Sequence[int],
+    static_cfg: StaticConfig,
+    scenarios: Scenario | Sequence[Scenario],
+    *,
+    shard: bool = True,
+) -> list[list[SimResult]]:
+    """Run a whole scenario grid as **one compiled program**.
+
+    Args:
+      keys: batched PRNG key array or sequence of integer seeds, shape
+        ``(S,)`` -- every cell replays the same seed set.
+      static_cfg: the shared program structure; every cell of the grid must
+        agree on it (kinds and shapes are compile-time, by design -- see the
+        module docstring).
+      scenarios: ``C`` traced cells -- a sequence of unbatched
+        :class:`Scenario` or an already-stacked batched Scenario.
+      shard: shard the flattened ``(C*S,)`` run axis across local devices
+        with ``shard_map``.  Ragged batches are padded up to the device
+        count with wrap-around duplicate runs (dropped on output), so
+        sharding never silently degrades to one device.
+
+    Returns:
+      ``results[c][s]`` -- one :class:`SimResult` per (cell, seed),
+      bit-identical to ``simulate(key_s, cell_c)`` (asserted by
+      ``tests/test_grid.py``): vmap, shard_map and padding are all
+      semantics-preserving.
+    """
+    keys = _as_keys(keys)
+    if isinstance(scenarios, Scenario):
+        scn_stacked = scenarios
+        c = int(jax.tree.leaves(scenarios)[0].shape[0])
+    else:
+        scenarios = list(scenarios)
+        c = len(scenarios)
+        scn_stacked = stack_scenarios(scenarios)
+    s = keys.shape[0]
+    n = c * s
+
+    # Flatten cell-major: run r = cell * S + seed.
+    keys_flat = jnp.broadcast_to(keys[None], (c, s)).reshape((n,))
+    scn_flat = jax.tree.map(
+        lambda a: jnp.repeat(a, s, axis=0), scn_stacked
+    )
+
+    n_dev = jax.local_device_count() if shard else 1
+    idx = _pad_indices(n, n_dev)
+    if len(idx) != n:
+        keys_flat = keys_flat[idx]
+        scn_flat = jax.tree.map(lambda a: a[idx], scn_flat)
+
+    out = _grid_fn(static_cfg, n_dev)(keys_flat, scn_flat)
+    out_np = [np.asarray(o)[:n] for o in out]
+    arrive, rest = out_np[0], out_np[1:]
+    return [
+        [
+            _finalize(arrive[i * s + j], tuple(o[i * s + j] for o in rest))
+            for j in range(s)
+        ]
+        for i in range(c)
+    ]
 
 
 def simulate_batch(
@@ -368,28 +630,17 @@ def simulate_batch(
     ``keys`` is either a batched PRNG key array or a sequence of integer
     seeds.  Numerically identical to calling :func:`simulate` per key (vmap
     is semantics-preserving -- asserted by the tests), but executes every
-    run in a single program.  When more than one local device is visible
-    (TPU/GPU, or CPU with ``--xla_force_host_platform_device_count``, which
-    ``benchmarks/run.py`` sets) and the batch divides evenly, the batch is
-    additionally *sharded across devices* with ``pmap`` -- that is where the
-    wall-clock win comes from on CPU, since the slotted scan body fuses into
-    a compute-bound loop that a single core can't amortise further.
+    run in a single program: the one-cell special case of
+    :func:`simulate_grid`, inheriting its ``shard_map`` sharding across
+    local devices (TPU/GPU, or CPU with
+    ``--xla_force_host_platform_device_count``, which ``benchmarks/run.py``
+    sets) -- that is where the wall-clock win comes from on CPU, since the
+    slotted scan body fuses into a compute-bound loop that a single core
+    can't amortise further.  Ragged batches are padded, not unsharded.
     """
-    if not isinstance(keys, jax.Array):
-        keys = jnp.stack([jax.random.key(int(s)) for s in keys])
-    n = keys.shape[0]
-    n_dev = jax.local_device_count()
-    if shard and n_dev > 1 and n % n_dev == 0:
-        out = _simulate_batch_pmap(cfg, n_dev)(keys.reshape(n_dev, n // n_dev))
-        out_np = [np.asarray(o).reshape((n,) + np.shape(o)[2:]) for o in out]
-    else:
-        out = _simulate_batch_jit(keys, cfg)
-        out_np = [np.asarray(o) for o in out]
-    arrive, rest = out_np[0], out_np[1:]
-    return [
-        _finalize(arrive[i], tuple(o[i] for o in rest), cfg)
-        for i in range(n)
-    ]
+    return simulate_grid(
+        keys, cfg.static_part(), [cfg.scenario()], shard=shard
+    )[0]
 
 
 def exact_state_messages(result: SimResult, policy: str, sqd: int = 2) -> int:

@@ -42,8 +42,12 @@ def geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
     return jnp.maximum(sizes, 1.0).astype(jnp.int32)
 
 
-def bernoulli_arrivals(key: jax.Array, slots: int, load: float) -> jnp.ndarray:
-    """One potential arrival per slot with probability ``load``."""
+def bernoulli_arrivals(key: jax.Array, slots: int, load) -> jnp.ndarray:
+    """One potential arrival per slot with probability ``load``.
+
+    ``load`` may be a Python float or a traced scalar -- the grid simulator
+    passes it as a :class:`~repro.core.care.slotted_sim.Scenario` operand.
+    """
     return jax.random.bernoulli(key, load, (slots,))
 
 
@@ -60,9 +64,30 @@ def mmpp_arrivals(
     rate ``lam_hi = min(burst_intensity * load, 1)`` the lull rate
     ``lam_lo = 2 * load - lam_hi`` keeps the long-run arrival rate at
     ``load`` (``lam_lo`` is clipped at 0; intensities beyond ``2`` saturate).
+
+    Host-side convenience wrapper: the rate balance runs in Python float64.
+    Traced callers (the scenario grid) precompute ``lam_hi`` / ``lam_lo``
+    the same way at :class:`Scenario` construction and call
+    :func:`mmpp_arrivals_from_rates` directly -- keeping the two paths
+    bit-identical.
     """
     lam_hi = min(burst_intensity * load, 1.0)
     lam_lo = max(2.0 * load - lam_hi, 0.0)
+    return mmpp_arrivals_from_rates(key, slots, lam_hi, lam_lo, burst_stay)
+
+
+def mmpp_arrivals_from_rates(
+    key: jax.Array,
+    slots: int,
+    lam_hi,
+    lam_lo,
+    burst_stay,
+) -> jnp.ndarray:
+    """MMPP arrivals from ready-made state rates (traceable operands).
+
+    ``lam_hi`` / ``lam_lo`` / ``burst_stay`` may be Python floats or traced
+    scalars; only ``slots`` is structural.
+    """
     k_switch, k_arr = jax.random.split(key)
     switch = jax.random.uniform(k_switch, (slots,)) >= burst_stay
     u_arr = jax.random.uniform(k_arr, (slots,))

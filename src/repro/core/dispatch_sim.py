@@ -121,8 +121,7 @@ def _rel(load):
     return load / (mean + 1e-6) - 1.0
 
 
-@functools.partial(jax.jit, static_argnums=(1,))
-def _sim(key, cfg: DispatchSimConfig):
+def _sim_core(key, cfg: DispatchSimConfig):
     d, e, t, k = cfg.dispatchers, cfg.experts, cfg.tokens_per_step, cfg.top_k
     mu = cfg.mu
     ccfg = cfg.comm_config()
@@ -191,8 +190,16 @@ def _sim(key, cfg: DispatchSimConfig):
     return backlog, gap, errs, comm_state.msgs
 
 
-def simulate(seed: int, cfg: DispatchSimConfig) -> DispatchSimResult:
-    backlog, gap, errs, msgs = _sim(jax.random.key(seed), cfg)
+_sim = jax.jit(_sim_core, static_argnums=(1,))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _sim_batch(keys, cfg: DispatchSimConfig):
+    """All seeds in one program: vmap of the scan over a batch of keys."""
+    return jax.vmap(lambda k: _sim_core(k, cfg))(keys)
+
+
+def _finalize(backlog, gap, errs, msgs, cfg: DispatchSimConfig) -> DispatchSimResult:
     backlog, gap = np.asarray(backlog), np.asarray(gap)
     half = len(backlog) // 2
     return DispatchSimResult(
@@ -206,3 +213,26 @@ def simulate(seed: int, cfg: DispatchSimConfig) -> DispatchSimResult:
         transient_gap=float(gap[50:half].mean()) if half > 50 else float("nan"),
         max_err=float(np.asarray(errs).max()),
     )
+
+
+def simulate(seed: int, cfg: DispatchSimConfig) -> DispatchSimResult:
+    backlog, gap, errs, msgs = _sim(jax.random.key(seed), cfg)
+    return _finalize(backlog, gap, errs, msgs, cfg)
+
+
+def dispatch_batch(
+    seeds, cfg: DispatchSimConfig
+) -> list[DispatchSimResult]:
+    """Run a seed sweep as one vmapped scan (one result per seed).
+
+    The dispatch-tier analogue of ``slotted_sim.simulate_batch``:
+    numerically identical to calling :func:`simulate` per seed (vmap is
+    semantics-preserving), but every seed runs in a single compiled
+    program -- ``bench_moe_balance``'s seed loop folds into one call.
+    """
+    keys = jnp.stack([jax.random.key(int(s)) for s in seeds])
+    backlog, gap, errs, msgs = _sim_batch(keys, cfg)
+    return [
+        _finalize(backlog[i], gap[i], errs[i], msgs[i], cfg)
+        for i in range(keys.shape[0])
+    ]

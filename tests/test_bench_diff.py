@@ -1,0 +1,83 @@
+"""Unit tests for the mechanical trajectory differ (benchmarks/diff.py)."""
+from benchmarks.diff import diff_records
+
+
+def _row(name, **kv):
+    return {"name": name, "derived": "ignored", **kv}
+
+
+class TestDiffRecords:
+    def test_clean(self):
+        base = [_row("a", rel_comm=0.1, ok=True, us_per_call=5.0)]
+        new = [_row("a", rel_comm=0.1005, ok=True, us_per_call=50.0)]
+        regs, notes = diff_records(base, new)
+        assert regs == []
+
+    def test_metric_regression(self):
+        base = [_row("a", rel_comm=0.10)]
+        new = [_row("a", rel_comm=0.15)]
+        regs, _ = diff_records(base, new)
+        assert len(regs) == 1 and "rel_comm" in regs[0]
+
+    def test_flag_regression_one_sided(self):
+        base = [_row("a", ok=True), _row("b", ok=False)]
+        new = [_row("a", ok=False), _row("b", ok=True)]
+        regs, _ = diff_records(base, new)
+        assert len(regs) == 1 and regs[0].startswith("a.ok")
+
+    def test_missing_row(self):
+        base = [_row("a", v=1.0), _row("b", v=1.0)]
+        new = [_row("a", v=1.0)]
+        regs, _ = diff_records(base, new)
+        assert any("disappeared" in r for r in regs)
+        regs, notes = diff_records(base, new, allow_missing=True)
+        assert regs == [] and any("disappeared" in n for n in notes)
+
+    def test_new_row_is_note(self):
+        base = [_row("a", v=1.0)]
+        new = [_row("a", v=1.0), _row("c", v=9.9)]
+        regs, notes = diff_records(base, new)
+        assert regs == [] and any("new row" in n for n in notes)
+
+    def test_perf_fields_skipped_by_default(self):
+        base = [_row("a", us_per_call=1.0, speedup=4.0, t_grid_s=1.0)]
+        new = [_row("a", us_per_call=99.0, speedup=0.5, t_grid_s=9.0)]
+        regs, _ = diff_records(base, new)
+        assert regs == []
+
+    def test_perf_one_sided_when_enabled(self):
+        base = [_row("a", us_per_call=1.0, speedup=4.0)]
+        # Faster + higher speedup: improvements never fail.
+        new = [_row("a", us_per_call=0.5, speedup=8.0)]
+        regs, _ = diff_records(base, new, perf_rtol=0.25)
+        assert regs == []
+        new = [_row("a", us_per_call=2.0, speedup=1.0)]
+        regs, _ = diff_records(base, new, perf_rtol=0.25)
+        assert len(regs) == 2
+
+    def test_nan_is_a_regression_not_a_pass(self):
+        base = [_row("a", mean_jct=80.3)]
+        new = [_row("a", mean_jct=float("nan"))]
+        regs, _ = diff_records(base, new)
+        assert len(regs) == 1 and "NaN" in regs[0]
+        # NaN on both sides compares equal (a knowingly-NaN metric).
+        base = [_row("a", mean_jct=float("nan"))]
+        regs, _ = diff_records(base, new)
+        assert regs == []
+
+    def test_dropped_metric_field_is_a_regression(self):
+        base = [_row("a", rel_comm=0.1, mean_jct=80.0)]
+        new = [_row("a", mean_jct=80.0)]
+        regs, _ = diff_records(base, new)
+        assert len(regs) == 1 and "field disappeared" in regs[0]
+        # ... but a skipped perf field may vanish freely.
+        base = [_row("a", mean_jct=80.0, us_per_call=5.0)]
+        new = [_row("a", mean_jct=80.0)]
+        regs, _ = diff_records(base, new)
+        assert regs == []
+
+    def test_int_fields_exact_within_tolerance(self):
+        base = [_row("a", max_aq=2)]
+        new = [_row("a", max_aq=3)]
+        regs, _ = diff_records(base, new)
+        assert len(regs) == 1

@@ -1,0 +1,257 @@
+"""Tests for the static/traced config split and the fused grid simulator.
+
+Three layers of protection for the "one compiled program per figure" path:
+
+1. **Goldens** -- metric fingerprints captured from the pre-split
+   compile-per-cell simulator (every scenario knob was a static jit
+   argument).  The traced-operand path must reproduce them *bit for bit*:
+   the ``Scenario`` derivations (``rt_period``, MMPP ``lam_hi/lam_lo``)
+   intentionally run in host float64 so no f32-vs-f64 rounding can leak
+   into the arrival streams.
+2. **Grid equivalence** -- ``simulate_grid`` must equal per-cell
+   ``simulate`` on fixed seeds (messages, max_aq, full JCT arrays):
+   vmap / shard_map / padding are all semantics-preserving.
+3. **Topology** -- padding indices are exercised directly, and a
+   subprocess forced to 8 host devices re-runs a ragged grid (3 runs over
+   8 shards) that must match the in-process device count's results.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, simulate, simulate_batch, simulate_grid
+from repro.core.care import slotted_sim
+from repro.core.dispatch_sim import DispatchSimConfig, dispatch_batch
+from repro.core.dispatch_sim import simulate as dispatch_simulate
+
+# ---------------------------------------------------------------------------
+# 1. Goldens: the traced path reproduces the compile-per-cell seed simulator.
+# ---------------------------------------------------------------------------
+
+HETERO_RATES = tuple(1.5 if i < 15 else 0.5 for i in range(30))
+
+GOLDEN_CELLS = {
+    "et_msr": dict(slots=4000, load=0.95, policy="jsaq", comm="et", x=3, approx="msr"),
+    "et_msr_x5": dict(slots=4000, load=0.8, policy="jsaq", comm="et", x=5, approx="msr"),
+    "dt_msrx": dict(slots=4000, load=0.9, policy="jsaq", comm="dt", x=3, approx="msr_x"),
+    "rt": dict(slots=4000, load=0.9, policy="jsaq", comm="rt", rt_rate=0.02, approx="msr"),
+    "et_rt": dict(slots=4000, load=0.5, policy="jsaq", comm="et_rt", x=3, rt_rate=0.01, approx="msr"),
+    "jsq": dict(slots=4000, load=0.95, policy="jsq", comm="none"),
+    "sq2": dict(slots=4000, load=0.95, policy="sq2", comm="none"),
+    "rr": dict(slots=4000, load=0.95, policy="rr", comm="none"),
+    "mmpp": dict(slots=4000, load=0.95, policy="jsaq", comm="et", x=3, approx="msr",
+                 arrival="mmpp", burst_intensity=1.7, burst_stay=0.97),
+    "hetero": dict(slots=4000, load=0.95, policy="jsaq", comm="et", x=3, approx="msr",
+                   service_rates=HETERO_RATES),
+    "basic": dict(slots=4000, load=0.9, policy="jsaq", comm="dt", x=4, approx="basic"),
+}
+
+# Captured from the seed implementation (SimConfig fully static) at the
+# commit introducing the split; keys are (cell, seed) -> fingerprint.
+GOLDENS = json.loads("""
+{"et_msr/s0":{"messages":417,"max_aq":2,"departures":3740,"arrivals":3815,"dropped":0,"max_queue":6,"gap_sup":6,"jct_sum":301134,"jct_n":3740,"per_srv_sum":55473},
+"et_msr/s7":{"messages":379,"max_aq":2,"departures":3720,"arrivals":3791,"dropped":0,"max_queue":6,"gap_sup":6,"jct_sum":294476,"jct_n":3720,"per_srv_sum":55018},
+"et_msr_x5/s0":{"messages":53,"max_aq":4,"departures":3159,"arrivals":3207,"dropped":0,"max_queue":6,"gap_sup":6,"jct_sum":201963,"jct_n":3159,"per_srv_sum":46925},
+"et_msr_x5/s7":{"messages":42,"max_aq":4,"departures":3160,"arrivals":3211,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":189754,"jct_n":3160,"per_srv_sum":46340},
+"dt_msrx/s0":{"messages":1178,"max_aq":2,"departures":3568,"arrivals":3619,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":200744,"jct_n":3568,"per_srv_sum":52187},
+"dt_msrx/s7":{"messages":1177,"max_aq":2,"departures":3559,"arrivals":3599,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":187847,"jct_n":3559,"per_srv_sum":52847},
+"rt/s0":{"messages":2400,"max_aq":4,"departures":3563,"arrivals":3619,"dropped":0,"max_queue":4,"gap_sup":4,"jct_sum":216091,"jct_n":3563,"per_srv_sum":52046},
+"rt/s7":{"messages":2400,"max_aq":4,"departures":3549,"arrivals":3599,"dropped":0,"max_queue":4,"gap_sup":4,"jct_sum":207202,"jct_n":3549,"per_srv_sum":51905},
+"et_rt/s0":{"messages":1200,"max_aq":2,"departures":1940,"arrivals":1958,"dropped":0,"max_queue":3,"gap_sup":3,"jct_sum":71989,"jct_n":1940,"per_srv_sum":28616},
+"et_rt/s7":{"messages":1200,"max_aq":2,"departures":1973,"arrivals":1989,"dropped":0,"max_queue":3,"gap_sup":3,"jct_sum":69378,"jct_n":1973,"per_srv_sum":28863},
+"jsq/s0":{"messages":0,"max_aq":20,"departures":3773,"arrivals":3815,"dropped":0,"max_queue":3,"gap_sup":3,"jct_sum":150163,"jct_n":3773,"per_srv_sum":54425},
+"jsq/s7":{"messages":0,"max_aq":21,"departures":3763,"arrivals":3791,"dropped":0,"max_queue":2,"gap_sup":2,"jct_sum":141963,"jct_n":3763,"per_srv_sum":55419},
+"sq2/s0":{"messages":0,"max_aq":22,"departures":3728,"arrivals":3815,"dropped":0,"max_queue":8,"gap_sup":8,"jct_sum":350621,"jct_n":3728,"per_srv_sum":55535},
+"sq2/s7":{"messages":0,"max_aq":15,"departures":3692,"arrivals":3791,"dropped":0,"max_queue":8,"gap_sup":8,"jct_sum":370990,"jct_n":3692,"per_srv_sum":54888},
+"rr/s0":{"messages":0,"max_aq":19,"departures":3634,"arrivals":3815,"dropped":0,"max_queue":20,"gap_sup":20,"jct_sum":550694,"jct_n":3634,"per_srv_sum":55299},
+"rr/s7":{"messages":0,"max_aq":19,"departures":3613,"arrivals":3791,"dropped":0,"max_queue":20,"gap_sup":20,"jct_sum":532031,"jct_n":3613,"per_srv_sum":54889},
+"mmpp/s0":{"messages":413,"max_aq":2,"departures":3706,"arrivals":3778,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":295680,"jct_n":3706,"per_srv_sum":55010},
+"mmpp/s7":{"messages":379,"max_aq":2,"departures":3714,"arrivals":3791,"dropped":0,"max_queue":6,"gap_sup":5,"jct_sum":282532,"jct_n":3714,"per_srv_sum":54871},
+"hetero/s0":{"messages":465,"max_aq":2,"departures":3728,"arrivals":3815,"dropped":0,"max_queue":7,"gap_sup":7,"jct_sum":317649,"jct_n":3728,"per_srv_sum":39668},
+"hetero/s7":{"messages":415,"max_aq":2,"departures":3708,"arrivals":3791,"dropped":0,"max_queue":8,"gap_sup":8,"jct_sum":314079,"jct_n":3708,"per_srv_sum":39191},
+"basic/s0":{"messages":874,"max_aq":3,"departures":3554,"arrivals":3619,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":220946,"jct_n":3554,"per_srv_sum":51588},
+"basic/s7":{"messages":878,"max_aq":3,"departures":3550,"arrivals":3599,"dropped":0,"max_queue":5,"gap_sup":5,"jct_sum":213382,"jct_n":3550,"per_srv_sum":52433}}
+""")
+
+
+def _fingerprint(r) -> dict:
+    return dict(
+        messages=r.messages,
+        max_aq=r.max_aq,
+        departures=r.departures,
+        arrivals=r.arrivals,
+        dropped=r.dropped,
+        max_queue=r.max_queue,
+        gap_sup=r.queue_gap_sup,
+        jct_sum=int(np.sum(r.jct)),
+        jct_n=int(r.jct.shape[0]),
+        per_srv_sum=int(np.sum(r.per_server_arrivals * np.arange(30))),
+    )
+
+
+class TestGoldens:
+    @pytest.mark.parametrize("cell", sorted(GOLDEN_CELLS))
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_traced_path_matches_seed_simulator(self, cell, seed):
+        r = simulate(jax.random.key(seed), SimConfig(**GOLDEN_CELLS[cell]))
+        assert _fingerprint(r) == GOLDENS[f"{cell}/s{seed}"]
+
+
+# ---------------------------------------------------------------------------
+# 2. simulate_grid == per-cell simulate, exactly.
+# ---------------------------------------------------------------------------
+
+GRID_CFGS = [
+    SimConfig(slots=3000, load=0.95, x=3, comm="et", approx="msr"),
+    SimConfig(slots=3000, load=0.8, x=5, comm="et", approx="msr"),
+    SimConfig(slots=3000, load=0.5, x=2, comm="et", approx="msr",
+              rt_rate=0.05),
+]
+GRID_SEEDS = (0, 3)
+
+
+def _assert_same(a, b):
+    assert a.messages == b.messages
+    assert a.max_aq == b.max_aq
+    assert a.departures == b.departures
+    assert a.arrivals == b.arrivals
+    assert np.array_equal(a.jct, b.jct)
+    assert np.array_equal(a.per_server_arrivals, b.per_server_arrivals)
+    assert np.array_equal(a.final_q, b.final_q)
+
+
+class TestSimulateGrid:
+    def test_per_cell_equivalence(self):
+        static = GRID_CFGS[0].static_part()
+        assert all(c.static_part() == static for c in GRID_CFGS)
+        grid = simulate_grid(
+            list(GRID_SEEDS), static, [c.scenario() for c in GRID_CFGS]
+        )
+        assert len(grid) == len(GRID_CFGS)
+        for cell, cfg in zip(grid, GRID_CFGS):
+            assert len(cell) == len(GRID_SEEDS)
+            for res, seed in zip(cell, GRID_SEEDS):
+                _assert_same(res, simulate(jax.random.key(seed), cfg))
+
+    def test_batch_is_one_cell_grid(self):
+        cfg = GRID_CFGS[0]
+        batch = simulate_batch(list(GRID_SEEDS), cfg)
+        for res, seed in zip(batch, GRID_SEEDS):
+            _assert_same(res, simulate(jax.random.key(seed), cfg))
+
+    def test_shard_flag_is_semantics_free(self):
+        static = GRID_CFGS[0].static_part()
+        scns = [c.scenario() for c in GRID_CFGS]
+        a = simulate_grid([5], static, scns, shard=True)
+        b = simulate_grid([5], static, scns, shard=False)
+        for ca, cb in zip(a, b):
+            _assert_same(ca[0], cb[0])
+
+    def test_mixed_x_and_rates_grid(self):
+        # x and service_rates vary per cell within one compiled program.
+        rates_a = tuple(1.5 if i < 15 else 0.5 for i in range(30))
+        rates_b = tuple(0.5 if i < 15 else 1.5 for i in range(30))
+        cfgs = [
+            SimConfig(slots=2000, load=0.9, x=2, service_rates=rates_a),
+            SimConfig(slots=2000, load=0.95, x=4, service_rates=rates_b),
+        ]
+        static = cfgs[0].static_part()
+        assert cfgs[1].static_part() == static
+        grid = simulate_grid([1], static, [c.scenario() for c in cfgs])
+        for cell, cfg in zip(grid, cfgs):
+            _assert_same(cell[0], simulate(jax.random.key(1), cfg))
+
+
+# ---------------------------------------------------------------------------
+# 3. Padding + device topology.
+# ---------------------------------------------------------------------------
+
+
+class TestPadding:
+    def test_pad_indices_multiple(self):
+        idx = slotted_sim._pad_indices(8, 4)
+        assert list(idx) == list(range(8))
+
+    def test_pad_indices_ragged(self):
+        idx = slotted_sim._pad_indices(9, 4)
+        assert len(idx) == 12
+        assert list(idx[:9]) == list(range(9))
+        assert list(idx[9:]) == [0, 1, 2]  # wrap-around duplicates
+
+    def test_pad_indices_fewer_runs_than_devices(self):
+        idx = slotted_sim._pad_indices(3, 8)
+        assert len(idx) == 8
+        assert list(idx) == [0, 1, 2, 0, 1, 2, 0, 1]
+
+
+_SUBPROCESS_SCRIPT = """
+import json, sys
+import numpy as np
+import jax
+from repro.core import SimConfig, simulate_grid
+
+assert jax.local_device_count() == {n_dev}, jax.local_device_count()
+cfgs = [
+    SimConfig(slots=2000, load=0.95, x=3),
+    SimConfig(slots=2000, load=0.8, x=2),
+    SimConfig(slots=2000, load=0.5, x=4),
+]
+# 3 cells x 1 seed = 3 runs: ragged over {n_dev} devices, exercising padding.
+grid = simulate_grid([11], cfgs[0].static_part(), [c.scenario() for c in cfgs])
+print(json.dumps([
+    dict(messages=r[0].messages, max_aq=r[0].max_aq,
+         jct=np.asarray(r[0].jct).tolist())
+    for r in grid
+]))
+"""
+
+
+class TestDeviceTopology:
+    @pytest.mark.slow
+    def test_1_vs_8_device_consistency(self):
+        """A ragged grid forced onto 8 host devices matches 1 device."""
+        outs = {}
+        for n_dev in (1, 8):
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                f"--xla_force_host_platform_device_count={n_dev}"
+            )
+            env["JAX_PLATFORMS"] = "cpu"
+            env["PYTHONPATH"] = "src" + (
+                os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+            )
+            proc = subprocess.run(
+                [sys.executable, "-c", _SUBPROCESS_SCRIPT.format(n_dev=n_dev)],
+                capture_output=True,
+                text=True,
+                timeout=600,
+                env=env,
+                cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            )
+            assert proc.returncode == 0, proc.stderr[-2000:]
+            outs[n_dev] = json.loads(proc.stdout)
+        assert outs[1] == outs[8]
+
+
+# ---------------------------------------------------------------------------
+# dispatch tier: the vmapped seed batch equals the per-seed loop.
+# ---------------------------------------------------------------------------
+
+
+class TestDispatchBatch:
+    def test_matches_sequential(self):
+        cfg = DispatchSimConfig(steps=120, comm="et", x=4)
+        batch = dispatch_batch([0, 1], cfg)
+        for seed, b in zip([0, 1], batch):
+            s = dispatch_simulate(seed, cfg)
+            assert b.messages == s.messages
+            assert np.allclose(b.gap, s.gap)
+            assert np.allclose(b.backlog, s.backlog)
+            assert abs(b.max_err - s.max_err) < 1e-5
