@@ -69,44 +69,6 @@ def _grid_cells(slots: int, xs) -> list[tuple[str, int, slotted_sim.SimConfig]]:
     return cells
 
 
-def _percell_path(cfgs, seeds):
-    """The pre-grid behaviour: one fresh compiled program per cell.
-
-    Mirrors the old ``simulate_batch`` exactly -- a vmapped scan per
-    ``SimConfig``, sharded over local devices only when the seed count
-    divides them (the old ``pmap`` condition) -- but built fresh per cell
-    so every cell pays its own compile, as it did when ``SimConfig`` was a
-    static jit argument.
-    """
-    keys = slotted_sim._as_keys(list(seeds))
-    n_dev = jax.local_device_count()
-    if len(seeds) % n_dev != 0:
-        n_dev = 1
-    results = []
-    for cfg in cfgs:
-        static, scn = cfg.static_part(), cfg.scenario()
-        batched = jax.vmap(lambda key: slotted_sim._run_one(key, scn, static))
-        if n_dev > 1:
-            from jax.experimental.shard_map import shard_map
-            from jax.sharding import Mesh, PartitionSpec as P
-
-            mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
-            batched = shard_map(
-                batched, mesh=mesh, in_specs=(P("runs"),), out_specs=P("runs")
-            )
-        out = jax.jit(batched)(keys)
-        out_np = [np.asarray(o) for o in out]
-        results.append(
-            [
-                slotted_sim._finalize(
-                    out_np[0][i], tuple(o[i] for o in out_np[1:])
-                )
-                for i in range(len(seeds))
-            ]
-        )
-    return results
-
-
 def _fusion_rows(cells, slots: int) -> list[dict]:
     """Measure the fused grid vs the per-cell loop, both cold."""
     cfgs = [cfg for _, _, cfg in cells]
@@ -118,16 +80,10 @@ def _fusion_rows(cells, slots: int) -> list[dict]:
     n_programs = slotted_sim.grid_compile_count() - compiles_before
 
     t0 = time.perf_counter()
-    percell_results = _percell_path(cfgs, SEEDS)
+    percell_results = common.percell_reference(cfgs, SEEDS)
     t_percell = time.perf_counter() - t0
 
-    match = all(
-        g.messages == p.messages
-        and g.max_aq == p.max_aq
-        and np.array_equal(g.jct, p.jct)
-        for grow, prow in zip(grid_results, percell_results)
-        for g, p in zip(grow, prow)
-    )
+    match = common.grids_match(grid_results, percell_results)
     total_slots = slots * len(cfgs) * len(SEEDS)
     speedup = t_percell / max(t_grid, 1e-9)
     return [

@@ -194,14 +194,16 @@ def run(quick: bool = False) -> list[dict]:
     for load, results in by_load.items():
         if "et3_msr" not in results:
             continue
-        m_et3 = float(_pooled(results["et3_msr"]).mean())
-        m_sq2 = float(_pooled(results["sq2"]).mean())
-        m_rr = float(_pooled(results["rr"]).mean())
+        # metrics.mean_jct is zero-completion safe (no NaN rows on short
+        # quick horizons); the ratio denominators are floored likewise.
+        m_et3 = metrics.mean_jct(_pooled(results["et3_msr"]))
+        m_sq2 = max(metrics.mean_jct(_pooled(results["sq2"])), 1e-9)
+        m_rr = max(metrics.mean_jct(_pooled(results["rr"])), 1e-9)
         rel3 = float(np.mean(
             [r.msgs_per_departure for r in results["et3_msr"]]
         ))
         sparse_name = f"et{max(et_xs)}_msr"
-        m_sparse = float(_pooled(results[sparse_name]).mean())
+        m_sparse = metrics.mean_jct(_pooled(results[sparse_name]))
         rel_sparse = float(np.mean(
             [r.msgs_per_departure for r in results[sparse_name]]
         ))

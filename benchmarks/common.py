@@ -24,6 +24,7 @@ import time
 from typing import Sequence
 
 import jax
+import numpy as np
 
 from repro.core.care import slotted_sim
 
@@ -75,6 +76,60 @@ def timed_simulate_grid(
         results.append([r for r, _ in cached])
         walls.append(sum(w for _, w in cached))
     return results, walls
+
+
+def percell_reference(
+    cfgs: Sequence[slotted_sim.SimConfig], seeds: Sequence[int]
+):
+    """The pre-grid behaviour: one fresh compiled program per cell.
+
+    Mirrors the old ``simulate_batch`` exactly -- a vmapped scan per
+    ``SimConfig``, sharded over local devices only when the seed count
+    divides them (the old ``pmap`` condition) -- but built fresh per cell
+    so every cell pays its own compile, as it did when every scenario knob
+    was a static jit argument.  Cells sharing a ``static_part()`` replay
+    the same workload stream as the fused grid, so results are comparable
+    bit for bit; benchmarks use this as the golden reference the fused
+    path must reproduce (``grid_matches_percell`` rows).
+    """
+    keys = slotted_sim._as_keys(list(seeds))
+    n_dev = jax.local_device_count()
+    if len(seeds) % n_dev != 0:
+        n_dev = 1
+    results = []
+    for cfg in cfgs:
+        static, scn = cfg.static_part(), cfg.scenario()
+        batched = jax.vmap(lambda key: slotted_sim._run_one(key, scn, static))
+        if n_dev > 1:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
+            batched = shard_map(
+                batched, mesh=mesh, in_specs=(P("runs"),), out_specs=P("runs")
+            )
+        out = jax.jit(batched)(keys)
+        out_np = [np.asarray(o) for o in out]
+        results.append(
+            [
+                slotted_sim._finalize(
+                    out_np[0][i], tuple(o[i] for o in out_np[1:])
+                )
+                for i in range(len(seeds))
+            ]
+        )
+    return results
+
+
+def grids_match(grid_results, percell_results) -> bool:
+    """Bitwise per-cell equality of two result grids (messages, AQ, JCT)."""
+    return all(
+        g.messages == p.messages
+        and g.max_aq == p.max_aq
+        and np.array_equal(g.jct, p.jct)
+        for grow, prow in zip(grid_results, percell_results)
+        for g, p in zip(grow, prow)
+    )
 
 
 def timed_simulate(seed: int, cfg: slotted_sim.SimConfig):

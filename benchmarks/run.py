@@ -37,7 +37,9 @@ The mapping to paper artifacts:
                            + bursty / heterogeneous scenario rows)
   bench_table5          -> Fig 5                    (communication rates)
   bench_approx_quality  -> Thm 2.3 sweep            (AQ<=x-1, M<=D/x)
-  bench_ssc             -> Sec 7 / Thm 7.3          (finite-n SSC trend)
+  bench_ssc             -> Sec 7 / Thm 7.3          (finite-n SSC trend;
+                           fused via the traced service/horizon axis)
+  bench_heavy_tail      -> beyond-paper: ET-x under Pareto job sizes
   bench_moe_balance     -> beyond-paper: CARE balancer in MoE training
   bench_serving         -> beyond-paper: CARE dispatch in serving
   bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
@@ -69,6 +71,7 @@ BENCHES = [
     "bench_table5",
     "bench_approx_quality",
     "bench_ssc",
+    "bench_heavy_tail",
     "bench_moe_balance",
     "bench_serving",
     "bench_roofline",

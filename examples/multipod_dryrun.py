@@ -57,6 +57,10 @@ def main():
     coll = analysis["collectives"]
     print(f"  collective bytes/chip: {coll['total']:.3e}  "
           f"({', '.join(f'{k}={v:.2e}' for k, v in sorted(coll.items()) if k != 'total')})")
+    # jaxlib returns one properties dict (older versions wrapped it in a
+    # single-element list).
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     print(f"  xla cost_analysis flops (loop bodies once): {cost.get('flops', 0):.3e}")
     print("\n  -> compiles cleanly; the sharding is coherent for this mesh.")
 

@@ -6,6 +6,11 @@ Approximated-Queue under ET-x + MSR -- the paper's recommended sparse-
 communication design -- against the exact-state JSQ, SQ(2) and Round
 Robin baselines, on the *same* arrival/size sample paths.
 
+The whole comparison is submitted through ``simulate_grid``: cells are
+grouped by their compile-time structure (policy/comm/approx kinds) and
+each group runs as **one compiled program** -- the ET-x ladder is a
+single traced sweep, not four separate compiles.
+
 Expected outcome (paper Figs 3/10/12): ET-3 + MSR matches SQ(2) while
 using ~10% of JSQ's messages, and still beats Round Robin below 2%.
 
@@ -14,20 +19,36 @@ Usage:
 """
 import argparse
 
-import numpy as np
-
-from repro.core.care import slotted_sim
-from repro.core.care.slotted_sim import SimConfig, exact_state_messages, simulate
-
-import jax
+from repro.core.care import metrics, slotted_sim
+from repro.core.care.slotted_sim import SimConfig, exact_state_messages
 
 
 def jct_stats(res) -> str:
-    j = res.jct
+    s = metrics.jct_summary(res.jct)  # zero-completion safe
     return (
-        f"mean={j.mean():7.1f}  p50={np.percentile(j, 50):6.0f}  "
-        f"p99={np.percentile(j, 99):7.0f}"
+        f"mean={s['mean']:7.1f}  p50={s['p50']:6.0f}  p99={s['p99']:7.0f}"
     )
+
+
+def simulate_cells(cfgs, seed: int):
+    """Run every cell, fused: one ``simulate_grid`` call per static group.
+
+    Returns one ``SimResult`` per config, in order.  Cells that share a
+    ``StaticConfig`` (e.g. the ET-x ladder: x is a traced operand) share
+    one compiled program; the number of programs is O(#kinds), not
+    O(#cells).
+    """
+    groups: dict = {}
+    for i, cfg in enumerate(cfgs):
+        groups.setdefault(cfg.static_part(), []).append(i)
+    results = [None] * len(cfgs)
+    for static, idxs in groups.items():
+        grid = slotted_sim.simulate_grid(
+            [seed], static, [cfgs[i].scenario() for i in idxs]
+        )
+        for i, cell in zip(idxs, grid):
+            results[i] = cell[0]
+    return results, len(groups)
 
 
 def main():
@@ -38,7 +59,7 @@ def main():
     args = ap.parse_args()
 
     base = dict(servers=args.servers, slots=args.slots, load=args.load)
-    key = 7  # same seed => same arrivals & job sizes for every policy
+    seed = 7  # same seed => same arrivals & job sizes for every policy
 
     policies = [
         ("JSQ (exact state)", SimConfig(policy="jsq", comm="none", **base)),
@@ -51,12 +72,13 @@ def main():
         ("JSAQ DT-3 + MSR-3", SimConfig(policy="jsaq", comm="dt", x=3, approx="msr_x", **base)),
     ]
 
+    results, n_groups = simulate_cells([cfg for _, cfg in policies], seed)
     print(f"K={args.servers} servers, load={args.load}, {args.slots} slots "
-          f"(identical inputs per policy)\n")
+          f"(identical inputs per policy;\n{len(policies)} cells fused into "
+          f"{n_groups} compiled programs)\n")
     print(f"{'policy':<20} {'JCT (slots)':<38} {'msgs/dep':>9} {'rel comm':>9} {'max AQ':>7}")
     jsq_msgs = None
-    for name, cfg in policies:
-        res = simulate(jax.random.key(key), cfg)
+    for (name, cfg), res in zip(policies, results):
         msgs = exact_state_messages(res, cfg.policy, cfg.sqd)
         if jsq_msgs is None:
             jsq_msgs = max(msgs, 1)

@@ -2,6 +2,7 @@
 
 from repro.core.care import (  # noqa: F401
     Scenario,
+    ServiceProcess,
     SimConfig,
     SimResult,
     StaticConfig,

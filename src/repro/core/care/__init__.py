@@ -11,15 +11,19 @@ comm        -- the communication protocol core (RT / DT / ET / ET+RT hybrid /
                dispatch sim, serving engine)
 approx      -- approximation algorithms (basic / MSR / MSR-x queue emulation)
 routing     -- resource-allocation policies (JSQ / JSAQ / SQ(d) / RR / Random)
-workload    -- arrival processes (Bernoulli / bursty MMPP) and heterogeneous
-               per-server service-rate schedules
+workload    -- arrival processes (Bernoulli / bursty MMPP, optional diurnal
+               modulation), ``ServiceProcess`` job-size distributions
+               (geometric / deterministic / pareto / weibull; traced mean
+               and tail operands) and heterogeneous per-server
+               service-rate schedules
 slotted_sim -- discrete-time slotted simulator (paper Section 9), lax.scan
                based; configuration is split into a static ``StaticConfig``
                (shapes + kinds; jit specialises) and a traced ``Scenario``
-               pytree (load / x / rt_rate / burst / service_rates
-               operands); ``simulate_grid`` runs a whole scenario grid as
-               one compiled program, vmapped over (cell x seed) and
-               sharded across devices with ``shard_map``
+               pytree (load / x / rt_rate / burst / service_rates /
+               service process / diurnal / horizon operands over a padded
+               fixed-horizon scan); ``simulate_grid`` runs a whole
+               scenario grid as one compiled program, vmapped over
+               (cell x seed) and sharded across devices with ``shard_map``
 metrics     -- AQ / communication / JCT-CCDF metrics
 theory      -- closed-form bounds from Theorems 2.3, 2.4, 2.5
 """
@@ -34,6 +38,7 @@ from repro.core.care.slotted_sim import (  # noqa: F401
     simulate_grid,
     stack_scenarios,
 )
+from repro.core.care.workload import ServiceProcess  # noqa: F401
 from repro.core.care import (  # noqa: F401
     approx,
     comm,

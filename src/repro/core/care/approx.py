@@ -39,7 +39,10 @@ class ApproxConfig:
       kind: which approximation algorithm the balancer runs.  Always a
         Python string (selects code paths at trace time).
       msr_slots: mean service requirement in slots (``1/mu`` in slot units);
-        the deterministic service time assigned to every emulated job.
+        the deterministic service time assigned to every emulated job.  May
+        be a Python int *or a traced scalar* -- the slotted simulator passes
+        the ``ServiceProcess`` mean as a traced operand so a grid of mean
+        sizes shares one compiled program.
       x: the truncation parameter for ``msr_x`` (emulated departures are
         capped at ``x - 1``).  Ignored for other kinds.  May be a Python
         int *or a traced scalar* -- the truncation comparison consumes it
@@ -111,7 +114,10 @@ def emu_arrival_masked(
 
 
 def emu_drain_slot(
-    state: EmuState, cfg: ApproxConfig, units: jnp.ndarray | None = None
+    state: EmuState,
+    cfg: ApproxConfig,
+    units: jnp.ndarray | None = None,
+    active=None,
 ) -> EmuState:
     """Advance the emulated queues by one time slot (vectorised over servers).
 
@@ -124,6 +130,10 @@ def emu_drain_slot(
     slot under heterogeneous service rates (``workload.service_units``); the
     schedule is deterministic so the balancer mirrors it exactly.  ``None``
     means the homogeneous unit-rate setting.
+
+    ``active`` (optional, scalar bool, may be traced) freezes the emulation
+    when False -- the padded-horizon simulator's way of making slots past a
+    cell's traced horizon no-ops inside a fixed-length scan.
     """
     if cfg.kind == "basic":
         return state
@@ -134,6 +144,8 @@ def emu_drain_slot(
     else:
         allowed = jnp.ones_like(busy)
     ticking = busy & allowed
+    if active is not None:
+        ticking = ticking & active
 
     dec = 1 if units is None else units
     head_rem = jnp.where(ticking, state.head_rem - dec, state.head_rem)

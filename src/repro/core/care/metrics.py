@@ -17,7 +17,14 @@ def ccdf(samples: np.ndarray, grid: np.ndarray | None = None):
 
 
 def jct_summary(jct: np.ndarray) -> dict:
-    """Mean / tail percentiles of job completion times."""
+    """Mean / tail percentiles of job completion times.
+
+    Zero-completion safe: an empty sample (short-horizon quick runs)
+    yields all-zero statistics instead of NaN rows -- every percentile /
+    mean reduction over JCTs must route through here or
+    :func:`mean_jct`, never through raw ``np.mean``/``np.percentile``.
+    """
+    jct = np.asarray(jct)
     if jct.size == 0:
         return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p999": 0.0}
     return {
@@ -27,6 +34,12 @@ def jct_summary(jct: np.ndarray) -> dict:
         "p99": float(np.percentile(jct, 99)),
         "p999": float(np.percentile(jct, 99.9)),
     }
+
+
+def mean_jct(jct: np.ndarray) -> float:
+    """Mean JCT of a sample array; 0.0 (never NaN) when nothing completed."""
+    jct = np.asarray(jct)
+    return float(jct.mean()) if jct.size else 0.0
 
 
 def relative_communication(

@@ -59,25 +59,30 @@ def route(
     rr_ptr: jnp.ndarray,
     key: jax.Array,
     d: int = 2,
-    inv_rate: jnp.ndarray | None = None,
+    drain_slots: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch one job.  Returns ``(server, rr_ptr')``.
 
     ``policy`` is static (Python-level), so jitted callers specialise on it.
-    ``inv_rate`` (optional, ``(K,)``) supplies ``1/r_i`` under heterogeneous
-    service rates: the shortest-queue family then minimises the *expected
-    drain time* ``q_i / r_i`` rather than the raw length, so a queue of 4 at
-    a double-speed server beats a queue of 3 at a half-speed one.  It is an
-    array operand (a traced ``Scenario.service_rates`` derivative in the
-    grid simulator), so rate profiles can vary per grid cell without
-    recompiling; only its presence/absence is structural.
+    ``drain_slots`` (optional, ``(K,)``) supplies the expected per-job
+    drain time ``E[S] / r_i`` in slots under heterogeneous service rates:
+    the shortest-queue family then minimises the *expected drain time*
+    ``q_i * E[S] / r_i`` rather than the raw length, so a queue of 4 at a
+    double-speed server beats a queue of 3 at a half-speed one.  It is an
+    array operand (the traced ``ServiceProcess`` mean over the traced
+    ``Scenario.service_rates`` in the grid simulator, precomputed once per
+    run outside the scan), so rate profiles and mean sizes can vary per
+    grid cell without recompiling; only its presence/absence is
+    structural.  Scaling by any single positive mean is argmin-invariant,
+    so homogeneous-mean decisions match the historical ``q_i / r_i`` score
+    (golden-pinned for the rate profiles under test).
     """
     k = q_true.shape[0]
-    if inv_rate is None:
+    if drain_slots is None:
         scaled_true, scaled_app = q_true, q_app
     else:
-        scaled_true = q_true.astype(jnp.float32) * inv_rate
-        scaled_app = q_app.astype(jnp.float32) * inv_rate
+        scaled_true = q_true.astype(jnp.float32) * drain_slots
+        scaled_app = q_app.astype(jnp.float32) * drain_slots
     if policy == "jsq":
         return route_shortest(scaled_true, key), rr_ptr
     if policy == "jsaq":

@@ -41,22 +41,44 @@ configuration is split in two:
 
 * :class:`StaticConfig` -- the *structure* of the program: array shapes
   (``servers``, ``slots``, ``buffer_cap``) and the policy / communication /
-  approximation / arrival **kinds**, which select code paths via Python
-  ``if``.  XLA must specialise on these; they are hashable static jit
-  arguments and changing any of them costs a recompile.
+  approximation / arrival / service **kinds**, which select code paths via
+  Python ``if``.  XLA must specialise on these; they are hashable static
+  jit arguments and changing any of them costs a recompile.
 * :class:`Scenario` -- a registered pytree of *traced array operands*:
   ``load``, ``x``, ``rt_rate`` (carried as the derived ``rt_period``
   operand), ``burst_intensity``/``burst_stay`` (carried as the derived
-  ``lam_hi``/``lam_lo`` operands) and ``service_rates``.  Trigger
-  thresholds and arrival/rate schedules consume these as arrays, so any
-  number of scenario cells share one compiled program.
+  ``lam_hi``/``lam_lo`` operands), ``service_rates``, the
+  :class:`~repro.core.care.workload.ServiceProcess` operand bundle
+  (traced mean / tail-shape), the diurnal-curve operands
+  (``diurnal_amp``/``diurnal_period``) and the traced ``horizon``.
+  Trigger thresholds, arrival/rate schedules, the size sampler and the
+  MSR emulation constant consume these as arrays, so any number of
+  scenario cells share one compiled program.
+
+Padded fixed horizon
+--------------------
+
+``StaticConfig.slots`` is the *padded* scan length: the scan always runs
+``slots`` steps, and each cell's effective length is the traced
+``Scenario.horizon`` operand.  Slots at ``t >= horizon`` are masked into
+no-ops (no arrivals, no service, no emulation drain, no trigger
+evaluation -- every carry field is frozen), so cells with different
+effective horizons -- e.g. the diffusion-scaling sweep of ``bench_ssc``,
+which grows ``mean_service`` and the horizon together -- share one
+compiled program instead of compiling once per horizon.  When
+``horizon >= slots`` the mask is all-True and the program is
+bit-identical to the historical unpadded one.  Note the *workload stream*
+is keyed to the padded shape: two runs agree bit-for-bit exactly when
+they share a ``StaticConfig`` (asserted against a per-cell reference
+path in ``tests/test_grid.py``); changing the padding re-draws the
+stream, just as changing ``slots`` always did.
 
 :class:`SimConfig` remains the user-facing cell description; it is exactly
 ``static_part() + scenario()``.  Derived operands (``rt_period``,
-``lam_hi``, ``lam_lo``) are computed host-side in float64 at
-:class:`Scenario` construction so the traced program is bit-identical to
-the historical compile-per-cell program (golden-tested in
-``tests/test_grid.py``).
+``lam_hi``, ``lam_lo``, the ServiceProcess constants) are computed
+host-side in float64 at :class:`Scenario` construction so the traced
+program is bit-identical to the historical compile-per-cell program
+(golden-tested in ``tests/test_grid.py``).
 
 The whole simulation is a single ``jax.lax.scan``; all per-server state is
 vectorised and job FIFOs are circular buffers carried through the scan, so
@@ -96,23 +118,24 @@ class StaticConfig:
     """The compile-time structure of the simulator program (hashable).
 
     Only knobs that change the *traced program itself* live here: array
-    shapes (``servers``, ``slots``, ``buffer_cap``, ``mean_service`` --
-    the latter sizes nothing but selects the emulation constant, kept
-    static alongside the geometric-size stream it parameterises) and the
-    policy / comm / approx / arrival kinds plus the two rate flags, which
-    pick code paths via Python ``if`` at trace time.  Everything numeric a
-    figure sweeps lives in :class:`Scenario` instead.
+    shapes (``servers``, ``slots`` -- the *padded* scan length; each
+    cell's effective length is the traced ``Scenario.horizon`` --
+    ``buffer_cap``) and the policy / comm / approx / arrival / service
+    kinds plus the two rate flags, which pick code paths via Python
+    ``if`` at trace time.  Everything numeric a figure sweeps --
+    including ``mean_service`` and the horizon, which used to be baked in
+    here -- lives in :class:`Scenario` instead.
     """
 
     servers: int = 30
-    slots: int = 100_000
-    mean_service: int = 30
+    slots: int = 100_000  # padded scan length (max horizon of the grid)
     policy: routing_lib.PolicyKind = "jsaq"
     comm: CommKind = "et"
     approx: approx_lib.ApproxKind = "msr"
     buffer_cap: int = 2048
     sqd: int = 2
     arrival: str = "bernoulli"  # "bernoulli" | "mmpp"
+    service: workload_lib.ServiceKind = "geometric"
     use_rates: bool = False  # heterogeneous service_rates in play
     rate_aware: bool = True
 
@@ -143,6 +166,10 @@ class Scenario:
     lam_hi: jnp.ndarray  # () f32 derived MMPP burst-state arrival rate
     lam_lo: jnp.ndarray  # () f32 derived MMPP lull-state arrival rate
     service_rates: jnp.ndarray  # (K,) f32 per-server speeds (ones if unused)
+    service: workload_lib.ServiceProcess  # size-distribution operand bundle
+    horizon: jnp.ndarray  # () i32 effective slots (>= StaticConfig.slots = unpadded)
+    diurnal_amp: jnp.ndarray  # () f32 diurnal curve amplitude (0 = flat)
+    diurnal_period: jnp.ndarray  # () f32 diurnal curve period in slots
 
     @staticmethod
     def create(
@@ -153,6 +180,13 @@ class Scenario:
         burst_intensity: float = 1.6,
         burst_stay: float = 0.98,
         service_rates: Optional[Sequence[float]] = None,
+        mean_service: float = 30,
+        service: workload_lib.ServiceKind = "geometric",
+        service_tail: float = 2.0,
+        horizon: Optional[int] = None,
+        diurnal_amp: float = 0.0,
+        diurnal_period: float = 1.0,
+        arrival: str = "bernoulli",  # diurnal peak-rate validation only
     ) -> "Scenario":
         lam_hi = min(burst_intensity * load, 1.0)
         lam_lo = max(2.0 * load - lam_hi, 0.0)
@@ -162,6 +196,26 @@ class Scenario:
             if service_rates is None
             else jnp.asarray(service_rates, jnp.float32)
         )
+        diurnal_amp = float(diurnal_amp)
+        if not 0.0 <= diurnal_amp <= 1.0:
+            raise ValueError(
+                f"diurnal_amp must be in [0, 1] (rate stays non-negative), "
+                f"got {diurnal_amp}"
+            )
+        # The highest *modulated* rate must stay a probability, or the
+        # u < rate comparison silently clips the sine peaks and the
+        # long-run rate drops below the nominal load.  For mmpp that peak
+        # is the burst-state rate, not load.
+        base_peak = lam_hi if arrival == "mmpp" else load
+        if diurnal_amp and base_peak * (1.0 + diurnal_amp) > 1.0 + 1e-9:
+            raise ValueError(
+                f"diurnal peak rate {base_peak:.4f}*(1+amp) = "
+                f"{base_peak * (1.0 + diurnal_amp):.4f} exceeds 1 "
+                f"(arrival={arrival!r}); lower amp to at most "
+                f"{1.0 / base_peak - 1.0:.4f}"
+            )
+        if horizon is None:
+            horizon = np.iinfo(np.int32).max  # unbounded: never mask
         return Scenario(
             load=jnp.float32(load),
             x=jnp.int32(x),
@@ -172,6 +226,12 @@ class Scenario:
             lam_hi=jnp.float32(lam_hi),
             lam_lo=jnp.float32(lam_lo),
             service_rates=rates,
+            service=workload_lib.ServiceProcess.create(
+                kind=service, mean=mean_service, tail=service_tail
+            ),
+            horizon=jnp.int32(horizon),
+            diurnal_amp=jnp.float32(diurnal_amp),
+            diurnal_period=jnp.float32(max(float(diurnal_period), 1e-6)),
         )
 
 
@@ -192,12 +252,23 @@ class SimConfig:
 
     * ``arrival="mmpp"`` with ``burst_intensity`` / ``burst_stay`` switches
       to bursty Markov-modulated arrivals (long-run rate still ``load``).
+    * ``service`` selects the job-size distribution kind (``geometric`` --
+      the paper's default -- ``deterministic``, ``pareto``, ``weibull``;
+      see :class:`~repro.core.care.workload.ServiceProcess`) with traced
+      ``mean_service`` / ``service_tail`` operands.
+    * ``diurnal_amp`` / ``diurnal_period`` modulate the arrival rate with
+      a sinusoidal load curve; the long-run rate stays ``load``, which
+      requires ``load * (1 + amp) <= 1`` (validated at construction --
+      otherwise the Bernoulli clip would shave the peaks).  amp 0 = flat.
     * ``service_rates`` (length-``servers`` tuple) gives each server a speed
       in work units/slot; ``rate_aware=True`` makes the shortest-queue
-      family minimise expected drain time ``q_i / r_i`` instead of raw
-      queue length.
+      family minimise the expected drain time ``q_i * E[S] / r_i`` instead
+      of the raw queue length.
     * ``comm="et_rt"`` enables the hybrid ET-x trigger with an RT fallback
       every ``1/rt_rate`` slots (staleness cap in light traffic).
+    * ``max_slots`` pads the scan to a longer fixed horizon than ``slots``
+      so cells with different effective horizons share one compiled
+      program (see the module docstring); ``None`` means unpadded.
     """
 
     servers: int = 30
@@ -218,18 +289,27 @@ class SimConfig:
     burst_stay: float = 0.98
     service_rates: Optional[Tuple[float, ...]] = None
     rate_aware: bool = True
+    service: workload_lib.ServiceKind = "geometric"
+    service_tail: float = 2.0  # pareto alpha / weibull shape
+    diurnal_amp: float = 0.0
+    diurnal_period: float = 1.0
+    max_slots: Optional[int] = None  # padded scan length (>= slots)
 
     def static_part(self) -> StaticConfig:
+        if self.max_slots is not None and self.max_slots < self.slots:
+            raise ValueError(
+                f"max_slots ({self.max_slots}) must be >= slots ({self.slots})"
+            )
         return StaticConfig(
             servers=self.servers,
-            slots=self.slots,
-            mean_service=self.mean_service,
+            slots=self.max_slots if self.max_slots is not None else self.slots,
             policy=self.policy,
             comm=self.comm,
             approx=self.approx,
             buffer_cap=self.buffer_cap,
             sqd=self.sqd,
             arrival=self.arrival,
+            service=self.service,
             use_rates=self.service_rates is not None,
             rate_aware=self.rate_aware,
         )
@@ -243,6 +323,13 @@ class SimConfig:
             burst_intensity=self.burst_intensity,
             burst_stay=self.burst_stay,
             service_rates=self.service_rates,
+            mean_service=self.mean_service,
+            service=self.service,
+            service_tail=self.service_tail,
+            horizon=self.slots,
+            diurnal_amp=self.diurnal_amp,
+            diurnal_period=self.diurnal_period,
+            arrival=self.arrival,
         )
 
 
@@ -289,52 +376,75 @@ jax.tree_util.register_dataclass(
 
 
 def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
-    """Draw the replayable workload: (arrive, sizes, slot_keys).
+    """Draw the replayable workload: (arrive, sizes, slot_keys, active).
 
-    Fully traceable in the scenario operands (the arrival *kind* alone is
-    static), so a grid of cells shares one compiled workload generator.
+    Fully traceable in the scenario operands (the arrival and service
+    *kinds* alone are static), so a grid of cells shares one compiled
+    workload generator.  The arrival rate is modulated by the diurnal
+    curve (``1 + amp * sin``; exactly 1.0 when ``amp == 0``) and masked by
+    the traced ``horizon``: slots at ``t >= horizon`` never see an arrival
+    and are frozen by the scan body (``active`` mask).
     """
     k_arr, k_size, k_scan = jax.random.split(key, 3)
     t = static.slots
+    t_idx = jnp.arange(t, dtype=jnp.int32)
+    mod = workload_lib.diurnal_modulation(
+        t_idx, scn.diurnal_amp, scn.diurnal_period
+    )
     if static.arrival == "mmpp":
         arrive = workload_lib.mmpp_arrivals_from_rates(
-            k_arr, t, scn.lam_hi, scn.lam_lo, scn.burst_stay
+            k_arr, t, scn.lam_hi, scn.lam_lo, scn.burst_stay, mod=mod
         )
     else:
-        arrive = workload_lib.bernoulli_arrivals(k_arr, t, scn.load)
-    sizes = workload_lib.geometric_sizes(k_size, t, static.mean_service)
+        arrive = workload_lib.bernoulli_arrivals(k_arr, t, scn.load, mod=mod)
+    active = t_idx < scn.horizon
+    arrive = arrive & active
+    sizes = workload_lib.service_sizes(k_size, t, scn.service)
     slot_keys = jax.random.split(k_scan, t)
-    return arrive, sizes, slot_keys
+    return arrive, sizes, slot_keys, active
 
 
-def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
+def _sim_core(
+    arrive, sizes, slot_keys, active, static: StaticConfig, scn: Scenario
+):
     """One full slotted run as a lax.scan; traceable (also under vmap).
 
     ``static`` selects code paths (Python ``if`` on kinds); every numeric
-    scenario knob enters as a traced operand of ``scn``.
+    scenario knob enters as a traced operand of ``scn``.  ``active`` is
+    the per-slot horizon mask: on inactive slots every carry field is
+    frozen (no service, no emulation drain, no trigger evaluation), so a
+    padded scan produces exactly the state a shorter scan would leave
+    behind.
     """
     k = static.servers
     b = static.buffer_cap
+    if scn.service.kind != static.service:
+        raise ValueError(
+            f"Scenario service kind {scn.service.kind!r} does not match "
+            f"StaticConfig.service {static.service!r}"
+        )
     acfg = approx_lib.ApproxConfig(
-        kind=static.approx, msr_slots=static.mean_service, x=scn.x
+        kind=static.approx, msr_slots=scn.service.msr_slots, x=scn.x
     )
     ccfg = comm_lib.CommConfig(
         kind=static.comm, x=scn.x, rt_period=scn.rt_period
     )
     if static.use_rates:
         rates = scn.service_rates
-        inv_rate = 1.0 / rates if static.rate_aware else None
+        # Expected per-job drain time E[S]/r_i in slots, precomputed once
+        # outside the scan: both the mean and the rates are traced.
+        drain_slots = scn.service.mean / rates if static.rate_aware else None
     else:
         rates = None
-        inv_rate = None
+        drain_slots = None
 
     def slot(c: _Carry, xs):
-        arr, size, jid, skey = xs
+        arr, size, jid, skey, act = xs
 
         # --- 1. arrival & routing -------------------------------------
         server, rr_ptr = routing_lib.route(
             static.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
-            d=static.sqd, inv_rate=inv_rate,
+            d=static.sqd, drain_slots=drain_slots,
         )
         # Dense one-hot arithmetic instead of scalar gathers / scatters /
         # conds: under vmap those lower to serial per-batch-element loops
@@ -360,7 +470,11 @@ def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
         per_srv = c.per_srv + sel.astype(jnp.int32)
 
         # --- 2. service ------------------------------------------------
-        busy = q_true > 0
+        # Past the cell's horizon (act False) nothing serves: the mask
+        # freezes head_rem / q_true / deps exactly where the horizon left
+        # them.  `act & True` is the identity, so unpadded runs are
+        # bit-identical to the historical unmasked program.
+        busy = (q_true > 0) & act
         if rates is None:
             units = None
             head_rem = jnp.where(busy, head_rem - 1, head_rem)
@@ -380,12 +494,20 @@ def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
         deps = c.deps + jnp.sum(dep, dtype=jnp.int32)
 
         # --- 3. emulation drain -----------------------------------------
-        emu = approx_lib.emu_drain_slot(emu, acfg, units=units)
+        emu = approx_lib.emu_drain_slot(emu, acfg, units=units, active=act)
 
         # --- 4/5. communication trigger (shared core, comm.py) ----------
+        # The trigger counters (slots_since_msg in particular) must freeze
+        # past the horizon, or RT/ET+RT cells would keep messaging through
+        # the padding; evaluate unconditionally, then select the advanced
+        # state only on active slots (the identity when act is True).
         err = approx_lib.approximation_error(emu, q_true)
-        triggered, comm_state = comm_lib.evaluate(
+        triggered, comm_adv = comm_lib.evaluate(
             c.comm, ccfg, err, dep.astype(jnp.int32)
+        )
+        triggered = triggered & act
+        comm_state = jax.tree.map(
+            lambda adv, old: jnp.where(act, adv, old), comm_adv, c.comm
         )
         emu = approx_lib.emu_message_reset(emu, q_true, triggered, acfg)
 
@@ -427,7 +549,7 @@ def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
         max_q=jnp.zeros((), jnp.int32),
         gap_sup=jnp.zeros((), jnp.int32),
     )
-    xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys)
+    xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys, active)
     final, departed = jax.lax.scan(slot, init, xs)
 
     # completion slot per job id (-1 if never completed).
@@ -455,8 +577,8 @@ def _sim_core(arrive, sizes, slot_keys, static: StaticConfig, scn: Scenario):
 
 def _run_one(key, scn: Scenario, static: StaticConfig):
     """Workload draw + scan for one (key, scenario) pair; vmap-able."""
-    arrive, sizes, slot_keys = _prep(key, static, scn)
-    return (arrive,) + _sim_core(arrive, sizes, slot_keys, static, scn)
+    arrive, sizes, slot_keys, active = _prep(key, static, scn)
+    return (arrive,) + _sim_core(arrive, sizes, slot_keys, active, static, scn)
 
 
 _simulate_jit = jax.jit(_run_one, static_argnums=(2,))
@@ -521,6 +643,28 @@ def _as_keys(keys: jax.Array | Sequence[int]) -> jax.Array:
     return jnp.stack([jax.random.key(int(s)) for s in keys])
 
 
+def _check_diurnal_peak(static: StaticConfig, scn: Scenario) -> None:
+    """Reject diurnal amplitudes whose *modulated* peak rate exceeds 1.
+
+    ``Scenario.create`` already validates when told the arrival kind, but
+    a hand-built Scenario meets its StaticConfig for the first time here
+    (the host-level entry points; inside the traced core the operands are
+    tracers and cannot be checked).  For mmpp the binding peak is the
+    burst-state rate ``lam_hi``, not ``load``; a clipped peak would
+    silently drop the long-run rate below nominal.
+    """
+    amp = np.asarray(scn.diurnal_amp)
+    peak = np.asarray(scn.lam_hi if static.arrival == "mmpp" else scn.load)
+    bad = (amp > 0) & (peak * (1.0 + amp) > 1.0 + 1e-6)
+    if np.any(bad):
+        raise ValueError(
+            f"diurnal peak rate exceeds 1 for {int(np.sum(bad))} cell(s) "
+            f"(arrival={static.arrival!r}: peak rate "
+            f"{'lam_hi' if static.arrival == 'mmpp' else 'load'} * (1+amp) "
+            f"must stay a probability)"
+        )
+
+
 def _finalize(arrive_np: np.ndarray, out) -> SimResult:
     """Convert one run's device outputs into a host-side SimResult."""
     (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
@@ -555,7 +699,9 @@ def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
     Routes through the same traced core as :func:`simulate_grid`, so all
     cells sharing a :class:`StaticConfig` share one compiled program.
     """
-    out = _simulate_jit(key, cfg.scenario(), cfg.static_part())
+    static, scn = cfg.static_part(), cfg.scenario()
+    _check_diurnal_peak(static, scn)
+    out = _simulate_jit(key, scn, static)
     return _finalize(np.asarray(out[0]), out[1:])
 
 
@@ -595,6 +741,7 @@ def simulate_grid(
         scenarios = list(scenarios)
         c = len(scenarios)
         scn_stacked = stack_scenarios(scenarios)
+    _check_diurnal_peak(static_cfg, scn_stacked)
     s = keys.shape[0]
     n = c * s
 

@@ -1,4 +1,4 @@
-"""Workload layer: arrival processes and service-rate scenarios.
+"""Workload layer: arrival processes, service processes, rate scenarios.
 
 The seed simulator hard-coded the paper's Section 9.1 setting -- Bernoulli
 arrivals and Geometric(1/K) sizes on homogeneous unit-rate servers.  This
@@ -13,10 +13,25 @@ regimes studied in the hyper-scalable / sparse-feedback literature
   long-run rate is exactly ``load``; ``burst_stay`` is the per-slot
   probability of remaining in the current state (mean burst length
   ``1/(1-burst_stay)`` slots).  ``burst_intensity = 1`` degenerates to
-  Bernoulli.
-* **Sizes** -- i.i.d. Geometric(1/mean) work units, drawn at arrival time so
-  the same input replays under every policy (the paper's comparison
-  method).
+  Bernoulli.  Either process can additionally be modulated by a
+  **diurnal load curve** (:func:`diurnal_modulation`): the per-slot rate
+  becomes ``rate * (1 + amp * sin(2 pi t / period))``, with traced
+  amplitude/period operands, so time-varying load sweeps share one
+  compiled program (``amp = 0`` is bit-identical to the flat rate).
+* **Sizes** -- a :class:`ServiceProcess`: i.i.d. sizes in whole work
+  units (slots), drawn at arrival time so the same input replays under
+  every policy (the paper's comparison method).  The distribution *kind*
+  is structural; the mean and tail-shape are traced operands:
+
+  - ``geometric``     -- Geometric(1/mean), support {1, 2, ...} (paper).
+  - ``deterministic`` -- every job takes exactly ``round(mean)`` slots.
+  - ``pareto``        -- Pareto(scale, alpha) with ``alpha = tail > 1``
+    and scale chosen so the continuous mean is ``mean``; discretised by
+    ``ceil``.  Heavy-tailed: infinite variance for ``alpha <= 2``.
+  - ``weibull``       -- Weibull(shape ``tail``, scale chosen for mean
+    ``mean``); discretised by ``ceil``.  ``tail < 1`` gives a
+    heavier-than-exponential tail, ``tail = 1`` is exponential-like.
+
 * **Service rates** -- per-server speeds ``r_i`` in work units per slot.
   Speeds are realised by a deterministic credit schedule:
   ``units_i(t) = floor((t+1) r_i) - floor(t r_i)``, so a rate-0.5 server
@@ -26,29 +41,170 @@ regimes studied in the hyper-scalable / sparse-feedback literature
   heterogeneity (the emulated queue drains with the *same* units).
 
 All functions are jax-traceable and used both per-simulation and under
-``jax.vmap`` inside :func:`repro.core.care.slotted_sim.simulate_batch`.
+``jax.vmap`` inside :func:`repro.core.care.slotted_sim.simulate_grid`.
 """
 from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+ServiceKind = Literal["geometric", "deterministic", "pareto", "weibull"]
 
-def geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
-    """i.i.d. Geometric(1/mean) sizes with support {1, 2, ...}."""
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["mean", "tail", "geo_log1p", "msr_slots", "scale", "inv_tail"],
+    meta_fields=["kind"],
+)
+@dataclasses.dataclass(frozen=True)
+class ServiceProcess:
+    """Job-size distribution: a static *kind* plus traced operand bundle.
+
+    The ``kind`` selects the sampler code path at trace time (it is pytree
+    *metadata*, so stacking scenarios with different kinds fails loudly
+    instead of silently mixing distributions); every numeric parameter is
+    a traced scalar, so a grid sweeping ``mean`` or ``tail`` shares one
+    compiled program.  Derived constants (``geo_log1p``, ``scale``,
+    ``inv_tail``, ``msr_slots``) are computed host-side in float64 at
+    :meth:`create` so the geometric path is bit-identical to the
+    historical program that baked ``mean_service`` into the structure.
+
+    Attributes:
+      kind: distribution family (static; see module docstring).
+      mean: () f32 -- mean job size in slots (continuous mean for the
+        discretised heavy-tailed kinds).
+      tail: () f32 -- tail-shape operand: Pareto ``alpha`` or Weibull
+        shape ``k``.  Carried for reporting; samplers consume the derived
+        ``inv_tail``/``scale``.
+      geo_log1p: () f32 -- derived ``log1p(-1/mean)`` (geometric
+        denominator), computed in float64 and cast once.
+      msr_slots: () i32 -- derived ``round(mean)``: the deterministic
+        per-job slot count the MSR emulation assigns (Definition 4.8).
+      scale: () f32 -- derived Pareto scale ``x_m`` / Weibull scale
+        ``lambda`` (0 for the kinds that need none).
+      inv_tail: () f32 -- derived ``1/tail`` (0 when unused).
+    """
+
+    kind: str
+    mean: jnp.ndarray
+    tail: jnp.ndarray
+    geo_log1p: jnp.ndarray
+    msr_slots: jnp.ndarray
+    scale: jnp.ndarray
+    inv_tail: jnp.ndarray
+
+    @staticmethod
+    def create(
+        kind: ServiceKind = "geometric",
+        mean: float = 30.0,
+        tail: float = 2.0,
+    ) -> "ServiceProcess":
+        mean = float(mean)
+        tail = float(tail)
+        if mean < 1.0:
+            raise ValueError(f"mean service must be >= 1 slot, got {mean}")
+        scale = 0.0
+        inv_tail = 0.0
+        if kind == "pareto":
+            if tail <= 1.0:
+                raise ValueError(
+                    f"pareto tail index must be > 1 for a finite mean, got {tail}"
+                )
+            scale = mean * (tail - 1.0) / tail
+            inv_tail = 1.0 / tail
+        elif kind == "weibull":
+            if tail <= 0.0:
+                raise ValueError(f"weibull shape must be > 0, got {tail}")
+            scale = mean / math.gamma(1.0 + 1.0 / tail)
+            inv_tail = 1.0 / tail
+        elif kind not in ("geometric", "deterministic"):
+            raise ValueError(f"unknown service kind: {kind}")
+        return ServiceProcess(
+            kind=kind,
+            mean=jnp.float32(mean),
+            tail=jnp.float32(tail),
+            geo_log1p=jnp.float32(np.log1p(-1.0 / np.float64(mean))),
+            msr_slots=jnp.int32(max(int(round(mean)), 1)),
+            scale=jnp.float32(scale),
+            inv_tail=jnp.float32(inv_tail),
+        )
+
+
+def service_sizes(key: jax.Array, n: int, sp: ServiceProcess) -> jnp.ndarray:
+    """``n`` i.i.d. job sizes in whole slots (support {1, 2, ...}).
+
+    All kinds consume the *same* uniform draw, so two ServiceProcesses of
+    the same kind replay the same sample path under different operands,
+    and the geometric kind reproduces the seed simulator's stream exactly.
+    """
     u = jax.random.uniform(key, (n,), jnp.float32, 1e-7, 1.0 - 1e-7)
-    sizes = jnp.floor(jnp.log1p(-u) / np.log1p(-1.0 / mean)) + 1.0
+    if sp.kind == "geometric":
+        sizes = jnp.floor(jnp.log1p(-u) / sp.geo_log1p) + 1.0
+    elif sp.kind == "deterministic":
+        sizes = jnp.broadcast_to(jnp.round(sp.mean), (n,))
+    elif sp.kind == "pareto":
+        sizes = jnp.ceil(pareto_raw(u, sp.scale, sp.inv_tail))
+    elif sp.kind == "weibull":
+        sizes = jnp.ceil(weibull_raw(u, sp.scale, sp.inv_tail))
+    else:
+        raise ValueError(f"unknown service kind: {sp.kind}")
     return jnp.maximum(sizes, 1.0).astype(jnp.int32)
 
 
-def bernoulli_arrivals(key: jax.Array, slots: int, load) -> jnp.ndarray:
+def pareto_raw(u: jnp.ndarray, scale, inv_tail) -> jnp.ndarray:
+    """Continuous Pareto(scale, 1/inv_tail) samples via inverse CDF."""
+    return scale * u ** (-inv_tail)
+
+
+def weibull_raw(u: jnp.ndarray, scale, inv_tail) -> jnp.ndarray:
+    """Continuous Weibull(shape 1/inv_tail, scale) samples via inverse CDF."""
+    return scale * (-jnp.log(u)) ** inv_tail
+
+
+def diurnal_modulation(t_idx: jnp.ndarray, amp, period) -> jnp.ndarray:
+    """Per-slot rate multiplier ``1 + amp * sin(2 pi t / period)``.
+
+    ``amp`` / ``period`` are traced operands.  The long-run mean of the
+    multiplier is 1 (over whole periods), so the modulated process keeps
+    its nominal average rate; keep ``amp <= min(1, 1/rate - 1)`` so the
+    instantaneous rate stays a probability.  ``amp = 0`` returns exactly
+    1.0 everywhere, so unmodulated cells are bit-identical to the flat
+    arrival stream and share the modulated cells' compiled program.
+    """
+    phase = (2.0 * np.pi) * t_idx.astype(jnp.float32) / period
+    return 1.0 + amp * jnp.sin(phase)
+
+
+def geometric_sizes(key: jax.Array, n: int, mean: int) -> jnp.ndarray:
+    """i.i.d. Geometric(1/mean) sizes with support {1, 2, ...}.
+
+    Convenience wrapper over the ``geometric`` :class:`ServiceProcess`
+    (single implementation of the inverse-CDF formula); bit-identical to
+    the historical standalone sampler.
+    """
+    return service_sizes(key, n, ServiceProcess.create("geometric", mean))
+
+
+def bernoulli_arrivals(
+    key: jax.Array, slots: int, load, mod: jnp.ndarray | None = None
+) -> jnp.ndarray:
     """One potential arrival per slot with probability ``load``.
 
     ``load`` may be a Python float or a traced scalar -- the grid simulator
     passes it as a :class:`~repro.core.care.slotted_sim.Scenario` operand.
+    ``mod`` (optional, ``(slots,)``) multiplies the per-slot rate -- the
+    diurnal curve of :func:`diurnal_modulation`; an all-ones ``mod`` is
+    bit-identical to no modulation (``bernoulli(key, p, shape)`` is
+    ``uniform(key, shape) < p`` and ``load * 1.0 == load``).
     """
-    return jax.random.bernoulli(key, load, (slots,))
+    p = load if mod is None else load * mod
+    return jax.random.bernoulli(key, p, (slots,))
 
 
 def mmpp_arrivals(
@@ -82,23 +238,30 @@ def mmpp_arrivals_from_rates(
     lam_hi,
     lam_lo,
     burst_stay,
+    mod: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """MMPP arrivals from ready-made state rates (traceable operands).
 
     ``lam_hi`` / ``lam_lo`` / ``burst_stay`` may be Python floats or traced
-    scalars; only ``slots`` is structural.
+    scalars; only ``slots`` is structural.  ``mod`` (optional, ``(slots,)``)
+    multiplies the per-slot rate -- the diurnal curve of
+    :func:`diurnal_modulation`; an all-ones ``mod`` is bit-identical to no
+    modulation (``lam * 1.0 == lam``).
     """
     k_switch, k_arr = jax.random.split(key)
     switch = jax.random.uniform(k_switch, (slots,)) >= burst_stay
     u_arr = jax.random.uniform(k_arr, (slots,))
+    mod = jnp.ones((slots,), jnp.float32) if mod is None else mod
 
     def step(state, xs):
-        sw, u = xs
+        sw, u, m = xs
         state = jnp.where(sw, 1 - state, state)
-        lam = jnp.where(state == 1, lam_hi, lam_lo)
+        lam = jnp.where(state == 1, lam_hi, lam_lo) * m
         return state, u < lam
 
-    _, arrive = jax.lax.scan(step, jnp.zeros((), jnp.int32), (switch, u_arr))
+    _, arrive = jax.lax.scan(
+        step, jnp.zeros((), jnp.int32), (switch, u_arr, mod)
+    )
     return arrive
 
 

@@ -1,0 +1,60 @@
+"""Smoke tests: every example must run end-to-end in quick mode.
+
+The examples are the repo's user-facing surface; without this gate they
+silently rot when the library API moves (exactly what happened to
+``multipod_dryrun`` when ``Compiled.cost_analysis`` changed shape).  Each
+runs as a subprocess with reduced sizes -- the same code paths, seconds
+not minutes.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXAMPLES = {
+    "quickstart": ["examples/quickstart.py", "--slots", "2000"],
+    "serve_care": ["examples/serve_care.py", "--slots", "1000"],
+    "train_moe_care": [
+        "examples/train_moe_care.py",
+        "--steps", "6", "--batch", "2", "--seq", "32", "--ckpt-every", "2",
+    ],
+    "multipod_dryrun": [
+        "examples/multipod_dryrun.py",
+        "--arch", "qwen3-0.6b", "--shape", "train_4k", "--single-pod",
+    ],
+}
+
+EXPECT = {
+    "quickstart": "compiled programs",
+    "serve_care": "ET dispatcher",
+    "train_moe_care": "[done]",
+    "multipod_dryrun": "compiles cleanly",
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(EXAMPLES))
+def test_example_runs_quick(name):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    # multipod_dryrun forces its own 256/512-device host platform; the
+    # others run on whatever the session provides.
+    if name != "multipod_dryrun":
+        env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable] + EXAMPLES[name],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=env,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert EXPECT[name] in proc.stdout, proc.stdout[-2000:]

@@ -17,6 +17,7 @@ Three layers of protection for the "one compiled program per figure" path:
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -167,6 +168,138 @@ class TestSimulateGrid:
         grid = simulate_grid([1], static, [c.scenario() for c in cfgs])
         for cell, cfg in zip(grid, cfgs):
             _assert_same(cell[0], simulate(jax.random.key(1), cfg))
+
+
+# ---------------------------------------------------------------------------
+# 2b. Traced service axis + padded fixed horizon.
+# ---------------------------------------------------------------------------
+
+
+class TestTracedServiceAxis:
+    def test_mixed_mean_and_horizon_grid_matches_percell(self):
+        """The bench_ssc shape: (mean_service, horizon) vary per cell inside
+        one compiled program; each cell must equal its own per-cell run
+        bit for bit (the per-cell path shares the padded StaticConfig, so
+        the workload streams coincide)."""
+        cfgs = [
+            SimConfig(slots=1000, max_slots=4000, load=0.95,
+                      mean_service=10, servers=10, x=2),
+            SimConfig(slots=2000, max_slots=4000, load=0.95,
+                      mean_service=20, servers=10, x=2),
+            SimConfig(slots=4000, max_slots=4000, load=0.95,
+                      mean_service=40, servers=10, x=2),
+        ]
+        static = cfgs[0].static_part()
+        assert all(c.static_part() == static for c in cfgs)
+        grid = simulate_grid([0, 3], static, [c.scenario() for c in cfgs])
+        for cell, cfg in zip(grid, cfgs):
+            for res, seed in zip(cell, (0, 3)):
+                _assert_same(res, simulate(jax.random.key(seed), cfg))
+
+    def test_horizon_mask_freezes_the_tail(self):
+        """Slots past the traced horizon are no-ops: arrivals stop, nothing
+        serves, no messages fire (RT would otherwise keep messaging
+        through the padding)."""
+        cfg = SimConfig(slots=1500, max_slots=4000, load=0.9, comm="rt",
+                        rt_rate=0.05, approx="msr")
+        r = simulate(jax.random.key(0), cfg)
+        # ~0.9 * 1500 arrivals, not 0.9 * 4000.
+        assert 1150 <= r.arrivals <= 1500
+        # RT-0.05 on 30 servers: ~0.05 * 30 * 1500 messages, not * 4000.
+        assert r.messages <= 0.05 * 30 * 1500 + 30
+        assert r.arrivals == r.departures + int(r.final_q.sum())
+
+    def test_unpadded_equals_padding_free_default(self):
+        cfg = SimConfig(slots=2000, load=0.9, x=3)
+        _assert_same(
+            simulate(jax.random.key(1), cfg),
+            simulate(
+                jax.random.key(1), dataclasses.replace(cfg, max_slots=2000)
+            ),
+        )
+
+    @pytest.mark.parametrize(
+        "kind,tail", [("pareto", 1.6), ("weibull", 0.8), ("deterministic", 2.0)]
+    )
+    def test_service_kind_grid_matches_percell(self, kind, tail):
+        """Heavy-tailed / deterministic sizes: tail and mean are traced per
+        cell; the fused grid equals per-cell simulate bit for bit, and the
+        distribution-free ET bound AQ <= x-1 (Prop 6.8) holds."""
+        cfgs = [
+            SimConfig(slots=2000, load=0.9, x=3, service=kind,
+                      service_tail=tail, mean_service=20),
+            SimConfig(slots=2000, load=0.8, x=2, service=kind,
+                      service_tail=tail + 0.5, mean_service=35),
+        ]
+        static = cfgs[0].static_part()
+        assert cfgs[1].static_part() == static
+        grid = simulate_grid([2], static, [c.scenario() for c in cfgs])
+        for cell, cfg in zip(grid, cfgs):
+            _assert_same(cell[0], simulate(jax.random.key(2), cfg))
+            assert cell[0].max_aq <= cfg.x - 1
+
+    def test_mixed_service_kinds_fail_loudly(self):
+        cfgs = [
+            SimConfig(slots=1000, service="pareto", service_tail=2.0),
+            SimConfig(slots=1000, service="weibull", service_tail=1.0),
+        ]
+        with pytest.raises(ValueError):
+            slotted_sim.stack_scenarios([c.scenario() for c in cfgs])
+
+    def test_diurnal_amp_zero_is_flat(self):
+        """amp=0 is bit-identical to the unmodulated arrival stream, so
+        flat cells share the diurnal cells' compiled program for free."""
+        cfg = SimConfig(slots=2000, load=0.9, x=3)
+        _assert_same(
+            simulate(jax.random.key(4), cfg),
+            simulate(
+                jax.random.key(4),
+                dataclasses.replace(cfg, diurnal_amp=0.0,
+                                    diurnal_period=500.0),
+            ),
+        )
+
+    def test_diurnal_grid_matches_percell(self):
+        cfgs = [
+            SimConfig(slots=2000, load=0.6, diurnal_amp=0.5,
+                      diurnal_period=400.0),
+            SimConfig(slots=2000, load=0.6, diurnal_amp=0.0),
+        ]
+        static = cfgs[0].static_part()
+        assert cfgs[1].static_part() == static
+        grid = simulate_grid([5], static, [c.scenario() for c in cfgs])
+        for cell, cfg in zip(grid, cfgs):
+            _assert_same(cell[0], simulate(jax.random.key(5), cfg))
+
+    def test_max_slots_below_slots_rejected(self):
+        with pytest.raises(ValueError):
+            SimConfig(slots=2000, max_slots=1000).static_part()
+
+    def test_diurnal_amp_validated(self):
+        # Peaks above probability 1 would be silently clipped by the
+        # u < rate draw, breaking the long-run-rate invariant.
+        with pytest.raises(ValueError, match="peak"):
+            SimConfig(load=0.95, diurnal_amp=0.5).scenario()
+        with pytest.raises(ValueError, match="amp"):
+            SimConfig(load=0.3, diurnal_amp=1.5).scenario()
+        SimConfig(load=0.5, diurnal_amp=0.8).scenario()  # 0.9 <= 1: fine
+        # mmpp clips at the modulated *burst-state* rate, not load:
+        # lam_hi = 0.96, so amp=0.5 peaks at 1.44 even though load 0.6 fits.
+        with pytest.raises(ValueError, match="mmpp"):
+            SimConfig(arrival="mmpp", load=0.6, burst_intensity=1.6,
+                      diurnal_amp=0.5).scenario()
+        SimConfig(arrival="mmpp", load=0.3, burst_intensity=1.6,
+                  diurnal_amp=0.5).scenario()  # 0.48 * 1.5 = 0.72: fine
+
+    def test_diurnal_amp_validated_at_grid_boundary(self):
+        # A hand-built Scenario (created without knowing the arrival kind)
+        # must still be rejected where it meets an mmpp StaticConfig.
+        scn = slotted_sim.Scenario.create(
+            servers=30, load=0.6, burst_intensity=1.6, diurnal_amp=0.5
+        )
+        static = SimConfig(arrival="mmpp", load=0.6).static_part()
+        with pytest.raises(ValueError, match="peak"):
+            simulate_grid([0], static, [scn])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,65 @@
+"""Zero-completion safety of the metric reductions.
+
+Short-horizon quick runs (and padded cells with tiny traced horizons) can
+legitimately finish with *no completed jobs*; every percentile / mean
+reduction must then produce defined zeros, never NaN -- a NaN row is a CI
+trajectory-diff regression by design (``benchmarks/diff.py``).
+"""
+import warnings
+
+import numpy as np
+
+from repro.core.care import metrics, slotted_sim
+
+
+EMPTY = np.array([], dtype=np.int64)
+
+
+def test_jct_summary_empty_is_zero_not_nan():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # np raises RuntimeWarning on empty mean
+        s = metrics.jct_summary(EMPTY)
+    assert s == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p999": 0.0}
+    assert all(np.isfinite(v) for v in s.values())
+
+
+def test_jct_summary_accepts_lists():
+    s = metrics.jct_summary(np.asarray([4, 4, 4]))
+    assert s["mean"] == 4.0 and s["p999"] == 4.0
+
+
+def test_mean_jct_empty_and_nonempty():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert metrics.mean_jct(EMPTY) == 0.0
+    assert metrics.mean_jct(np.asarray([2, 4])) == 3.0
+
+
+def test_ccdf_empty_samples():
+    grid, frac = metrics.ccdf(EMPTY)
+    assert np.all(frac == 0.0)
+    assert np.all(np.isfinite(frac))
+
+
+def test_ccdf_dominates_empty_inputs():
+    assert metrics.ccdf_dominates(EMPTY, EMPTY) in (True, False)
+
+
+def test_relative_communication_zero_departures():
+    r = slotted_sim.SimResult(
+        jct=EMPTY, arrivals=0, departures=0, messages=0, max_aq=0,
+        max_queue=0, overflow=False,
+        per_server_arrivals=np.zeros(4, np.int64),
+        final_q=np.zeros(4, np.int64),
+    )
+    assert metrics.relative_communication(r, "jsaq") == 0.0
+    assert np.isfinite(metrics.relative_communication(r, "jsq"))
+
+
+def test_simulation_with_zero_completions_yields_finite_summary():
+    # A horizon shorter than one mean service: jobs arrive, none finish.
+    cfg = slotted_sim.SimConfig(slots=5, load=1.0, mean_service=50)
+    res = slotted_sim.simulate(__import__("jax").random.key(0), cfg)
+    s = metrics.jct_summary(res.jct)
+    assert res.jct.size == 0
+    assert all(np.isfinite(v) for v in s.values())

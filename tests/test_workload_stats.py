@@ -1,0 +1,141 @@
+"""Statistical property tests for the workload samplers (hypothesis).
+
+The traced service/arrival operands only help if the samplers actually
+realise the distributions they claim, so these check, over
+hypothesis-chosen seeds and parameters:
+
+* geometric / pareto / weibull empirical means within tolerance of the
+  requested traced ``mean`` (discretisation adds at most +1);
+* the Pareto tail index recovered from the continuous sampler by the
+  Hill estimator;
+* MMPP and diurnal-modulated Bernoulli long-run arrival rates equal to
+  ``load`` (rate balance and sine-curve zero-mean respectively).
+
+``derandomize=True`` keeps the example set fixed so CI cannot flake on an
+unlucky draw; tolerances are sized for the fixed sample counts below.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # statistical tests skip; deterministic ones still run
+    given = settings = st = None
+
+from repro.core.care import workload
+
+N = 200_000
+SLOTS = 100_000
+
+
+def _sizes(kind, mean, tail, seed):
+    sp = workload.ServiceProcess.create(kind=kind, mean=mean, tail=tail)
+    return np.asarray(workload.service_sizes(jax.random.key(seed), N, sp))
+
+
+if st is not None:
+    seeds = st.integers(0, 2**16 - 1)
+    STATS = settings(max_examples=8, deadline=None, derandomize=True)
+
+    @STATS
+    @given(seed=seeds, mean=st.floats(5.0, 60.0))
+    def test_geometric_mean(seed, mean):
+        s = _sizes("geometric", mean, 2.0, seed)
+        assert s.min() >= 1
+        assert abs(s.mean() - mean) / mean < 0.05
+
+    @STATS
+    @given(seed=seeds, mean=st.floats(10.0, 50.0), tail=st.floats(2.2, 4.0))
+    def test_pareto_mean(seed, mean, tail):
+        # tail > 2.2 keeps the variance finite so the sample mean
+        # concentrates; ceil-discretisation adds at most +1.
+        s = _sizes("pareto", mean, tail, seed)
+        assert s.min() >= 1
+        assert -0.12 * mean < s.mean() - mean < 0.12 * mean + 1.0
+
+    @STATS
+    @given(seed=seeds, tail=st.floats(1.3, 3.5))
+    def test_pareto_tail_index_hill(seed, tail):
+        sp = workload.ServiceProcess.create(
+            kind="pareto", mean=30.0, tail=tail
+        )
+        u = jax.random.uniform(jax.random.key(seed), (N,), jnp.float32,
+                               1e-7, 1.0 - 1e-7)
+        x = np.sort(np.asarray(workload.pareto_raw(u, sp.scale, sp.inv_tail)))
+        k = N // 50  # Hill estimator over the top 2% order statistics
+        top = x[-k:]
+        hill = 1.0 / np.mean(np.log(top / top[0]))
+        assert abs(hill - tail) < 0.35 * tail
+
+    @STATS
+    @given(seed=seeds, mean=st.floats(10.0, 50.0), tail=st.floats(0.6, 2.5))
+    def test_weibull_mean(seed, mean, tail):
+        s = _sizes("weibull", mean, tail, seed)
+        assert s.min() >= 1
+        assert -0.10 * mean < s.mean() - mean < 0.10 * mean + 1.0
+
+    # jit once at module level; the rates enter traced so every hypothesis
+    # example reuses one compiled program instead of retracing the scan.
+    _MMPP_FN = jax.jit(
+        lambda key, hi, lo, stay: workload.mmpp_arrivals_from_rates(
+            key, SLOTS, hi, lo, stay
+        )
+    )
+
+    @STATS
+    @given(seed=seeds, load=st.floats(0.2, 0.9),
+           intensity=st.floats(1.1, 2.0))
+    def test_mmpp_long_run_rate(seed, load, intensity):
+        lam_hi = min(intensity * load, 1.0)
+        lam_lo = max(2.0 * load - lam_hi, 0.0)
+        arrive = np.asarray(
+            _MMPP_FN(jax.random.key(seed), jnp.float32(lam_hi),
+                     jnp.float32(lam_lo), jnp.float32(0.98))
+        )
+        # Bursts of mean length 50 leave ~SLOTS/50 independent blocks.
+        assert abs(arrive.mean() - load) < 0.06
+
+    @STATS
+    @given(seed=seeds, load=st.floats(0.2, 0.7),
+           amp_frac=st.floats(0.2, 0.9))
+    def test_diurnal_long_run_rate(seed, load, amp_frac):
+        # amp <= min(1, 1/load - 1) keeps the instantaneous rate a
+        # probability; over whole periods the sine averages out, so the
+        # long-run mean rate is exactly load.
+        amp = amp_frac * min(1.0, 1.0 / load - 1.0)
+        t_idx = jnp.arange(SLOTS, dtype=jnp.int32)
+        mod = workload.diurnal_modulation(t_idx, jnp.float32(amp),
+                                          jnp.float32(1000.0))
+        arrive = np.asarray(
+            jax.random.bernoulli(jax.random.key(seed), load * mod, (SLOTS,))
+        )
+        assert abs(arrive.mean() - load) < 0.02
+
+
+def test_deterministic_sizes_exact():
+    s = _sizes("deterministic", 7.0, 2.0, 0)
+    assert np.all(s == 7)
+
+
+def test_diurnal_amp_zero_is_exactly_one():
+    t_idx = jnp.arange(1024, dtype=jnp.int32)
+    mod = workload.diurnal_modulation(t_idx, jnp.float32(0.0),
+                                      jnp.float32(333.0))
+    assert np.all(np.asarray(mod) == 1.0)
+
+
+@pytest.mark.parametrize(
+    "kind,tail,err",
+    [("pareto", 1.0, "tail"), ("pareto", 0.5, "tail"),
+     ("weibull", 0.0, "shape"), ("badkind", 2.0, "kind")],
+)
+def test_create_rejects_invalid(kind, tail, err):
+    with pytest.raises(ValueError, match=err):
+        workload.ServiceProcess.create(kind=kind, mean=30.0, tail=tail)
+
+
+def test_create_rejects_sub_slot_mean():
+    with pytest.raises(ValueError, match="mean"):
+        workload.ServiceProcess.create(mean=0.5)
