@@ -27,9 +27,13 @@ import jax
 import numpy as np
 
 from repro.core.care import slotted_sim
+from repro.serve import engine as serve_engine
 
 # (seed, SimConfig) -> (SimResult, attributed wall seconds)
 _CELL_CACHE: dict = {}
+
+# (seed, ServeConfig) -> (ServeResult, attributed wall seconds)
+_SERVE_CACHE: dict = {}
 
 DEFAULT_SLOTS = 100_000
 QUICK_SLOTS = 20_000
@@ -129,6 +133,67 @@ def grids_match(grid_results, percell_results) -> bool:
         and np.array_equal(g.jct, p.jct)
         for grow, prow in zip(grid_results, percell_results)
         for g, p in zip(grow, prow)
+    )
+
+
+def timed_serve_grid(
+    cells: Sequence[serve_engine.ServeConfig], seeds: Sequence[int]
+):
+    """Run a serving grid fused: one ``serve_grid`` call per static group.
+
+    The serving analogue of :func:`timed_simulate_grid`: cells are grouped
+    by their :meth:`~repro.serve.engine.ServeConfig.static_part` (shapes +
+    comm kind; trigger thresholds are traced operands) and each group runs
+    as one compiled program -- vmap over (cell x seed), shard_map across
+    local devices.  Returns ``(results, walls)`` aligned with ``cells``
+    (``results[i]`` is the per-seed list of ``ServeResult``); cached cells
+    are served from ``_SERVE_CACHE`` at their original attributed wall.
+    """
+    seeds = tuple(int(s) for s in seeds)
+    pending: dict = {}  # EngineStatic -> {cell: None} (ordered, deduped)
+    for cell in cells:
+        if any((s, cell) not in _SERVE_CACHE for s in seeds):
+            pending.setdefault(cell.static_part(), {})[cell] = None
+    for static, group in pending.items():
+        group_cells = list(group)
+        t0 = time.perf_counter()
+        grid = serve_engine.serve_grid(list(seeds), static, group_cells)
+        wall = time.perf_counter() - t0
+        per_run = wall / (len(group_cells) * len(seeds))
+        for cell, row in zip(group_cells, grid):
+            for s, r in zip(seeds, row):
+                _SERVE_CACHE[(s, cell)] = (r, per_run)
+    results, walls = [], []
+    for cell in cells:
+        cached = [_SERVE_CACHE[(s, cell)] for s in seeds]
+        results.append([r for r, _ in cached])
+        walls.append(sum(w for _, w in cached))
+    return results, walls
+
+
+def serve_reference(cell: serve_engine.ServeConfig, seed: int) -> dict:
+    """One numpy-reference serving run on the cell's shared workload.
+
+    The pre-refactor execution model (a Python per-slot loop) and the
+    golden the fused grid must reproduce bit for bit; benchmarks time it
+    to build the sequential cost model behind ``serve/grid_speedup``.
+    """
+    return serve_engine.run_serving_sim(
+        cell.engine_config(), slots=cell.slots, load=cell.load,
+        mean_prefill=cell.mean_prefill, mean_decode=cell.mean_decode,
+        seed=seed, workload=serve_engine.workload_for(cell, seed),
+    )
+
+
+def serve_matches_reference(
+    result: serve_engine.ServeResult, ref: dict
+) -> bool:
+    """Bitwise equality of a fused-grid run and the numpy reference."""
+    return (
+        result.messages == ref["messages"]
+        and result.completed == ref["completed"]
+        and np.array_equal(result.jct_by_rid, ref["jct_by_rid"])
+        and np.array_equal(result.final_occupancy, ref["final_occupancy"])
     )
 
 

@@ -12,10 +12,14 @@ Two parts:
    of prompts and decoded with continuous batching -- the actual
    ``model.prefill`` / ``model.decode_step`` code path the full-size
    configs lower to on the 512-chip mesh.
-2. **Dispatch at scale**: the queueing engine drives 20k slots under a
-   0.9 load and compares ET-x / DT-x / RT-r / exact dispatchers on job
-   completion time and messages per completion (paper Figs 8-12 at the
-   systems tier).
+2. **Dispatch at scale**: the jax serving engine drives the whole regime
+   ladder (exact / ET-x / DT-x / RT-r) as *fused grids* -- one compiled
+   program per comm kind, thresholds traced -- and compares dispatchers
+   on job completion time and messages per completion (paper Figs 8-12 at
+   the systems tier).  The numpy ``CareDispatcher`` remains the pluggable
+   path (hook a real ``decode_step`` closure via ``model_fn``) and the
+   golden reference: one cell is re-run through it here and checked
+   bit-identical to the fused grid.
 
 Usage:
   PYTHONPATH=src python examples/serve_care.py
@@ -28,7 +32,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import model
-from repro.serve.engine import EngineConfig, run_serving_sim
+from repro.serve import engine
+from repro.serve.engine import ServeConfig
 
 
 def real_decode_demo(num_prompts: int = 4, prompt_len: int = 16, gen_len: int = 12):
@@ -59,22 +64,49 @@ def real_decode_demo(num_prompts: int = 4, prompt_len: int = 16, gen_len: int = 
 
 def dispatch_comparison(slots: int, load: float):
     print(f"\n[dispatch] {slots} slots at load {load}, 8 replica groups x 16 "
-          f"decode slots")
-    print(f"{'dispatcher':<14} {'mean JCT':>9} {'p99 JCT':>9} {'msgs/completion':>16}")
-    rows = [
-        ("exact", EngineConfig(comm="exact")),
-        ("ET-4 (CARE)", EngineConfig(comm="et", et_x=4)),
-        ("ET-8 (CARE)", EngineConfig(comm="et", et_x=8)),
-        ("DT-4", EngineConfig(comm="dt", dt_x=4)),
-        ("RT-16", EngineConfig(comm="rt", rt_period=16)),
+          f"decode slots (fused jax grids, one program per comm kind)")
+    # MSR drain = decode_slots / mean_work = 0.25: the emulation runs at
+    # the nominal per-replica completion rate (and stays dyadic, so the
+    # f32 traced engine is bit-identical to the f64 numpy reference).
+    work = dict(slots=slots, load=load, mean_prefill=4, mean_decode=60,
+                msr_drain=0.25)
+    named = [
+        ("exact", ServeConfig(comm="exact", **work)),
+        ("ET-4 (CARE)", ServeConfig(comm="et", x=4, **work)),
+        ("ET-8 (CARE)", ServeConfig(comm="et", x=8, **work)),
+        ("DT-4", ServeConfig(comm="dt", x=4, **work)),
+        ("RT-16", ServeConfig(comm="rt", rt_period=16, **work)),
     ]
-    base = None
-    for name, ecfg in rows:
-        r = run_serving_sim(ecfg, slots=slots, load=load)
-        if base is None:
-            base = r
-        print(f"{name:<14} {r['mean_jct']:9.1f} {r['p99_jct']:9.1f} "
-              f"{r['msgs_per_completion']:16.3f}")
+    groups: dict = {}
+    for i, (_, cell) in enumerate(named):
+        groups.setdefault(cell.static_part(), []).append(i)
+    results: dict = {}
+    for static, idxs in groups.items():
+        grid = engine.serve_grid([0], static, [named[i][1] for i in idxs])
+        for i, row in zip(idxs, grid):
+            results[i] = row[0]
+    print(f"{len(named)} cells ran as {len(groups)} compiled programs "
+          f"(thresholds are traced operands)")
+    print(f"{'dispatcher':<14} {'mean JCT':>9} {'p99 JCT':>9} {'msgs/completion':>16}")
+    for i, (name, _) in enumerate(named):
+        r = results[i]
+        print(f"{name:<14} {r.mean_jct:9.1f} {r.p99_jct:9.1f} "
+              f"{r.msgs_per_completion:16.3f}")
+
+    # The numpy dispatcher stays as the pluggable-model_fn path and the
+    # golden reference: replay one cell through it and check bit-identity.
+    cell = named[1][1]
+    ref = engine.run_serving_sim(
+        cell.engine_config(), slots=cell.slots, load=cell.load,
+        mean_prefill=cell.mean_prefill, mean_decode=cell.mean_decode,
+        seed=0, workload=engine.workload_for(cell, 0),
+    )
+    jx = results[1]
+    assert ref["messages"] == jx.messages
+    assert np.array_equal(ref["jct_by_rid"], jx.jct_by_rid)
+    print("\n[golden] numpy CareDispatcher replay of ET-4: "
+          f"{ref['messages']} messages, JCT vector bit-identical to the "
+          "fused grid")
     print("\nReading: the ET dispatcher matches the exact-state JCT "
           "distribution while replicas\nmessage the front-end only on "
           "emulation-error threshold crossings.")

@@ -30,9 +30,12 @@ Patterns (paper Section 2.1.2 / Section 6):
 
 The module is pure and vectorised over the server axis.  It is written
 against the shared ``numpy``/``jax.numpy`` array API: pass ``xp=jnp``
-(default) inside jitted ``lax.scan`` bodies, or ``xp=np`` from host-side
-hot loops such as the serving dispatcher -- both produce identical
-trigger decisions and message counts.
+(default) inside jitted ``lax.scan`` bodies (the slotted simulator and
+the jax serving engine, whose trigger thresholds arrive as traced
+``EngineScenario`` operands), or ``xp=np`` from host-side hot loops (the
+numpy ``CareDispatcher`` reference) -- both produce identical trigger
+decisions and message counts, which is what lets the serving tier's two
+backends be bit-identical.
 """
 from __future__ import annotations
 

@@ -7,9 +7,9 @@ dispatcher's emulation (they know both their true state and, because
 updates are deterministic, exactly what the dispatcher believes -- the
 paper's information asymmetry) and send a correction message only when the
 trigger of the shared protocol core (:mod:`repro.core.care.comm`, the same
-RT/DT/ET/hybrid implementation the slotted and MoE-dispatch simulators use,
-run here on its ``numpy`` backend) fires -- so dispatcher<->replica control
-traffic is sparse even at high request rates.
+RT/DT/ET/hybrid implementation the slotted and MoE-dispatch simulators use)
+fires -- so dispatcher<->replica control traffic is sparse even at high
+request rates.
 
 The engine is discrete-time (slot = one decode iteration across replicas),
 matching the paper's simulation setting; each replica runs continuous
@@ -17,22 +17,50 @@ batching with a fixed decode-slot budget, admitting queued requests as
 slots free up.  Completion requires ``decode_len`` iterations after a
 prefill cost proportional to the prompt.
 
-Replica state is fully vectorised: decode slots are a ``(replicas,
-decode_slots)`` remaining-work matrix and pending requests live in
-per-replica circular ring buffers, so one engine step is a handful of
-numpy array ops regardless of how many requests are in flight -- the hot
-loop never iterates Python request objects (they are only materialised at
-admission/completion boundaries, O(arrivals + completions) per slot).
+Two interchangeable execution paths share one workload and one semantics:
 
-``model_fn`` is pluggable: ``None`` runs the queueing dynamics only (used
-by benchmarks to measure JCT distributions at scale); a real
-``decode_step`` closure runs actual token generation (examples/serve_care.py).
+* **numpy reference** (:class:`CareDispatcher` + :func:`run_serving_sim`)
+  -- a host-side per-slot loop.  Replica state is vectorised (decode slots
+  are a ``(replicas, decode_slots)`` remaining-work matrix, pending
+  requests live in per-replica circular rings) but slots advance in
+  Python.  This is the *pluggable* path: ``model_fn`` hooks a real
+  ``decode_step`` closure into every slot (examples/serve_care.py), and it
+  is the golden reference the jax path is tested against bit for bit.
+* **jax engine** (:func:`serve_one` / :func:`serve_grid`) -- the same
+  dynamics as a jitted fixed-horizon ``lax.scan`` with the static/traced
+  split of the slotted tier: :class:`EngineStatic` fixes shapes and code
+  paths (replicas, decode_slots, queue_cap, the padded scan length and
+  per-slot arrival-lane width, the comm *kind*), :class:`EngineScenario`
+  is a registered pytree of traced operands (trigger thresholds,
+  ``msr_drain``, the effective ``horizon``).  ``serve_grid`` runs a whole
+  regime ladder x seed sweep as **one compiled program** -- vmap over the
+  flattened (cell x seed) axis, shard_map across local devices with
+  wrap-around padding -- which is what scales the replica step past 1k
+  replicas (``bench_serving``'s ``serve/replicas1024`` row).
+
+Bit-identical equivalence is by construction: the workload (per-slot
+arrival counts, per-request prefill/decode sizes, routing tie-break
+uniforms) is pre-sampled host-side by :func:`sample_workload` into a
+:class:`ServeWorkload` both paths consume.  Arrival lanes are padded to
+``EngineStatic.max_arrivals`` with an active mask (exactly like the padded
+horizon), tie-break uniforms are float32 so the f32 traced path and the
+f64 host path truncate to the same rank, and every float the engine
+carries (the MSR-drained occupancy approximation) stays on dyadic values
+``< 2**24`` for the default drains, so float32 and float64 agree exactly.
+
+RNG streams (re-keyed in PR 4): the workload stream and the dispatcher's
+tie-break stream are split with ``np.random.SeedSequence(seed).spawn(2)``
+so arrival randomness and routing randomness are independent -- the old
+engine seeded both from ``default_rng(seed)``, correlating them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+import functools
+from typing import Callable, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.care import comm as comm_lib
@@ -75,6 +103,261 @@ class EngineConfig:
         raise ValueError(f"unknown comm mode: {self.comm}")
 
 
+# ---------------------------------------------------------------------------
+# Grid-facing configuration: one serving cell = static structure + scenario.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One serving grid cell as the user sees it (hashable).
+
+    Splits into the two halves the compiled program takes:
+    :meth:`static_part` (shapes + comm kind -- jit specialises on it) and
+    :meth:`scenario` (traced operands).  ``load`` / ``mean_prefill`` /
+    ``mean_decode`` parameterise the *host-side* workload sampler (they
+    never enter the traced program; the sampled arrays do), while ``x`` /
+    ``rt_period`` / ``msr_drain`` are genuinely traced -- an ET-x ladder
+    shares one compiled program.
+    """
+
+    replicas: int = 8
+    decode_slots: int = 16
+    slots: int = 20_000
+    load: float = 0.9
+    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact"
+    x: float = 4.0  # ET/DT threshold (traced)
+    rt_period: int = 16
+    msr_drain: float = 1.0
+    mean_prefill: int = 4
+    mean_decode: int = 64
+    queue_cap: int = 512  # per-replica pending ring capacity (jax path)
+    max_slots: Optional[int] = None  # padded scan length (>= slots)
+    # Padded arrival-lane width; 0 = derive from the sampled batch.  Pin it
+    # (e.g. to the maximum over every seed set a benchmark will submit) so
+    # repeat invocations reuse one compiled shape.
+    max_arrivals: int = 0
+
+    def arrival_rate(self) -> float:
+        """Offered per-slot arrival rate: load x service capacity."""
+        mean_work = self.mean_prefill + self.mean_decode
+        return self.load * self.replicas * self.decode_slots / mean_work
+
+    def static_part(self) -> "EngineStatic":
+        if self.max_slots is not None and self.max_slots < self.slots:
+            raise ValueError(
+                f"max_slots ({self.max_slots}) must be >= slots ({self.slots})"
+            )
+        return EngineStatic(
+            replicas=self.replicas,
+            decode_slots=self.decode_slots,
+            queue_cap=self.queue_cap,
+            slots=self.max_slots if self.max_slots is not None else self.slots,
+            comm=self.comm,
+            max_arrivals=self.max_arrivals,
+        )
+
+    def scenario(self) -> "EngineScenario":
+        return EngineScenario.create(
+            load=self.load,
+            x=self.x,
+            rt_period=self.rt_period,
+            msr_drain=self.msr_drain,
+            mean_prefill=self.mean_prefill,
+            mean_decode=self.mean_decode,
+            horizon=self.slots,
+        )
+
+    def engine_config(self) -> EngineConfig:
+        """The numpy-reference view of this cell's dispatcher parameters."""
+        return EngineConfig(
+            num_replicas=self.replicas,
+            decode_slots=self.decode_slots,
+            et_x=int(self.x) if float(self.x).is_integer() else self.x,
+            comm=self.comm,
+            dt_x=int(self.x) if float(self.x).is_integer() else self.x,
+            rt_period=self.rt_period,
+            msr_drain=self.msr_drain,
+        )
+
+    def workload_key(self) -> tuple:
+        """The sampler's parameter tuple: cells sharing it share a stream."""
+        return (
+            self.replicas, self.decode_slots, self.slots, self.load,
+            self.mean_prefill, self.mean_decode,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStatic:
+    """Compile-time structure of the jax serving program (hashable).
+
+    ``slots`` is the *padded* scan length (each cell's effective length is
+    the traced ``EngineScenario.horizon``) and ``max_arrivals`` the padded
+    per-slot arrival-lane width (lanes beyond a slot's sampled arrival
+    count are masked no-ops).  ``max_arrivals=0`` means "derive from the
+    sampled workload" -- :func:`serve_grid` replaces it with the batch
+    maximum, rounded up so near-miss batches reuse a compiled program.
+    ``trace_occupancy`` additionally emits the end-of-slot per-replica
+    occupancy trace (tests / checkpoint fingerprints only -- it makes the
+    program output O(slots x replicas)).
+    """
+
+    replicas: int = 8
+    decode_slots: int = 16
+    queue_cap: int = 512
+    slots: int = 20_000
+    comm: str = "et"
+    max_arrivals: int = 0
+    trace_occupancy: bool = False
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineScenario:
+    """Traced scenario operands of one serving cell (a registered pytree).
+
+    ``x`` / ``rt_period`` / ``msr_drain`` / ``horizon`` are consumed by the
+    scan as array operands, so cells sweeping them share one compiled
+    program.  ``load`` / ``mean_prefill`` / ``mean_decode`` ride along for
+    reporting only -- the workload they parameterise is sampled host-side
+    (:func:`sample_workload`) from the cell's exact Python floats.
+    """
+
+    load: jnp.ndarray  # () f32 (reporting)
+    x: jnp.ndarray  # () f32 ET/DT threshold
+    rt_period: jnp.ndarray  # () i32 RT period in slots
+    msr_drain: jnp.ndarray  # () f32 emulated completions/slot/busy replica
+    mean_prefill: jnp.ndarray  # () f32 (reporting)
+    mean_decode: jnp.ndarray  # () f32 (reporting)
+    horizon: jnp.ndarray  # () i32 effective slots (<= EngineStatic.slots)
+
+    @staticmethod
+    def create(
+        load: float,
+        x: float = 4.0,
+        rt_period: int = 16,
+        msr_drain: float = 1.0,
+        mean_prefill: float = 4,
+        mean_decode: float = 64,
+        horizon: Optional[int] = None,
+    ) -> "EngineScenario":
+        if horizon is None:
+            horizon = np.iinfo(np.int32).max
+        return EngineScenario(
+            load=jnp.float32(load),
+            x=jnp.float32(x),
+            rt_period=jnp.int32(rt_period),
+            msr_drain=jnp.float32(msr_drain),
+            mean_prefill=jnp.float32(mean_prefill),
+            mean_decode=jnp.float32(mean_decode),
+            horizon=jnp.int32(horizon),
+        )
+
+
+def stack_scenarios(scenarios: Sequence[EngineScenario]) -> EngineScenario:
+    """Stack unbatched cells into one batched scenario (leading axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
+# ---------------------------------------------------------------------------
+# Host-side workload sampling: one replayable stream both backends consume.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeWorkload:
+    """Pre-sampled request stream (host-side numpy; rid = arrival order).
+
+    Drawn once per (cell workload parameters, seed) and consumed by both
+    the numpy reference and the jax scan, so the two are bit-identical by
+    construction.  ``tie_u`` is float32 *at the source*: both backends
+    compute the tie-break rank as ``int(f32(u) * f32(n_ties))``, so the
+    f32 traced path cannot round differently from the host path.
+    """
+
+    n_arr: np.ndarray  # (T,) int64 arrivals per slot
+    base: np.ndarray  # (T,) int64 rid of the first arrival in each slot
+    prefill: np.ndarray  # (N,) int64 per-request prefill cost (>= 1)
+    decode: np.ndarray  # (N,) int64 per-request decode length (>= 1)
+    work: np.ndarray  # (N,) int64 total slot occupancy, max(p + d, 1)
+    tie_u: np.ndarray  # (N,) float32 routing tie-break uniforms
+    arrival_slot: np.ndarray  # (N,) int64
+
+    @property
+    def total(self) -> int:
+        return int(self.work.shape[0])
+
+
+def sample_workload(
+    seed: int,
+    *,
+    replicas: int,
+    decode_slots: int,
+    slots: int,
+    load: float,
+    mean_prefill: float = 4,
+    mean_decode: float = 64,
+) -> ServeWorkload:
+    """Draw the replayable serving workload for one (parameters, seed).
+
+    Streams are split with ``SeedSequence.spawn``: arrivals/sizes and
+    routing tie-breaks come from independent child streams, so changing
+    the tie-break consumption (e.g. comparing comm kinds, which route
+    differently) can never perturb the offered workload and vice versa.
+    """
+    w_ss, r_ss = np.random.SeedSequence(int(seed)).spawn(2)
+    wrng = np.random.default_rng(w_ss)
+    rrng = np.random.default_rng(r_ss)
+    mean_work = mean_prefill + mean_decode
+    rate = load * replicas * decode_slots / mean_work
+    n_arr = wrng.poisson(rate, size=slots).astype(np.int64)
+    total = int(n_arr.sum())
+    prefill = 1 + wrng.poisson(mean_prefill, size=total).astype(np.int64)
+    decode = 1 + wrng.poisson(mean_decode, size=total).astype(np.int64)
+    work = np.maximum(prefill + decode, 1)
+    tie_u = rrng.random(size=total, dtype=np.float32)
+    base = np.concatenate([[0], np.cumsum(n_arr)[:-1]]).astype(np.int64)
+    arrival_slot = np.repeat(np.arange(slots, dtype=np.int64), n_arr)
+    return ServeWorkload(
+        n_arr=n_arr, base=base, prefill=prefill, decode=decode,
+        work=work, tie_u=tie_u, arrival_slot=arrival_slot,
+    )
+
+
+@functools.lru_cache(maxsize=512)
+def _cached_workload(key: tuple, seed: int) -> ServeWorkload:
+    replicas, decode_slots, slots, load, mean_prefill, mean_decode = key
+    return sample_workload(
+        seed, replicas=replicas, decode_slots=decode_slots, slots=slots,
+        load=load, mean_prefill=mean_prefill, mean_decode=mean_decode,
+    )
+
+
+def workload_for(cell: ServeConfig, seed: int) -> ServeWorkload:
+    """The (memoised) workload of one cell x seed.  Cells differing only
+    in comm kind / thresholds share the stream -- the paper's comparison
+    method (identical input replayed under every policy)."""
+    return _cached_workload(cell.workload_key(), int(seed))
+
+
+def pick_min_tied(occ: np.ndarray, u: float) -> int:
+    """Index of the minimum of ``occ``; ties broken by the uniform ``u``.
+
+    The rank is computed in float32 (``int(f32(u) * f32(n_ties))``) so the
+    traced f32 engine reproduces the choice bit for bit; ``u`` must come
+    from a float32 draw (``ServeWorkload.tie_u``) for that guarantee.
+    """
+    ties = np.flatnonzero(occ == occ.min())
+    rank = min(int(np.float32(u) * np.float32(len(ties))), len(ties) - 1)
+    return int(ties[rank])
+
+
+# ---------------------------------------------------------------------------
+# numpy reference: the pluggable-model_fn dispatcher (golden path).
+# ---------------------------------------------------------------------------
+
+
 class CareDispatcher:
     """JSAQ over approximated occupancy + shared-core correction triggers.
 
@@ -82,9 +365,19 @@ class CareDispatcher:
     hold the decode slots (0 remaining == free), ``_q_rid``/``_q_head``/
     ``_q_len`` are per-replica FIFO rings of pending request ids, and the
     trigger bookkeeping is a :class:`repro.core.care.comm.CommState`.
+
+    ``rng`` (optional) injects the tie-break stream; :func:`run_serving_sim`
+    passes pre-drawn uniforms per request instead (``route(..., u=...)``),
+    in which case the internal stream is never consumed.
     """
 
-    def __init__(self, cfg: EngineConfig, seed: int = 0, queue_cap: int = 4096):
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        seed: int = 0,
+        queue_cap: int = 4096,
+        rng: Optional[np.random.Generator] = None,
+    ):
         r, s = cfg.num_replicas, cfg.decode_slots
         self.cfg = cfg
         self._ccfg = cfg.comm_config()
@@ -97,7 +390,7 @@ class CareDispatcher:
         self.approx = np.zeros(r)  # emulated occupancy
         self.comm = comm_lib.CommState.init(r, xp=np)
         self.total_completions = 0
-        self.rng = np.random.default_rng(seed)
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
         # rid-indexed request metadata (grown on demand).
         self._work = np.zeros(1024, np.int64)
         self._started = np.full(1024, -1, np.int64)
@@ -126,12 +419,14 @@ class CareDispatcher:
             new[i, : self._q_len[i]] = self._q_rid[i, idx]
         self._q_rid, self._q_head, self._qcap = new, np.zeros(r, np.int64), 2 * self._qcap
 
-    def route(self, req: Request, now: int) -> int:
+    def route(self, req: Request, now: int, u: Optional[float] = None) -> int:
         if self.cfg.comm == "exact":
             occ = self.true_occupancy().astype(float)
         else:
             occ = self.approx
-        j = int(self.rng.choice(np.flatnonzero(occ == occ.min())))
+        if u is None:
+            u = self.rng.random(dtype=np.float32)
+        j = pick_min_tied(occ, u)
         if self._q_len[j] >= self._qcap:
             self._grow_queues()
         self._ensure_rid(req.rid)
@@ -203,40 +498,468 @@ def run_serving_sim(
     mean_prefill: int = 4,
     seed: int = 0,
     model_fn: Optional[Callable] = None,
+    workload: Optional[ServeWorkload] = None,
+    checkpoints: Sequence[int] = (),
 ) -> dict:
-    """Drive the engine with a Poisson-ish workload; return JCT metrics."""
-    rng = np.random.default_rng(seed)
+    """Drive the numpy engine with a pre-sampled workload; return metrics.
+
+    The workload (arrival counts, request sizes, tie-break uniforms) comes
+    from :func:`sample_workload` -- independent ``SeedSequence`` child
+    streams -- unless an explicit ``workload`` is given (the equivalence
+    tests feed the same object to both backends).  ``checkpoints`` lists
+    slot indices at which the exact per-replica occupancy is snapshotted
+    (``out["occupancy"][slot]``, captured at end of slot, matching the jax
+    engine's ``trace_occupancy`` rows).
+    """
+    if workload is None:
+        workload = sample_workload(
+            seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
+            slots=slots, load=load, mean_prefill=mean_prefill,
+            mean_decode=mean_decode,
+        )
     disp = CareDispatcher(cfg, seed)
-    # service capacity: num_replicas * decode_slots concurrent units, each
-    # request occupies a slot for (prefill + decode) iterations.
-    mean_work = mean_prefill + mean_decode
-    arrival_rate = load * cfg.num_replicas * cfg.decode_slots / mean_work
 
     finished: list[Request] = []
-    rid = 0
+    occupancy: dict[int, np.ndarray] = {}
+    want_ckpt = set(int(c) for c in checkpoints)
     for now in range(slots):
-        n_arr = rng.poisson(arrival_rate)
-        for _ in range(n_arr):
+        b = int(workload.base[now])
+        for i in range(int(workload.n_arr[now])):
+            rid = b + i
             req = Request(
                 rid=rid,
                 arrival=now,
-                prefill_cost=1 + rng.poisson(mean_prefill),
-                decode_len=1 + rng.poisson(mean_decode),
+                prefill_cost=int(workload.prefill[rid]),
+                decode_len=int(workload.decode[rid]),
             )
-            disp.route(req, now)
-            rid += 1
+            disp.route(req, now, u=float(workload.tie_u[rid]))
         finished.extend(disp.step(now))
+        if now in want_ckpt:
+            occupancy[now] = disp.true_occupancy().copy()
         if model_fn is not None:
             model_fn(now)
 
-    jct = np.array([r.finished - r.arrival + 1 for r in finished])
+    # JCT vector in rid (arrival) order so both backends emit the same
+    # vector -- the old engine returned completion order, which is a
+    # per-replica interleaving the batched scan has no business replaying.
+    jct_by_rid = np.full(workload.total, -1, np.int64)
+    for r in finished:
+        jct_by_rid[r.rid] = r.finished - r.arrival + 1
+    jct = jct_by_rid[jct_by_rid >= 0]
     base_msgs = max(disp.total_completions, 1)
     return {
         "jct": jct,
+        "jct_by_rid": jct_by_rid,
         "mean_jct": float(jct.mean()) if jct.size else 0.0,
         "p99_jct": float(np.percentile(jct, 99)) if jct.size else 0.0,
         "completed": len(finished),
-        "offered": rid,
+        "offered": workload.total,
         "messages": disp.messages,
         "msgs_per_completion": disp.messages / base_msgs,
+        "final_occupancy": disp.true_occupancy().copy(),
+        "occupancy": occupancy,
+        "requests": finished,
     }
+
+
+# ---------------------------------------------------------------------------
+# jax engine: the same dynamics as one jitted fixed-horizon lax.scan.
+# ---------------------------------------------------------------------------
+
+
+def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
+                static: EngineStatic):
+    """One serving run as a ``lax.scan`` over slots; traceable under vmap.
+
+    Inputs are the padded per-slot workload: ``n_arr (T,)`` arrival counts,
+    ``work``/``tie_u``/``rid`` ``(T, A)`` arrival-lane batches (lanes
+    ``>= n_arr[t]`` are masked no-ops, like slots ``>= horizon``).
+    ``n_cap`` (static) sizes the rid-indexed completion-slot carry.
+
+    The slot body mirrors :class:`CareDispatcher` operation for operation:
+    sequential within-slot routing (an inner scan over arrival lanes --
+    each routed arrival immediately bumps the occupancy the next one
+    sees), then admit -> decode -> MSR drain -> shared-core trigger.
+    Exactness notes: occupancies and drained approximations are dyadic
+    floats ``< 2**24`` for dyadic ``msr_drain``, so the f32 carry equals
+    the reference's f64; tie-break ranks are computed in f32 on both
+    sides (see :func:`pick_min_tied`).
+    """
+    r_n, s_n, c_n = static.replicas, static.decode_slots, static.queue_cap
+    a_n, t_n = work.shape[1], work.shape[0]
+    ccfg = comm_lib.CommConfig(kind=static.comm, x=scn.x,
+                               rt_period=scn.rt_period)
+    rep_idx = jnp.arange(r_n, dtype=jnp.int32)
+
+    def slot(carry, xs):
+        (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
+         comp_slot, total_comp, dropped) = carry
+        t, n_arr_t, work_t, tie_t, rid_t = xs
+        act = t < scn.horizon
+        # Decode-slot busy count is frozen during the arrival phase -- the
+        # dispatcher routes against the previous slot's replica state.
+        busy_cnt = (rem > 0).sum(axis=1).astype(jnp.int32)
+
+        # --- 1. route this slot's arrivals, sequentially (inner scan) ---
+        # The scan carries only the small (R,) routing state (each routed
+        # arrival immediately bumps the occupancy the next one sees); the
+        # ring writes are deferred and applied as one vectorised scatter
+        # below -- admitted lanes never collide (successive admits to the
+        # same replica take successive tails) and masked lanes are routed
+        # out of bounds and dropped.
+        def lane(lc, lx):
+            q_len, approx, dropped = lc
+            u, lane_i = lx
+            live = act & (lane_i < n_arr_t)
+            if static.comm == "exact":
+                occ = (q_len + busy_cnt).astype(jnp.float32)
+            else:
+                occ = approx
+            is_min = occ == jnp.min(occ)
+            n_ties = jnp.sum(is_min, dtype=jnp.int32)
+            rank = jnp.minimum(
+                (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
+                n_ties - 1,
+            )
+            cum = jnp.cumsum(is_min.astype(jnp.int32))
+            j = jnp.argmax(cum == rank + 1).astype(jnp.int32)
+            onehot = rep_idx == j
+            len_j = jnp.sum(jnp.where(onehot, q_len, 0))
+            # The numpy ring grows on demand; the traced ring is fixed, so
+            # a full ring drops the arrival (counted -- equivalence tests
+            # size queue_cap to keep this path cold).
+            admit = live & (len_j < c_n)
+            sel = onehot & admit
+            tail = (jnp.sum(jnp.where(onehot, q_head, 0)) + len_j) % c_n
+            q_len = q_len + sel.astype(jnp.int32)
+            approx = approx + sel.astype(jnp.float32)
+            dropped = dropped + (live & ~admit).astype(jnp.int32)
+            return (q_len, approx, dropped), (j, tail, admit)
+
+        lane_xs = (tie_t, jnp.arange(a_n, dtype=jnp.int32))
+        (q_len, approx, dropped), (jv, tailv, admitv) = jax.lax.scan(
+            lane, (q_len, approx, dropped), lane_xs
+        )
+        jv = jnp.where(admitv, jv, r_n)  # out of bounds -> dropped scatter
+        q_work = q_work.at[jv, tailv].set(work_t, mode="drop")
+        q_rid = q_rid.at[jv, tailv].set(rid_t, mode="drop")
+
+        # --- 2. admit: fill free decode slots from the rings, FIFO ------
+        free = rem <= 0
+        free_rank = jnp.cumsum(free, axis=1) - 1
+        n_admit = jnp.minimum(q_len, free.sum(axis=1, dtype=jnp.int32))
+        n_admit = jnp.where(act, n_admit, 0)
+        take = free & (free_rank < n_admit[:, None])
+        qidx = (q_head[:, None] + free_rank) % c_n
+        w_gather = jnp.take_along_axis(q_work, qidx, axis=1)
+        r_gather = jnp.take_along_axis(q_rid, qidx, axis=1)
+        rem = jnp.where(take, w_gather, rem)
+        arid = jnp.where(take, r_gather, arid)
+        q_head = (q_head + n_admit) % c_n
+        q_len = q_len - n_admit
+
+        # --- 3. decode: one iteration on every active slot --------------
+        active = (rem > 0) & act
+        rem = rem - active.astype(rem.dtype)
+        done = active & (rem == 0)
+        completions = done.sum(axis=1, dtype=jnp.int32)
+        comp_idx = jnp.where(done, arid, n_cap).reshape(-1)
+        comp_slot = comp_slot.at[comp_idx].max(
+            jnp.where(done, t, -1).reshape(-1).astype(jnp.int32),
+            mode="drop",
+        )
+        arid = jnp.where(done, -1, arid)
+        total_comp = total_comp + jnp.sum(completions, dtype=jnp.int32)
+
+        # --- 4. MSR drain ------------------------------------------------
+        busy = (approx > 0) & act
+        approx = jnp.maximum(
+            approx - scn.msr_drain * busy.astype(jnp.float32), 0.0
+        )
+
+        # --- 5. trigger (shared core) -- freeze counters past horizon ----
+        true_occ = (q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)).astype(
+            jnp.float32
+        )
+        err = jnp.abs(true_occ - approx)
+        trig, comm_adv = comm_lib.evaluate(comm_state, ccfg, err, completions)
+        trig = trig & act
+        comm_state = jax.tree.map(
+            lambda adv, old: jnp.where(act, adv, old), comm_adv, comm_state
+        )
+        approx = jnp.where(trig, true_occ, approx)
+
+        carry = (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
+                 comp_slot, total_comp, dropped)
+        out = true_occ.astype(jnp.int32) if static.trace_occupancy else None
+        return carry, out
+
+    init = (
+        jnp.zeros((r_n,), jnp.int32),  # q_len
+        jnp.zeros((r_n,), jnp.int32),  # q_head
+        jnp.zeros((r_n, c_n), jnp.int32),  # q_work ring
+        jnp.full((r_n, c_n), -1, jnp.int32),  # q_rid ring
+        jnp.zeros((r_n, s_n), jnp.int32),  # rem (decode slots)
+        jnp.full((r_n, s_n), -1, jnp.int32),  # arid
+        jnp.zeros((r_n,), jnp.float32),  # approx
+        comm_lib.CommState.init(r_n),
+        jnp.full((n_cap,), -1, jnp.int32),  # comp_slot (rid-indexed)
+        jnp.zeros((), jnp.int32),  # total completions
+        jnp.zeros((), jnp.int32),  # dropped
+    )
+    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid)
+    final, occ_trace = jax.lax.scan(slot, init, xs)
+    (q_len, _, _, _, rem, _, _, comm_state, comp_slot, total_comp,
+     dropped) = final
+    final_occ = q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)
+    outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ)
+    if static.trace_occupancy:
+        outs = outs + (occ_trace,)
+    return outs
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6))
+def _serve_one_jit(n_arr, work, tie_u, rid, scn, n_cap, static):
+    return _serve_core(n_arr, work, tie_u, rid, n_cap, scn, static)
+
+
+_SERVE_GRID_PROGRAMS: list = []  # jitted grid wrappers, one per (static, n_dev)
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
+    """The one compiled program for a serving grid: vmap inside shard_map.
+
+    Mirrors ``slotted_sim._grid_fn``: cached per (EngineStatic, rid
+    capacity, device count); ``n_dev == 1`` skips the mesh (plain jitted
+    vmap).  Re-invocations with a new batch length retrace -- counted by
+    :func:`serve_compile_count`.
+    """
+    batched = jax.vmap(
+        lambda n_arr, work, tie_u, rid, scn: _serve_core(
+            n_arr, work, tie_u, rid, n_cap, scn, static
+        )
+    )
+    if n_dev <= 1:
+        fn = jax.jit(batched)
+    else:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
+        spec = (P("runs"),) * 5
+        fn = jax.jit(
+            shard_map(batched, mesh=mesh, in_specs=spec, out_specs=P("runs"))
+        )
+    _SERVE_GRID_PROGRAMS.append(fn)
+    return fn
+
+
+def serve_compile_count() -> int:
+    """Total XLA programs compiled by the serving grid path so far.
+
+    Same accounting as ``slotted_sim.grid_compile_count``: sums the
+    compiled-shape cache sizes of every jitted grid wrapper, so batch-shape
+    retraces count as the real compile work they are.
+    """
+    return sum(
+        getattr(f, "_cache_size", lambda: 1)() for f in _SERVE_GRID_PROGRAMS
+    )
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One serving run's outputs (host-side numpy; jct in rid order)."""
+
+    jct: np.ndarray  # (completed,) completion times, rid (arrival) order
+    jct_by_rid: np.ndarray  # (offered,) -1 where never completed
+    completed: int
+    offered: int
+    messages: int
+    dropped: int  # arrivals rejected on a full pending ring (jax path only)
+    final_occupancy: np.ndarray  # (R,)
+    mean_jct: float
+    p99_jct: float
+    msgs_per_completion: float
+    occupancy: Optional[np.ndarray] = None  # (T, R) when trace_occupancy
+
+    @staticmethod
+    def from_run(wl: ServeWorkload, comp_slot, msgs, total_comp, dropped,
+                 final_occ, occ_trace=None) -> "ServeResult":
+        comp_slot = np.asarray(comp_slot)[: wl.total].astype(np.int64)
+        done = comp_slot >= 0
+        jct_by_rid = np.where(done, comp_slot - wl.arrival_slot + 1, -1)
+        jct = jct_by_rid[done]
+        completed = int(done.sum())
+        msgs = int(msgs)
+        return ServeResult(
+            jct=jct,
+            jct_by_rid=jct_by_rid,
+            completed=completed,
+            offered=wl.total,
+            messages=msgs,
+            dropped=int(dropped),
+            final_occupancy=np.asarray(final_occ),
+            mean_jct=float(jct.mean()) if jct.size else 0.0,
+            p99_jct=float(np.percentile(jct, 99)) if jct.size else 0.0,
+            msgs_per_completion=msgs / max(int(total_comp), 1),
+            occupancy=None if occ_trace is None else np.asarray(occ_trace),
+        )
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((max(n, 1) + mult - 1) // mult) * mult
+
+
+def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int):
+    """Pad one workload to the (T, A) lane grid the static program takes.
+
+    Fully vectorised (one fancy-indexed gather per array): this runs per
+    (cell, seed) on every ``serve_grid`` invocation, including the warm
+    replays benchmarks time, so a Python per-slot loop would bill host
+    padding to the measured steady-state throughput.
+    """
+    t = wl.n_arr.shape[0]
+    n_arr = np.zeros(t_pad, np.int32)
+    n_arr[:t] = wl.n_arr
+    work = np.zeros((t_pad, a_pad), np.int32)
+    tie_u = np.zeros((t_pad, a_pad), np.float32)
+    rid = np.zeros((t_pad, a_pad), np.int32)
+    if wl.total:
+        lane = np.arange(a_pad, dtype=np.int64)[None, :]
+        mask = lane < wl.n_arr[:, None]  # (t, a_pad) live lanes
+        idx = np.minimum(wl.base[:, None] + lane, wl.total - 1)
+        work[:t] = np.where(mask, wl.work[idx], 0)
+        tie_u[:t] = np.where(mask, wl.tie_u[idx], 0.0)
+        rid[:t] = np.where(mask, idx, 0)
+    return n_arr, work, tie_u, rid
+
+
+def serve_grid(
+    seeds: Sequence[int],
+    static: EngineStatic,
+    cells: Sequence[ServeConfig],
+    *,
+    shard: bool = True,
+) -> list[list[ServeResult]]:
+    """Run a whole serving grid as **one compiled program**.
+
+    Args:
+      seeds: integer seeds; every cell replays the same seed set (the
+        workload sampler is host-side numpy, keyed per (cell workload
+        parameters, seed) -- cells differing only in comm thresholds share
+        streams, the paper's comparison method).
+      static: the shared program structure.  Every cell's
+        ``static_part()`` must agree with it on shapes and comm kind;
+        ``static.slots`` is the padded scan length (>= every cell's
+        ``slots``) and ``static.max_arrivals`` the arrival-lane width
+        (``0`` = derive from the sampled batch, rounded up to a multiple
+        of 8 so near-miss batches reuse the program).
+      cells: the grid cells (scenario operands + workload parameters).
+      shard: shard the flattened ``(C*S,)`` run axis across local devices
+        with ``shard_map`` (ragged batches padded with wrap-around
+        duplicates, dropped on output).
+
+    Returns:
+      ``results[c][s]`` -- one :class:`ServeResult` per (cell, seed),
+      bit-identical to the numpy reference ``run_serving_sim`` (asserted
+      by ``tests/test_serve_engine.py``).
+    """
+    from repro.core.care.slotted_sim import _pad_indices
+
+    cells = list(cells)
+    seeds = [int(s) for s in seeds]
+    for cell in cells:
+        cs = cell.static_part()
+        if (cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm) != (
+            static.replicas, static.decode_slots, static.queue_cap,
+            static.comm,
+        ):
+            raise ValueError(
+                f"cell static part {cs} does not match grid static {static}"
+            )
+        if cell.slots > static.slots:
+            raise ValueError(
+                f"cell slots {cell.slots} exceeds padded length {static.slots}"
+            )
+
+    wls = [[workload_for(cell, s) for s in seeds] for cell in cells]
+    flat_wls = [w for row in wls for w in row]
+    a_need = max(int(w.n_arr.max()) for w in flat_wls)
+    a_pad = _round_up(a_need, 8)
+    if static.max_arrivals:
+        if static.max_arrivals < a_need:
+            raise ValueError(
+                f"static.max_arrivals={static.max_arrivals} below the "
+                f"sampled batch maximum {a_need}"
+            )
+        a_pad = static.max_arrivals
+    static = dataclasses.replace(static, max_arrivals=a_pad)
+    n_cap = _round_up(max(w.total for w in flat_wls), 1024)
+
+    padded = [_pad_workload(w, static.slots, a_pad) for w in flat_wls]
+    n_arr = jnp.asarray(np.stack([p[0] for p in padded]))
+    work = jnp.asarray(np.stack([p[1] for p in padded]))
+    tie_u = jnp.asarray(np.stack([p[2] for p in padded]))
+    rid = jnp.asarray(np.stack([p[3] for p in padded]))
+    scn_flat = stack_scenarios(
+        [cell.scenario() for cell in cells for _ in seeds]
+    )
+
+    n = len(flat_wls)
+    n_dev = jax.local_device_count() if shard else 1
+    idx = _pad_indices(n, n_dev)
+    if len(idx) != n:
+        n_arr, work, tie_u, rid = (
+            a[idx] for a in (n_arr, work, tie_u, rid)
+        )
+        scn_flat = jax.tree.map(lambda a: a[idx], scn_flat)
+
+    out = _serve_grid_fn(static, n_cap, n_dev)(n_arr, work, tie_u, rid,
+                                               scn_flat)
+    out_np = [np.asarray(o)[:n] for o in out]
+    s = len(seeds)
+    return [
+        [
+            ServeResult.from_run(
+                wls[c][j], *(o[c * s + j] for o in out_np)
+            )
+            for j in range(s)
+        ]
+        for c in range(len(cells))
+    ]
+
+
+def serve_one(seed: int, cell: ServeConfig, *,
+              trace_occupancy: bool = False) -> ServeResult:
+    """Run one serving cell on the jax engine (its own compiled program).
+
+    The single-run analogue of :func:`serve_grid` -- used by the
+    equivalence tests as the per-cell reference the fused grid must
+    reproduce (padding the arrival lanes or the rid capacity differently
+    must not change results).
+    """
+    wl = workload_for(cell, seed)
+    a_need = max(int(wl.n_arr.max()), 1)
+    if cell.max_arrivals:
+        if cell.max_arrivals < a_need:
+            raise ValueError(
+                f"max_arrivals={cell.max_arrivals} below the sampled "
+                f"per-slot maximum {a_need}"
+            )
+        a_pad = cell.max_arrivals  # pinned by the caller: reuse its shape
+    else:
+        a_pad = _round_up(a_need, 8)
+    static = dataclasses.replace(
+        cell.static_part(),
+        max_arrivals=a_pad,
+        trace_occupancy=trace_occupancy,
+    )
+    n_cap = _round_up(wl.total, 1024)
+    n_arr, work, tie_u, rid = _pad_workload(wl, static.slots,
+                                            static.max_arrivals)
+    out = _serve_one_jit(
+        jnp.asarray(n_arr), jnp.asarray(work), jnp.asarray(tie_u),
+        jnp.asarray(rid), cell.scenario(), n_cap, static,
+    )
+    return ServeResult.from_run(wl, *(np.asarray(o) for o in out))

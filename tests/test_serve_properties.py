@@ -1,0 +1,134 @@
+"""Hypothesis property tests for serving-engine invariants.
+
+The numpy reference engine (:class:`repro.serve.engine.CareDispatcher`) is
+stepped slot by slot under randomly drawn configurations and workloads --
+the jax engine is bit-identical to it (tests/test_serve_engine.py), so
+invariants proved here transfer to the traced path.  Checked:
+
+* **Conservation at every slot**: offered == completed + queued +
+  in-flight, after each engine step.
+* **JCT floor**: a request occupies a decode slot for one iteration per
+  unit of work, so ``jct >= max(prefill + decode, 1)``.
+* **Exact-state accounting** (Prop 6.1): under ``exact`` the message count
+  equals the completion count at every slot -- in particular messages
+  never exceed completions.
+* **Post-trigger ET-x error bound** (Prop 6.8 restated for the serving
+  tier): at every slot end the occupancy approximation error is < x
+  (and <= x-1 when ``msr_drain`` keeps the approximation integral) --
+  ET fires the same slot the error reaches x and the message snaps the
+  approximation to the truth.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serve import engine  # noqa: E402
+
+
+@st.composite
+def serving_runs(draw, comms=("exact", "et", "dt", "rt", "et_rt")):
+    comm = draw(st.sampled_from(comms))
+    cfg = engine.EngineConfig(
+        num_replicas=draw(st.integers(1, 6)),
+        decode_slots=draw(st.integers(1, 4)),
+        comm=comm,
+        et_x=draw(st.integers(1, 6)),
+        dt_x=draw(st.integers(1, 6)),
+        rt_period=draw(st.integers(1, 24)),
+        msr_drain=draw(st.sampled_from([1.0, 0.5, 2.0])),
+    )
+    slots = draw(st.integers(30, 120))
+    load = draw(st.floats(0.3, 1.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return cfg, slots, load, seed
+
+
+def _replay(cfg, slots, load, seed, per_slot_check):
+    """Drive the dispatcher slot by slot, calling the invariant hook."""
+    wl = engine.sample_workload(
+        seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
+        slots=slots, load=load, mean_prefill=2, mean_decode=6,
+    )
+    disp = engine.CareDispatcher(cfg, seed)
+    finished = []
+    offered = 0
+    for now in range(slots):
+        b = int(wl.base[now])
+        for i in range(int(wl.n_arr[now])):
+            rid = b + i
+            disp.route(
+                engine.Request(
+                    rid=rid, arrival=now,
+                    prefill_cost=int(wl.prefill[rid]),
+                    decode_len=int(wl.decode[rid]),
+                ),
+                now, u=float(wl.tie_u[rid]),
+            )
+            offered += 1
+        finished.extend(disp.step(now))
+        per_slot_check(disp, offered, finished, now)
+    return disp, wl, finished
+
+
+class TestConservation:
+    @settings(max_examples=25, deadline=None)
+    @given(serving_runs())
+    def test_offered_equals_completed_plus_in_system(self, run):
+        cfg, slots, load, seed = run
+
+        def check(disp, offered, finished, now):
+            in_system = int(disp.true_occupancy().sum())
+            assert offered == len(finished) + in_system
+
+        _replay(cfg, slots, load, seed, check)
+
+
+class TestJctFloor:
+    @settings(max_examples=25, deadline=None)
+    @given(serving_runs())
+    def test_jct_at_least_prefill_plus_decode(self, run):
+        cfg, slots, load, seed = run
+        _, _, finished = _replay(cfg, slots, load, seed,
+                                 lambda *a: None)
+        for req in finished:
+            jct = req.finished - req.arrival + 1
+            assert jct >= max(req.prefill_cost + req.decode_len, 1)
+            assert req.started >= req.arrival
+
+
+class TestExactAccounting:
+    @settings(max_examples=25, deadline=None)
+    @given(serving_runs(comms=("exact",)))
+    def test_messages_track_completions(self, run):
+        cfg, slots, load, seed = run
+
+        def check(disp, offered, finished, now):
+            # Prop 6.1: one message per departure -- never more messages
+            # than completions, and exactly one each.
+            assert disp.messages <= disp.total_completions
+            assert disp.messages == disp.total_completions
+
+        _replay(cfg, slots, load, seed, check)
+
+
+class TestEtErrorBound:
+    @settings(max_examples=25, deadline=None)
+    @given(serving_runs(comms=("et", "et_rt")))
+    def test_post_trigger_error_below_x(self, run):
+        cfg, slots, load, seed = run
+        x = cfg.et_x
+        integral = float(cfg.msr_drain).is_integer()
+
+        def check(disp, offered, finished, now):
+            err = np.abs(disp.true_occupancy() - disp.approx)
+            # ET fires the slot the error reaches x and snaps to truth, so
+            # the end-of-slot error stays strictly below x...
+            assert float(err.max()) < x
+            # ...and below x-1 whenever the approximation stays integral
+            # (the discrete analogue of AQ <= x-1, Prop 6.8).
+            if integral:
+                assert float(err.max()) <= x - 1
+
+        _replay(cfg, slots, load, seed, check)
