@@ -1,11 +1,20 @@
 """Serving-tier CARE: request dispatch across replica groups (paper Fig 3,
 restated for continuous-batching inference).
 
-Requests are jobs, replica groups are servers; the dispatcher routes by
-JSAQ over CARE-approximated occupancy and replicas send corrections through
-the shared trigger core.  Compared regimes per load: exact state (1 message
+Requests are jobs, replica groups are servers; the dispatcher routes over
+CARE-approximated occupancy and replicas send corrections through the
+shared trigger core.  Compared regimes per load: exact state (1 message
 per completion), ET-4, DT-4, RT-16, plus the ET-x frontier (x = 2/8/16)
 showing the JCT/communication trade.
+
+The **policy x comm frontier** (``serve/policy/*`` rows) measures the
+paper's composition claim -- sparse-communication state approximation
+works under *any* queue-driven routing rule -- across the full routing
+suite (JSAQ / SQ(2) / round robin / drain-time-aware JSAQ) x (exact /
+ET-4 / DT-4 / RT-16), each under uniform and 2:1 heterogeneous replica
+speeds.  Rate profiles are traced ``EngineScenario`` operands, so the 32
+frontier cells compile one program per (policy, comm) kind pair --
+O(#kinds), recorded by ``serve/policy_frontier/compile_count``.
 
 Execution model (post jax port): each load's whole regime ladder is
 submitted as fused grids through ``common.timed_serve_grid`` -- cells are
@@ -34,6 +43,17 @@ from repro.serve import engine
 
 LOADS = (0.7, 0.9)
 ET_FRONTIER = (2, 8, 16)
+
+# The routing-policy frontier: every policy x comm kind, under uniform and
+# 2:1 heterogeneous decode rates (half the replicas double speed; explicit
+# all-ones rates keep the uniform control in the *same* compiled program,
+# since only the presence of rates is structural).
+POLICIES = ("jsaq", "sqd", "rr", "drain")
+MATRIX_COMMS = ("exact", "et", "dt", "rt")
+RATE_PROFILES = (
+    ("uniform", (1.0,) * 8),
+    ("hetero21", (2.0,) * 4 + (1.0,) * 4),
+)
 
 # The MSR drain must emulate the *nominal* per-replica completion rate --
 # decode_slots / mean_work = 16/64 = 0.25 completions/slot/busy replica
@@ -116,6 +136,87 @@ def run(quick: bool = False) -> list[dict]:
                 ),
             )
         )
+
+    # --- policy x comm frontier (uniform + 2:1 heterogeneous speeds) ----
+    # queue_cap 4096: rate-blind RR leaves the slow half of a hetero21
+    # cell individually unstable, so its backlog grows ~0.09/slot -- the
+    # default 512-entry traced ring would fill before the full-mode
+    # 20000-slot horizon and the dropped arrivals would void the
+    # bit-identity guard (the numpy reference ring grows on demand).
+    named_matrix = [
+        (policy, comm, pname,
+         _cell(0.9, slots, comm=comm, x=4.0, policy=policy,
+               decode_rates=rates, queue_cap=4096))
+        for policy in POLICIES
+        for comm in MATRIX_COMMS
+        for pname, rates in RATE_PROFILES
+    ]
+    progs_before = engine.serve_compile_count()
+    m_results, m_walls = common.timed_serve_grid(
+        [c for *_, c in named_matrix], seeds
+    )
+    frontier_programs = engine.serve_compile_count() - progs_before
+    no_drops &= all(r.dropped == 0 for row in m_results for r in row)
+    frontier: dict = {}
+    for (policy, comm, pname, _), per_seed, wall in zip(
+        named_matrix, m_results, m_walls
+    ):
+        mean_jct = _mean([r.mean_jct for r in per_seed])
+        mpc = _mean([r.msgs_per_completion for r in per_seed])
+        frontier[(policy, comm, pname)] = (mean_jct, mpc)
+        rows.append(
+            common.row(
+                f"serve/policy/{policy}/{comm}/{pname}",
+                wall,
+                slots,
+                common.fmt_derived(
+                    mean_jct=mean_jct,
+                    p99_jct=_mean([r.p99_jct for r in per_seed]),
+                    msgs_per_completion=mpc,
+                    completed=int(np.sum([r.completed for r in per_seed])),
+                    seeds=len(seeds),
+                ),
+                mean_jct=mean_jct,
+                msgs_per_completion=mpc,
+            )
+        )
+    # Headline: under 2:1 speeds the rate-aware policies hold the exact
+    # JCT at a fraction of the messages, while rate-blind round robin
+    # collapses -- per profile, everything relative to jsaq at ET-4.
+    for pname, _ in RATE_PROFILES:
+        jsaq_jct, jsaq_mpc = frontier[("jsaq", "et", pname)]
+        rows.append(
+            common.row(
+                f"serve/policy_frontier/{pname}",
+                0.0,
+                slots,
+                common.fmt_derived(
+                    drain_jct_vs_jsaq=frontier[("drain", "et", pname)][0]
+                    / max(jsaq_jct, 1e-9),
+                    rr_jct_vs_jsaq=frontier[("rr", "et", pname)][0]
+                    / max(jsaq_jct, 1e-9),
+                    sqd_jct_vs_jsaq=frontier[("sqd", "et", pname)][0]
+                    / max(jsaq_jct, 1e-9),
+                    et_mpc_vs_exact=jsaq_mpc
+                    / max(frontier[("jsaq", "exact", pname)][1], 1e-9),
+                ),
+            )
+        )
+    rows.append(
+        common.row(
+            "serve/policy_frontier/compile_count",
+            0.0,
+            slots,
+            common.fmt_derived(
+                programs=frontier_programs,
+                cells=len(named_matrix),
+                kind_pairs=len(POLICIES) * len(MATRIX_COMMS),
+                fused=frontier_programs <= len(POLICIES) * len(MATRIX_COMMS),
+            ),
+            programs=frontier_programs,
+            fused=frontier_programs <= len(POLICIES) * len(MATRIX_COMMS),
+        )
+    )
 
     # Steady-state wall: replay both ladders on the *same* seeds (identical
     # workloads, so every compiled program is reused at its exact shape) --
@@ -216,7 +317,9 @@ def run(quick: bool = False) -> list[dict]:
                 programs=engine.serve_compile_count(),
                 loads=len(LOADS),
                 kinds=4,
-                cells=len(_ladder(LOADS[0], slots)) * len(LOADS) + 1,
+                policy_kind_pairs=len(POLICIES) * len(MATRIX_COMMS),
+                cells=len(_ladder(LOADS[0], slots)) * len(LOADS)
+                + len(named_matrix) + 1,
             ),
             programs=engine.serve_compile_count(),
         )

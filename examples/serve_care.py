@@ -16,10 +16,16 @@ Two parts:
    ladder (exact / ET-x / DT-x / RT-r) as *fused grids* -- one compiled
    program per comm kind, thresholds traced -- and compares dispatchers
    on job completion time and messages per completion (paper Figs 8-12 at
-   the systems tier).  The numpy ``CareDispatcher`` remains the pluggable
-   path (hook a real ``decode_step`` closure via ``model_fn``) and the
-   golden reference: one cell is re-run through it here and checked
-   bit-identical to the fused grid.
+   the systems tier).  The routing-policy suite rides the same grids:
+   SQ(2) and round robin under ET, and drain-time-aware JSAQ under 2:1
+   heterogeneous replica speeds.  The rate profile is a traced operand:
+   the uniform RR control passes explicit all-ones rates, so it shares
+   one compiled program with the 2:1 RR cell (only the *presence* of
+   rates is structural).
+   The numpy ``CareDispatcher`` remains the pluggable path (hook a real
+   ``decode_step`` closure via ``model_fn``) and the golden reference:
+   one cell is re-run through it here and checked bit-identical to the
+   fused grid.
 
 Usage:
   PYTHONPATH=src python examples/serve_care.py
@@ -70,12 +76,29 @@ def dispatch_comparison(slots: int, load: float):
     # f32 traced engine is bit-identical to the f64 numpy reference).
     work = dict(slots=slots, load=load, mean_prefill=4, mean_decode=60,
                 msr_drain=0.25)
+    hetero = (2.0, 2.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0)  # 2:1 speeds
     named = [
         ("exact", ServeConfig(comm="exact", **work)),
         ("ET-4 (CARE)", ServeConfig(comm="et", x=4, **work)),
         ("ET-8 (CARE)", ServeConfig(comm="et", x=8, **work)),
         ("DT-4", ServeConfig(comm="dt", x=4, **work)),
         ("RT-16", ServeConfig(comm="rt", rt_period=16, **work)),
+        # The policy suite composes with the same ET trigger: SQ(2) and
+        # round robin over CARE state, and the drain-time-aware router
+        # under 2:1 heterogeneous replica speeds (RR is rate-blind and
+        # pays for it; drain/JSAQ hold the exact-state JCT).  The uniform
+        # RR control carries explicit all-ones rates so the 2:1 cell
+        # shares its compiled program (rates are traced operands).
+        ("ET-4 SQ(2)", ServeConfig(comm="et", x=4, policy="sqd", **work)),
+        ("ET-4 RR",
+         ServeConfig(comm="et", x=4, policy="rr",
+                     decode_rates=(1.0,) * 8, **work)),
+        ("ET-4 RR 2:1",
+         ServeConfig(comm="et", x=4, policy="rr", decode_rates=hetero,
+                     **work)),
+        ("ET-4 drain 2:1",
+         ServeConfig(comm="et", x=4, policy="drain", decode_rates=hetero,
+                     **work)),
     ]
     groups: dict = {}
     for i, (_, cell) in enumerate(named):

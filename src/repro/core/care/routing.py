@@ -18,6 +18,21 @@ import jax.numpy as jnp
 PolicyKind = Literal["jsq", "jsaq", "sq2", "sqd", "rr", "random"]
 
 
+def expected_drain_slots(mean_size, rates):
+    """Expected per-job drain time ``E[S] / r_i`` in slots, shape ``(K,)``.
+
+    The drain-time-aware score of the shortest-queue family is
+    ``q_i * expected_drain_slots(mean, rates)[i]`` -- a queue of 4 at a
+    double-speed server beats a queue of 3 at a half-speed one.  The single
+    implementation both tiers consume: the slotted simulator precomputes it
+    once per run from traced ``Scenario`` operands, and the serving engine
+    (jax scan *and* numpy ``CareDispatcher``) from ``decode_rates``.  Both
+    operands must be float32 so the two serving backends produce the same
+    IEEE quotient bit for bit.
+    """
+    return mean_size / rates
+
+
 def argmin_random_ties(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
     """Index of the minimum of ``q``; ties broken uniformly at random."""
     is_min = q == jnp.min(q)

@@ -432,8 +432,14 @@ def _sim_core(
     if static.use_rates:
         rates = scn.service_rates
         # Expected per-job drain time E[S]/r_i in slots, precomputed once
-        # outside the scan: both the mean and the rates are traced.
-        drain_slots = scn.service.mean / rates if static.rate_aware else None
+        # outside the scan: both the mean and the rates are traced.  The
+        # formula lives in routing.py so the serving tier's drain-time
+        # policy cannot drift from this one.
+        drain_slots = (
+            routing_lib.expected_drain_slots(scn.service.mean, rates)
+            if static.rate_aware
+            else None
+        )
     else:
         rates = None
         drain_slots = None

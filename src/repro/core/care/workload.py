@@ -265,11 +265,14 @@ def mmpp_arrivals_from_rates(
     return arrive
 
 
-def service_units(slot_idx: jnp.ndarray, rates: jnp.ndarray) -> jnp.ndarray:
+def service_units(slot_idx, rates, xp=jnp):
     """Work units each server completes in slot ``slot_idx`` (credit schedule).
 
     Deterministic in the slot index: ``floor((t+1) r) - floor(t r)``.  The
-    long-run average is exactly ``r`` units/slot per server.
+    long-run average is exactly ``r`` units/slot per server.  ``xp`` selects
+    the array namespace: ``jnp`` (default) inside traced scan bodies, ``np``
+    from the serving tier's host-side reference loop -- the schedule is pure
+    float32 arithmetic on both, so the two backends mirror it bit for bit.
     """
-    t = slot_idx.astype(jnp.float32)
-    return (jnp.floor((t + 1.0) * rates) - jnp.floor(t * rates)).astype(jnp.int32)
+    t = xp.asarray(slot_idx).astype(xp.float32)
+    return (xp.floor((t + 1.0) * rates) - xp.floor(t * rates)).astype(xp.int32)

@@ -38,32 +38,85 @@ Two interchangeable execution paths share one workload and one semantics:
   wrap-around padding -- which is what scales the replica step past 1k
   replicas (``bench_serving``'s ``serve/replicas1024`` row).
 
+The routing-policy axis (PR 5) lifts the hard-coded JSAQ into a static
+``policy`` kind -- ``jsaq`` / ``sqd`` (SQ(d)) / ``rr`` (round robin) /
+``drain`` (drain-time-aware JSAQ under heterogeneous per-replica
+``decode_rates``) -- selected at trace time like the comm kind, so the
+full (policy x comm) matrix of the paper's composition claim runs on both
+backends.  The rates themselves are traced :class:`EngineScenario`
+operands (a heterogeneous-speed ladder shares one compiled program);
+replicas decode by the deterministic credit schedule of
+:func:`repro.core.care.workload.service_units` and the drain-time score
+reuses :func:`repro.core.care.routing.expected_drain_slots`, both shared
+with the slotted tier.
+
 Bit-identical equivalence is by construction: the workload (per-slot
-arrival counts, per-request prefill/decode sizes, routing tie-break
-uniforms) is pre-sampled host-side by :func:`sample_workload` into a
-:class:`ServeWorkload` both paths consume.  Arrival lanes are padded to
-``EngineStatic.max_arrivals`` with an active mask (exactly like the padded
-horizon), tie-break uniforms are float32 so the f32 traced path and the
-f64 host path truncate to the same rank, and every float the engine
-carries (the MSR-drained occupancy approximation) stays on dyadic values
-``< 2**24`` for the default drains, so float32 and float64 agree exactly.
+arrival counts, per-request prefill/decode sizes, routing tie-break and
+SQ(d) subset uniforms) is pre-sampled host-side by :func:`sample_workload`
+into a :class:`ServeWorkload` both paths consume.  Arrival lanes are
+padded to ``EngineStatic.max_arrivals`` with an active mask (exactly like
+the padded horizon), tie-break/subset uniforms are float32 so both
+backends truncate to the same ranks, and the emulated occupancy is
+carried in float32 on *both* backends (the reference dispatcher switched
+from float64 in PR 5 -- exact for the historical dyadic drains), so every
+drain and score product is the same IEEE single-precision op and the
+guarantee covers non-dyadic ``decode_rates`` too.
 
 RNG streams (re-keyed in PR 4): the workload stream and the dispatcher's
 tie-break stream are split with ``np.random.SeedSequence(seed).spawn(2)``
 so arrival randomness and routing randomness are independent -- the old
-engine seeded both from ``default_rng(seed)``, correlating them.
+engine seeded both from ``default_rng(seed)``, correlating them.  PR 5
+appends a third child stream for the SQ(d) subset uniforms;
+``SeedSequence`` spawning is prefix-stable, so the first two streams (and
+every pre-PR 5 golden) are unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Callable, Literal, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.care import comm as comm_lib
+from repro.core.care import routing as routing_lib
+from repro.core.care import workload as workload_lib
+
+# The serving tier's routing-policy suite (paper Sec 2.1.4 restated for
+# continuous batching).  All policies consume the same state vector JSAQ
+# does -- the dispatcher's approximated occupancy, or the true occupancy
+# under comm="exact" -- so the policy axis composes with every comm kind:
+#
+# * ``jsaq``  -- join the shortest (approximated) queue (the default).
+# * ``sqd``   -- SQ(d): sample ``sqd`` distinct replicas from pre-drawn
+#   uniforms, join the shortest among them.
+# * ``rr``    -- round robin, deterministic cyclic assignment.
+# * ``drain`` -- drain-time-aware JSAQ: minimise the expected drain time
+#   ``occ_i * E[S] / r_i`` (``routing.expected_drain_slots``) under
+#   heterogeneous per-replica ``decode_rates``; reduces to JSAQ when the
+#   rates are uniform (scaling by one positive constant is
+#   argmin-invariant, with an identical f32 tie set).
+ServePolicy = Literal["jsaq", "sqd", "rr", "drain"]
+
+# Pre-drawn subset-uniform lane width of ServeWorkload.sub_u: SQ(d) cells
+# need d <= SQD_MAX.  Fixed so cells differing only in policy / d share
+# one workload stream (the paper's comparison method).
+SQD_MAX = 8
+
+
+def mean_decode_rate(decode_rates: Optional[Sequence[float]]) -> float:
+    """Mean per-replica decode rate: the capacity multiplier of a profile.
+
+    The single implementation behind every workload-stream key
+    (:meth:`ServeConfig.workload_key`, :func:`run_serving_sim`, tests):
+    the cached stream is keyed on this value, so all consumers must derive
+    it identically or the two backends would sample different workloads.
+    """
+    if decode_rates is None:
+        return 1.0
+    return float(np.mean(np.asarray(decode_rates, np.float64)))
 
 
 @dataclasses.dataclass
@@ -85,6 +138,15 @@ class EngineConfig:
     dt_x: int = 4
     rt_period: int = 16
     msr_drain: float = 1.0  # emulated completions per slot per busy replica
+    policy: ServePolicy = "jsaq"
+    sqd: int = 2  # subset size of the "sqd" policy
+    # Per-replica decode speeds in work units per decode iteration; None =
+    # homogeneous unit rates.  Realised by the deterministic credit
+    # schedule of workload.service_units, mirrored by the MSR drain.
+    decode_rates: Optional[Tuple[float, ...]] = None
+    # Mean request work components; the "drain" policy's E[S] term.
+    mean_prefill: float = 4.0
+    mean_decode: float = 64.0
 
     def comm_config(self) -> comm_lib.CommConfig:
         """This tier's trigger parameters in shared-core terms."""
@@ -132,21 +194,49 @@ class ServeConfig:
     mean_prefill: int = 4
     mean_decode: int = 64
     queue_cap: int = 512  # per-replica pending ring capacity (jax path)
+    policy: ServePolicy = "jsaq"
+    sqd: int = 2  # subset size of the "sqd" policy (static; <= SQD_MAX)
+    # Per-replica decode speeds (hashable tuple; length == replicas).  None
+    # = homogeneous unit rates.  The rates are *traced* EngineScenario
+    # operands (a heterogeneous-speed ladder shares one compiled program);
+    # only their presence is structural (EngineStatic.use_rates).
+    decode_rates: Optional[Tuple[float, ...]] = None
     max_slots: Optional[int] = None  # padded scan length (>= slots)
     # Padded arrival-lane width; 0 = derive from the sampled batch.  Pin it
     # (e.g. to the maximum over every seed set a benchmark will submit) so
     # repeat invocations reuse one compiled shape.
     max_arrivals: int = 0
 
+    def rate_scale(self) -> float:
+        """Mean decode rate: the capacity multiplier of heterogeneity."""
+        return mean_decode_rate(self.decode_rates)
+
     def arrival_rate(self) -> float:
         """Offered per-slot arrival rate: load x service capacity."""
         mean_work = self.mean_prefill + self.mean_decode
-        return self.load * self.replicas * self.decode_slots / mean_work
+        return (
+            self.load * self.replicas * self.decode_slots
+            * self.rate_scale() / mean_work
+        )
 
     def static_part(self) -> "EngineStatic":
         if self.max_slots is not None and self.max_slots < self.slots:
             raise ValueError(
                 f"max_slots ({self.max_slots}) must be >= slots ({self.slots})"
+            )
+        if self.policy == "sqd" and not 1 <= self.sqd <= min(
+            self.replicas, SQD_MAX
+        ):
+            raise ValueError(
+                f"sqd ({self.sqd}) must be in [1, min(replicas, {SQD_MAX})]"
+            )
+        if (
+            self.decode_rates is not None
+            and len(self.decode_rates) != self.replicas
+        ):
+            raise ValueError(
+                f"decode_rates has {len(self.decode_rates)} entries for "
+                f"{self.replicas} replicas"
             )
         return EngineStatic(
             replicas=self.replicas,
@@ -154,6 +244,12 @@ class ServeConfig:
             queue_cap=self.queue_cap,
             slots=self.max_slots if self.max_slots is not None else self.slots,
             comm=self.comm,
+            policy=self.policy,
+            # Only the "sqd" policy reads the subset size; normalise it to
+            # 0 otherwise so cells differing in the unused knob share one
+            # compiled program instead of fragmenting the grid.
+            sqd=self.sqd if self.policy == "sqd" else 0,
+            use_rates=self.decode_rates is not None,
             max_arrivals=self.max_arrivals,
         )
 
@@ -166,6 +262,8 @@ class ServeConfig:
             mean_prefill=self.mean_prefill,
             mean_decode=self.mean_decode,
             horizon=self.slots,
+            replicas=self.replicas,
+            decode_rates=self.decode_rates,
         )
 
     def engine_config(self) -> EngineConfig:
@@ -178,13 +276,25 @@ class ServeConfig:
             dt_x=int(self.x) if float(self.x).is_integer() else self.x,
             rt_period=self.rt_period,
             msr_drain=self.msr_drain,
+            policy=self.policy,
+            sqd=self.sqd,
+            decode_rates=self.decode_rates,
+            mean_prefill=float(self.mean_prefill),
+            mean_decode=float(self.mean_decode),
         )
 
     def workload_key(self) -> tuple:
-        """The sampler's parameter tuple: cells sharing it share a stream."""
+        """The sampler's parameter tuple: cells sharing it share a stream.
+
+        Keyed on the *mean* decode rate (the capacity multiplier), not the
+        rate profile: a 2:1 ladder and its uniform control with the same
+        mean replay one stream, and all-ones rates share the
+        ``decode_rates=None`` stream -- routing/policy parameters never
+        enter (the paper's comparison method).
+        """
         return (
             self.replicas, self.decode_slots, self.slots, self.load,
-            self.mean_prefill, self.mean_decode,
+            self.mean_prefill, self.mean_decode, self.rate_scale(),
         )
 
 
@@ -198,9 +308,12 @@ class EngineStatic:
     count are masked no-ops).  ``max_arrivals=0`` means "derive from the
     sampled workload" -- :func:`serve_grid` replaces it with the batch
     maximum, rounded up so near-miss batches reuse a compiled program.
-    ``trace_occupancy`` additionally emits the end-of-slot per-replica
-    occupancy trace (tests / checkpoint fingerprints only -- it makes the
-    program output O(slots x replicas)).
+    ``policy`` / ``sqd`` select the routing code path at trace time (like
+    the comm kind); ``use_rates`` switches the decode step and MSR drain
+    to the heterogeneous credit schedule (the rates themselves are traced
+    :class:`EngineScenario` operands).  ``trace_occupancy`` additionally
+    emits the end-of-slot per-replica occupancy trace (tests / checkpoint
+    fingerprints only -- it makes the program output O(slots x replicas)).
     """
 
     replicas: int = 8
@@ -208,6 +321,9 @@ class EngineStatic:
     queue_cap: int = 512
     slots: int = 20_000
     comm: str = "et"
+    policy: ServePolicy = "jsaq"
+    sqd: int = 2
+    use_rates: bool = False
     max_arrivals: int = 0
     trace_occupancy: bool = False
 
@@ -217,19 +333,21 @@ class EngineStatic:
 class EngineScenario:
     """Traced scenario operands of one serving cell (a registered pytree).
 
-    ``x`` / ``rt_period`` / ``msr_drain`` / ``horizon`` are consumed by the
-    scan as array operands, so cells sweeping them share one compiled
-    program.  ``load`` / ``mean_prefill`` / ``mean_decode`` ride along for
-    reporting only -- the workload they parameterise is sampled host-side
-    (:func:`sample_workload`) from the cell's exact Python floats.
+    ``x`` / ``rt_period`` / ``msr_drain`` / ``decode_rates`` / ``horizon``
+    are consumed by the scan as array operands, so cells sweeping them
+    share one compiled program -- in particular a heterogeneous-speed
+    ladder compiles once.  ``load`` rides along for reporting only;
+    ``mean_prefill`` / ``mean_decode`` parameterise the host-side workload
+    sampler *and* feed the ``drain`` policy's E[S] term.
     """
 
     load: jnp.ndarray  # () f32 (reporting)
     x: jnp.ndarray  # () f32 ET/DT threshold
     rt_period: jnp.ndarray  # () i32 RT period in slots
     msr_drain: jnp.ndarray  # () f32 emulated completions/slot/busy replica
-    mean_prefill: jnp.ndarray  # () f32 (reporting)
-    mean_decode: jnp.ndarray  # () f32 (reporting)
+    mean_prefill: jnp.ndarray  # () f32 (drain policy E[S] term)
+    mean_decode: jnp.ndarray  # () f32 (drain policy E[S] term)
+    decode_rates: jnp.ndarray  # (R,) f32 per-replica speeds (ones if unused)
     horizon: jnp.ndarray  # () i32 effective slots (<= EngineStatic.slots)
 
     @staticmethod
@@ -241,9 +359,16 @@ class EngineScenario:
         mean_prefill: float = 4,
         mean_decode: float = 64,
         horizon: Optional[int] = None,
+        replicas: int = 8,
+        decode_rates: Optional[Sequence[float]] = None,
     ) -> "EngineScenario":
         if horizon is None:
             horizon = np.iinfo(np.int32).max
+        rates = (
+            jnp.ones((replicas,), jnp.float32)
+            if decode_rates is None
+            else jnp.asarray(decode_rates, jnp.float32)
+        )
         return EngineScenario(
             load=jnp.float32(load),
             x=jnp.float32(x),
@@ -251,6 +376,7 @@ class EngineScenario:
             msr_drain=jnp.float32(msr_drain),
             mean_prefill=jnp.float32(mean_prefill),
             mean_decode=jnp.float32(mean_decode),
+            decode_rates=rates,
             horizon=jnp.int32(horizon),
         )
 
@@ -274,6 +400,9 @@ class ServeWorkload:
     construction.  ``tie_u`` is float32 *at the source*: both backends
     compute the tie-break rank as ``int(f32(u) * f32(n_ties))``, so the
     f32 traced path cannot round differently from the host path.
+    ``sub_u`` carries SQ(d)'s per-request subset uniforms (a third
+    independent ``SeedSequence`` child) -- also float32 at the source, fed
+    to the shared :func:`subset_mask` derivation on both backends.
     """
 
     n_arr: np.ndarray  # (T,) int64 arrivals per slot
@@ -282,6 +411,7 @@ class ServeWorkload:
     decode: np.ndarray  # (N,) int64 per-request decode length (>= 1)
     work: np.ndarray  # (N,) int64 total slot occupancy, max(p + d, 1)
     tie_u: np.ndarray  # (N,) float32 routing tie-break uniforms
+    sub_u: np.ndarray  # (N, SQD_MAX) float32 SQ(d) subset uniforms
     arrival_slot: np.ndarray  # (N,) int64
 
     @property
@@ -298,39 +428,47 @@ def sample_workload(
     load: float,
     mean_prefill: float = 4,
     mean_decode: float = 64,
+    rate_scale: float = 1.0,
 ) -> ServeWorkload:
     """Draw the replayable serving workload for one (parameters, seed).
 
-    Streams are split with ``SeedSequence.spawn``: arrivals/sizes and
-    routing tie-breaks come from independent child streams, so changing
-    the tie-break consumption (e.g. comparing comm kinds, which route
+    Streams are split with ``SeedSequence.spawn``: arrivals/sizes, routing
+    tie-breaks and SQ(d) subset draws come from independent child streams,
+    so changing one consumption (e.g. comparing policies, which route
     differently) can never perturb the offered workload and vice versa.
+    ``rate_scale`` is the mean per-replica decode rate -- heterogeneous
+    ``decode_rates`` scale the offered capacity without re-keying the
+    tie-break or subset streams.
     """
-    w_ss, r_ss = np.random.SeedSequence(int(seed)).spawn(2)
+    w_ss, r_ss, s_ss = np.random.SeedSequence(int(seed)).spawn(3)
     wrng = np.random.default_rng(w_ss)
     rrng = np.random.default_rng(r_ss)
+    srng = np.random.default_rng(s_ss)
     mean_work = mean_prefill + mean_decode
-    rate = load * replicas * decode_slots / mean_work
+    rate = load * replicas * decode_slots * rate_scale / mean_work
     n_arr = wrng.poisson(rate, size=slots).astype(np.int64)
     total = int(n_arr.sum())
     prefill = 1 + wrng.poisson(mean_prefill, size=total).astype(np.int64)
     decode = 1 + wrng.poisson(mean_decode, size=total).astype(np.int64)
     work = np.maximum(prefill + decode, 1)
     tie_u = rrng.random(size=total, dtype=np.float32)
+    sub_u = srng.random(size=(total, SQD_MAX), dtype=np.float32)
     base = np.concatenate([[0], np.cumsum(n_arr)[:-1]]).astype(np.int64)
     arrival_slot = np.repeat(np.arange(slots, dtype=np.int64), n_arr)
     return ServeWorkload(
         n_arr=n_arr, base=base, prefill=prefill, decode=decode,
-        work=work, tie_u=tie_u, arrival_slot=arrival_slot,
+        work=work, tie_u=tie_u, sub_u=sub_u, arrival_slot=arrival_slot,
     )
 
 
 @functools.lru_cache(maxsize=512)
 def _cached_workload(key: tuple, seed: int) -> ServeWorkload:
-    replicas, decode_slots, slots, load, mean_prefill, mean_decode = key
+    (replicas, decode_slots, slots, load, mean_prefill, mean_decode,
+     rate_scale) = key
     return sample_workload(
         seed, replicas=replicas, decode_slots=decode_slots, slots=slots,
         load=load, mean_prefill=mean_prefill, mean_decode=mean_decode,
+        rate_scale=rate_scale,
     )
 
 
@@ -341,16 +479,55 @@ def workload_for(cell: ServeConfig, seed: int) -> ServeWorkload:
     return _cached_workload(cell.workload_key(), int(seed))
 
 
-def pick_min_tied(occ: np.ndarray, u: float) -> int:
+def pick_min_tied(
+    occ: np.ndarray, u: float, mask: Optional[np.ndarray] = None
+) -> int:
     """Index of the minimum of ``occ``; ties broken by the uniform ``u``.
 
     The rank is computed in float32 (``int(f32(u) * f32(n_ties))``) so the
     traced f32 engine reproduces the choice bit for bit; ``u`` must come
     from a float32 draw (``ServeWorkload.tie_u``) for that guarantee.
+
+    ``mask`` (optional, bool ``(R,)``) restricts the minimum to a candidate
+    subset -- the SQ(d) path: non-candidates are lifted to ``+inf`` before
+    the argmin, exactly as the traced lane does, so the tie set (and hence
+    the rank arithmetic) is identical on both backends.  A single candidate
+    is returned regardless of ``u``; an all-False mask returns ``-1`` (the
+    engine never routes with an empty subset -- ``sqd >= 1``).
     """
+    if mask is not None:
+        if not mask.any():
+            return -1
+        occ = np.where(mask, occ, np.inf)
     ties = np.flatnonzero(occ == occ.min())
     rank = min(int(np.float32(u) * np.float32(len(ties))), len(ties) - 1)
     return int(ties[rank])
+
+
+def subset_mask(u_row, n: int, d: int, xp=np):
+    """SQ(d) candidate mask: ``d`` distinct of ``n`` replicas from uniforms.
+
+    A partial Fisher-Yates draw consuming ``u_row[:d]`` (float32, from
+    ``ServeWorkload.sub_u``): step ``i`` picks the ``k``-th of the ``n-i``
+    still-available replicas with ``k = min(int(f32(u_i) * f32(n-i)),
+    n-i-1)`` -- uniform over d-subsets, and pure float32/int32 arithmetic
+    on either array namespace (``xp=np`` in the reference dispatcher,
+    ``xp=jnp`` inside the traced lane), so both backends derive the *same*
+    subset from the same pre-drawn row, bit for bit.
+    """
+    avail = xp.ones((n,), bool)
+    mask = xp.zeros((n,), bool)
+    for i in range(d):
+        m = n - i  # Python int: the loop is unrolled at trace time
+        u = xp.float32(u_row[i]) if xp is np else u_row[i]
+        k = xp.minimum(
+            (u * xp.float32(m)).astype(xp.int32), xp.int32(m - 1)
+        )
+        cum = xp.cumsum(avail.astype(xp.int32))
+        pick = avail & (cum == k + 1)  # one-hot: k-th available replica
+        mask = mask | pick
+        avail = avail & ~pick
+    return mask
 
 
 # ---------------------------------------------------------------------------
@@ -359,16 +536,24 @@ def pick_min_tied(occ: np.ndarray, u: float) -> int:
 
 
 class CareDispatcher:
-    """JSAQ over approximated occupancy + shared-core correction triggers.
+    """Policy routing over approximated occupancy + shared-core triggers.
 
     All per-replica state is vectorised numpy: ``active_rem``/``active_rid``
-    hold the decode slots (0 remaining == free), ``_q_rid``/``_q_head``/
+    hold the decode slots (<= 0 remaining == free), ``_q_rid``/``_q_head``/
     ``_q_len`` are per-replica FIFO rings of pending request ids, and the
     trigger bookkeeping is a :class:`repro.core.care.comm.CommState`.
 
-    ``rng`` (optional) injects the tie-break stream; :func:`run_serving_sim`
-    passes pre-drawn uniforms per request instead (``route(..., u=...)``),
-    in which case the internal stream is never consumed.
+    ``cfg.policy`` selects the routing rule (see :data:`ServePolicy`); every
+    policy consumes the same state vector JSAQ does -- the emulated
+    occupancy, or the true occupancy under ``comm="exact"``.  The emulated
+    occupancy is carried in **float32** (like the traced engine), so the
+    bit-identity guarantee extends to non-dyadic drains and decode rates:
+    both backends execute the same IEEE single-precision operations.
+
+    ``rng`` (optional) injects the tie-break/subset streams;
+    :func:`run_serving_sim` passes pre-drawn uniforms per request instead
+    (``route(..., u=..., sub_u=...)``), in which case the internal stream
+    is never consumed.
     """
 
     def __init__(
@@ -379,6 +564,22 @@ class CareDispatcher:
         rng: Optional[np.random.Generator] = None,
     ):
         r, s = cfg.num_replicas, cfg.decode_slots
+        if cfg.policy == "sqd" and not 1 <= cfg.sqd <= min(r, SQD_MAX):
+            # Mirrors ServeConfig.static_part(): the pre-drawn sub_u rows
+            # (and the rng fallback) carry SQD_MAX lanes, and a subset
+            # larger than the replica set cannot be distinct.
+            raise ValueError(
+                f"sqd ({cfg.sqd}) must be in [1, min(num_replicas, "
+                f"{SQD_MAX})]"
+            )
+        if (
+            cfg.decode_rates is not None
+            and len(cfg.decode_rates) != r
+        ):
+            raise ValueError(
+                f"decode_rates has {len(cfg.decode_rates)} entries for "
+                f"{r} replicas"
+            )
         self.cfg = cfg
         self._ccfg = cfg.comm_config()
         self.active_rem = np.zeros((r, s), np.int64)
@@ -387,10 +588,28 @@ class CareDispatcher:
         self._q_rid = np.full((r, queue_cap), -1, np.int64)
         self._q_head = np.zeros(r, np.int64)
         self._q_len = np.zeros(r, np.int64)
-        self.approx = np.zeros(r)  # emulated occupancy
+        self.approx = np.zeros(r, np.float32)  # emulated occupancy (f32)
         self.comm = comm_lib.CommState.init(r, xp=np)
         self.total_completions = 0
         self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self._rr_ptr = 0  # round-robin pointer ("rr" policy)
+        self.last_subset: Optional[np.ndarray] = None  # "sqd" diagnostics
+        # Heterogeneous decode rates: None = unit rates (the historical
+        # integer fast path).  The f32 vectors mirror the traced operands
+        # exactly -- same IEEE products in the MSR drain and drain score.
+        if cfg.decode_rates is None:
+            self._rates = None
+            self._drainv = np.float32(cfg.msr_drain) * np.ones(r, np.float32)
+        else:
+            self._rates = np.asarray(cfg.decode_rates, np.float32)
+            self._drainv = np.float32(cfg.msr_drain) * self._rates
+        rates_f32 = (
+            np.ones(r, np.float32) if self._rates is None else self._rates
+        )
+        self._drain_slots = routing_lib.expected_drain_slots(
+            np.float32(cfg.mean_prefill) + np.float32(cfg.mean_decode),
+            rates_f32,
+        )
         # rid-indexed request metadata (grown on demand).
         self._work = np.zeros(1024, np.int64)
         self._started = np.full(1024, -1, np.int64)
@@ -419,14 +638,35 @@ class CareDispatcher:
             new[i, : self._q_len[i]] = self._q_rid[i, idx]
         self._q_rid, self._q_head, self._qcap = new, np.zeros(r, np.int64), 2 * self._qcap
 
-    def route(self, req: Request, now: int, u: Optional[float] = None) -> int:
-        if self.cfg.comm == "exact":
-            occ = self.true_occupancy().astype(float)
+    def route(
+        self,
+        req: Request,
+        now: int,
+        u: Optional[float] = None,
+        sub_u: Optional[np.ndarray] = None,
+    ) -> int:
+        cfg = self.cfg
+        if cfg.comm == "exact":
+            occ = self.true_occupancy().astype(np.float32)
         else:
             occ = self.approx
-        if u is None:
-            u = self.rng.random(dtype=np.float32)
-        j = pick_min_tied(occ, u)
+        self.last_subset = None
+        if cfg.policy == "rr":
+            j = self._rr_ptr % cfg.num_replicas
+            self._rr_ptr += 1
+        else:
+            if u is None:
+                u = self.rng.random(dtype=np.float32)
+            if cfg.policy == "sqd":
+                if sub_u is None:
+                    sub_u = self.rng.random(size=SQD_MAX, dtype=np.float32)
+                mask = subset_mask(sub_u, cfg.num_replicas, cfg.sqd, xp=np)
+                self.last_subset = mask
+                j = pick_min_tied(occ, u, mask=mask)
+            elif cfg.policy == "drain":
+                j = pick_min_tied(occ * self._drain_slots, u)
+            else:  # jsaq
+                j = pick_min_tied(occ, u)
         if self._q_len[j] >= self._qcap:
             self._grow_queues()
         self._ensure_rid(req.rid)
@@ -460,10 +700,18 @@ class CareDispatcher:
             self._q_head = (self._q_head + n_admit) % self._qcap
             self._q_len = self._q_len - n_admit
 
-        # 2. service: one decode iteration on every active slot.
+        # 2. service: one decode iteration on every active slot -- one work
+        # unit at unit rates, or the slot's credit-schedule units under
+        # heterogeneous decode_rates (shared with the slotted tier's
+        # workload.service_units; a finishing unit beyond the remaining
+        # work is forfeit, so rem may go negative == free).
         active = self.active_rem > 0
-        self.active_rem = self.active_rem - active
-        done = active & (self.active_rem == 0)
+        if self._rates is None:
+            self.active_rem = self.active_rem - active
+        else:
+            units = workload_lib.service_units(now, self._rates, xp=np)
+            self.active_rem = self.active_rem - units[:, None] * active
+        done = active & (self.active_rem <= 0)
         completions = done.sum(axis=1)
         finished: list[Request] = []
         if done.any():
@@ -475,12 +723,15 @@ class CareDispatcher:
             self.active_rid[done] = -1
         self.total_completions += int(completions.sum())
 
-        # 3. MSR drain: emulate service at the nominal completion rate.
+        # 3. MSR drain: emulate service at the nominal completion rate,
+        # scaled per replica by its decode rate (f32, like the traced path).
         busy = self.approx > 0
-        self.approx = np.maximum(self.approx - cfg.msr_drain * busy, 0.0)
+        self.approx = np.maximum(
+            self.approx - self._drainv * busy, np.float32(0.0)
+        )
 
         # 4. trigger (replicas mirror the emulation exactly) -- shared core.
-        true_occ = self.true_occupancy().astype(float)
+        true_occ = self.true_occupancy().astype(np.float32)
         err = np.abs(true_occ - self.approx)
         trig, self.comm = comm_lib.evaluate(
             self.comm, self._ccfg, err, completions, xp=np
@@ -512,11 +763,20 @@ def run_serving_sim(
     engine's ``trace_occupancy`` rows).
     """
     if workload is None:
+        rate_scale = mean_decode_rate(cfg.decode_rates)
         workload = sample_workload(
             seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
             slots=slots, load=load, mean_prefill=mean_prefill,
-            mean_decode=mean_decode,
+            mean_decode=mean_decode, rate_scale=rate_scale,
         )
+    # One source of truth for E[S]: the drain policy's score must use the
+    # same mean work the workload was sampled with, or the two backends
+    # would scale occupancies by different f32 drain_slots vectors.
+    # (ServeConfig.engine_config() already passes equal values, making
+    # this a no-op on the grid path.)
+    cfg = dataclasses.replace(
+        cfg, mean_prefill=float(mean_prefill), mean_decode=float(mean_decode)
+    )
     disp = CareDispatcher(cfg, seed)
 
     finished: list[Request] = []
@@ -532,7 +792,10 @@ def run_serving_sim(
                 prefill_cost=int(workload.prefill[rid]),
                 decode_len=int(workload.decode[rid]),
             )
-            disp.route(req, now, u=float(workload.tie_u[rid]))
+            disp.route(
+                req, now, u=float(workload.tie_u[rid]),
+                sub_u=workload.sub_u[rid],
+            )
         finished.extend(disp.step(now))
         if now in want_ckpt:
             occupancy[now] = disp.true_occupancy().copy()
@@ -567,34 +830,48 @@ def run_serving_sim(
 # ---------------------------------------------------------------------------
 
 
-def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
+def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
                 static: EngineStatic):
     """One serving run as a ``lax.scan`` over slots; traceable under vmap.
 
     Inputs are the padded per-slot workload: ``n_arr (T,)`` arrival counts,
     ``work``/``tie_u``/``rid`` ``(T, A)`` arrival-lane batches (lanes
-    ``>= n_arr[t]`` are masked no-ops, like slots ``>= horizon``).
-    ``n_cap`` (static) sizes the rid-indexed completion-slot carry.
+    ``>= n_arr[t]`` are masked no-ops, like slots ``>= horizon``), and
+    ``sub_u (T, A, D)`` the SQ(d) subset uniforms (``D = sqd`` under the
+    "sqd" policy, else 0 -- the lanes exist but carry nothing).  ``n_cap``
+    (static) sizes the rid-indexed completion-slot carry.
 
     The slot body mirrors :class:`CareDispatcher` operation for operation:
     sequential within-slot routing (an inner scan over arrival lanes --
     each routed arrival immediately bumps the occupancy the next one
     sees), then admit -> decode -> MSR drain -> shared-core trigger.
-    Exactness notes: occupancies and drained approximations are dyadic
-    floats ``< 2**24`` for dyadic ``msr_drain``, so the f32 carry equals
-    the reference's f64; tie-break ranks are computed in f32 on both
-    sides (see :func:`pick_min_tied`).
+    ``static.policy`` picks the route step at trace time; the drain-time
+    score and heterogeneous decode/drain rates consume the traced
+    ``scn.decode_rates`` operand, so a rate ladder shares one program.
+    Exactness notes: the reference dispatcher carries its approximation in
+    float32 too, so every drain/score product is the same IEEE single op
+    on both backends (dyadic or not); decode credits are integers from the
+    shared ``workload.service_units`` schedule; tie-break and subset ranks
+    are computed in f32 on both sides (:func:`pick_min_tied` /
+    :func:`subset_mask`).
     """
     r_n, s_n, c_n = static.replicas, static.decode_slots, static.queue_cap
     a_n, t_n = work.shape[1], work.shape[0]
     ccfg = comm_lib.CommConfig(kind=static.comm, x=scn.x,
                                rt_period=scn.rt_period)
     rep_idx = jnp.arange(r_n, dtype=jnp.int32)
+    # Per-replica emulated drain; msr_drain * 1.0 is exact, so the unused
+    # operand cannot perturb the homogeneous path.
+    drainv = scn.msr_drain * scn.decode_rates
+    if static.policy == "drain":
+        drain_slots = routing_lib.expected_drain_slots(
+            scn.mean_prefill + scn.mean_decode, scn.decode_rates
+        )
 
     def slot(carry, xs):
         (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-         comp_slot, total_comp, dropped) = carry
-        t, n_arr_t, work_t, tie_t, rid_t = xs
+         rr_ptr, comp_slot, total_comp, dropped) = carry
+        t, n_arr_t, work_t, tie_t, rid_t, sub_t = xs
         act = t < scn.horizon
         # Decode-slot busy count is frozen during the arrival phase -- the
         # dispatcher routes against the previous slot's replica state.
@@ -608,21 +885,35 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
         # same replica take successive tails) and masked lanes are routed
         # out of bounds and dropped.
         def lane(lc, lx):
-            q_len, approx, dropped = lc
-            u, lane_i = lx
+            q_len, approx, rr_ptr, dropped = lc
+            u, sub_l, lane_i = lx
             live = act & (lane_i < n_arr_t)
             if static.comm == "exact":
                 occ = (q_len + busy_cnt).astype(jnp.float32)
             else:
                 occ = approx
-            is_min = occ == jnp.min(occ)
-            n_ties = jnp.sum(is_min, dtype=jnp.int32)
-            rank = jnp.minimum(
-                (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
-                n_ties - 1,
-            )
-            cum = jnp.cumsum(is_min.astype(jnp.int32))
-            j = jnp.argmax(cum == rank + 1).astype(jnp.int32)
+            if static.policy == "rr":
+                # Deterministic cyclic assignment; the pointer advances
+                # only on live lanes (the reference routes only actual
+                # arrivals).
+                j = (rr_ptr % r_n).astype(jnp.int32)
+                rr_ptr = rr_ptr + live.astype(jnp.int32)
+            else:
+                if static.policy == "drain":
+                    score = occ * drain_slots
+                else:
+                    score = occ
+                if static.policy == "sqd":
+                    cand = subset_mask(sub_l, r_n, static.sqd, xp=jnp)
+                    score = jnp.where(cand, score, jnp.inf)
+                is_min = score == jnp.min(score)
+                n_ties = jnp.sum(is_min, dtype=jnp.int32)
+                rank = jnp.minimum(
+                    (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
+                    n_ties - 1,
+                )
+                cum = jnp.cumsum(is_min.astype(jnp.int32))
+                j = jnp.argmax(cum == rank + 1).astype(jnp.int32)
             onehot = rep_idx == j
             len_j = jnp.sum(jnp.where(onehot, q_len, 0))
             # The numpy ring grows on demand; the traced ring is fixed, so
@@ -634,11 +925,11 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
             q_len = q_len + sel.astype(jnp.int32)
             approx = approx + sel.astype(jnp.float32)
             dropped = dropped + (live & ~admit).astype(jnp.int32)
-            return (q_len, approx, dropped), (j, tail, admit)
+            return (q_len, approx, rr_ptr, dropped), (j, tail, admit)
 
-        lane_xs = (tie_t, jnp.arange(a_n, dtype=jnp.int32))
-        (q_len, approx, dropped), (jv, tailv, admitv) = jax.lax.scan(
-            lane, (q_len, approx, dropped), lane_xs
+        lane_xs = (tie_t, sub_t, jnp.arange(a_n, dtype=jnp.int32))
+        (q_len, approx, rr_ptr, dropped), (jv, tailv, admitv) = jax.lax.scan(
+            lane, (q_len, approx, rr_ptr, dropped), lane_xs
         )
         jv = jnp.where(admitv, jv, r_n)  # out of bounds -> dropped scatter
         q_work = q_work.at[jv, tailv].set(work_t, mode="drop")
@@ -659,9 +950,16 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
         q_len = q_len - n_admit
 
         # --- 3. decode: one iteration on every active slot --------------
+        # Unit rates decrement by one; heterogeneous rates by the slot's
+        # credit-schedule units (rem may go negative == free, matching the
+        # reference).
         active = (rem > 0) & act
-        rem = rem - active.astype(rem.dtype)
-        done = active & (rem == 0)
+        if static.use_rates:
+            units = workload_lib.service_units(t, scn.decode_rates)
+            rem = rem - units[:, None] * active.astype(rem.dtype)
+        else:
+            rem = rem - active.astype(rem.dtype)
+        done = active & (rem <= 0)
         completions = done.sum(axis=1, dtype=jnp.int32)
         comp_idx = jnp.where(done, arid, n_cap).reshape(-1)
         comp_slot = comp_slot.at[comp_idx].max(
@@ -671,10 +969,10 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
         arid = jnp.where(done, -1, arid)
         total_comp = total_comp + jnp.sum(completions, dtype=jnp.int32)
 
-        # --- 4. MSR drain ------------------------------------------------
+        # --- 4. MSR drain (per-replica, decode-rate scaled) --------------
         busy = (approx > 0) & act
         approx = jnp.maximum(
-            approx - scn.msr_drain * busy.astype(jnp.float32), 0.0
+            approx - drainv * busy.astype(jnp.float32), 0.0
         )
 
         # --- 5. trigger (shared core) -- freeze counters past horizon ----
@@ -690,7 +988,7 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
         approx = jnp.where(trig, true_occ, approx)
 
         carry = (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-                 comp_slot, total_comp, dropped)
+                 rr_ptr, comp_slot, total_comp, dropped)
         out = true_occ.astype(jnp.int32) if static.trace_occupancy else None
         return carry, out
 
@@ -703,13 +1001,14 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
         jnp.full((r_n, s_n), -1, jnp.int32),  # arid
         jnp.zeros((r_n,), jnp.float32),  # approx
         comm_lib.CommState.init(r_n),
+        jnp.zeros((), jnp.int32),  # rr_ptr ("rr" policy)
         jnp.full((n_cap,), -1, jnp.int32),  # comp_slot (rid-indexed)
         jnp.zeros((), jnp.int32),  # total completions
         jnp.zeros((), jnp.int32),  # dropped
     )
-    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid)
+    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid, sub_u)
     final, occ_trace = jax.lax.scan(slot, init, xs)
-    (q_len, _, _, _, rem, _, _, comm_state, comp_slot, total_comp,
+    (q_len, _, _, _, rem, _, _, comm_state, _, comp_slot, total_comp,
      dropped) = final
     final_occ = q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)
     outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ)
@@ -718,9 +1017,9 @@ def _serve_core(n_arr, work, tie_u, rid, n_cap, scn: EngineScenario,
     return outs
 
 
-@functools.partial(jax.jit, static_argnums=(5, 6))
-def _serve_one_jit(n_arr, work, tie_u, rid, scn, n_cap, static):
-    return _serve_core(n_arr, work, tie_u, rid, n_cap, scn, static)
+@functools.partial(jax.jit, static_argnums=(6, 7))
+def _serve_one_jit(n_arr, work, tie_u, rid, sub_u, scn, n_cap, static):
+    return _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn, static)
 
 
 _SERVE_GRID_PROGRAMS: list = []  # jitted grid wrappers, one per (static, n_dev)
@@ -736,8 +1035,8 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
     :func:`serve_compile_count`.
     """
     batched = jax.vmap(
-        lambda n_arr, work, tie_u, rid, scn: _serve_core(
-            n_arr, work, tie_u, rid, n_cap, scn, static
+        lambda n_arr, work, tie_u, rid, sub_u, scn: _serve_core(
+            n_arr, work, tie_u, rid, sub_u, n_cap, scn, static
         )
     )
     if n_dev <= 1:
@@ -747,7 +1046,7 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
         from jax.sharding import Mesh, PartitionSpec as P
 
         mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
-        spec = (P("runs"),) * 5
+        spec = (P("runs"),) * 6
         fn = jax.jit(
             shard_map(batched, mesh=mesh, in_specs=spec, out_specs=P("runs"))
         )
@@ -811,9 +1110,12 @@ def _round_up(n: int, mult: int) -> int:
     return ((max(n, 1) + mult - 1) // mult) * mult
 
 
-def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int):
+def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0):
     """Pad one workload to the (T, A) lane grid the static program takes.
 
+    ``d`` is the subset-uniform lane depth: ``sqd`` under the "sqd" policy
+    (the first ``d`` ``sub_u`` columns ride along as a ``(T, A, d)``
+    operand), 0 otherwise (a zero-width array -- no memory, no transfer).
     Fully vectorised (one fancy-indexed gather per array): this runs per
     (cell, seed) on every ``serve_grid`` invocation, including the warm
     replays benchmarks time, so a Python per-slot loop would bill host
@@ -825,6 +1127,7 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int):
     work = np.zeros((t_pad, a_pad), np.int32)
     tie_u = np.zeros((t_pad, a_pad), np.float32)
     rid = np.zeros((t_pad, a_pad), np.int32)
+    sub_u = np.zeros((t_pad, a_pad, d), np.float32)
     if wl.total:
         lane = np.arange(a_pad, dtype=np.int64)[None, :]
         mask = lane < wl.n_arr[:, None]  # (t, a_pad) live lanes
@@ -832,7 +1135,11 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int):
         work[:t] = np.where(mask, wl.work[idx], 0)
         tie_u[:t] = np.where(mask, wl.tie_u[idx], 0.0)
         rid[:t] = np.where(mask, idx, 0)
-    return n_arr, work, tie_u, rid
+        if d:
+            sub_u[:t] = np.where(
+                mask[..., None], wl.sub_u[idx, :d], 0.0
+            )
+    return n_arr, work, tie_u, rid, sub_u
 
 
 def serve_grid(
@@ -871,9 +1178,12 @@ def serve_grid(
     seeds = [int(s) for s in seeds]
     for cell in cells:
         cs = cell.static_part()
-        if (cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm) != (
+        if (
+            cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm,
+            cs.policy, cs.sqd, cs.use_rates,
+        ) != (
             static.replicas, static.decode_slots, static.queue_cap,
-            static.comm,
+            static.comm, static.policy, static.sqd, static.use_rates,
         ):
             raise ValueError(
                 f"cell static part {cs} does not match grid static {static}"
@@ -896,12 +1206,14 @@ def serve_grid(
         a_pad = static.max_arrivals
     static = dataclasses.replace(static, max_arrivals=a_pad)
     n_cap = _round_up(max(w.total for w in flat_wls), 1024)
+    d = static.sqd if static.policy == "sqd" else 0
 
-    padded = [_pad_workload(w, static.slots, a_pad) for w in flat_wls]
+    padded = [_pad_workload(w, static.slots, a_pad, d) for w in flat_wls]
     n_arr = jnp.asarray(np.stack([p[0] for p in padded]))
     work = jnp.asarray(np.stack([p[1] for p in padded]))
     tie_u = jnp.asarray(np.stack([p[2] for p in padded]))
     rid = jnp.asarray(np.stack([p[3] for p in padded]))
+    sub_u = jnp.asarray(np.stack([p[4] for p in padded]))
     scn_flat = stack_scenarios(
         [cell.scenario() for cell in cells for _ in seeds]
     )
@@ -910,13 +1222,13 @@ def serve_grid(
     n_dev = jax.local_device_count() if shard else 1
     idx = _pad_indices(n, n_dev)
     if len(idx) != n:
-        n_arr, work, tie_u, rid = (
-            a[idx] for a in (n_arr, work, tie_u, rid)
+        n_arr, work, tie_u, rid, sub_u = (
+            a[idx] for a in (n_arr, work, tie_u, rid, sub_u)
         )
         scn_flat = jax.tree.map(lambda a: a[idx], scn_flat)
 
     out = _serve_grid_fn(static, n_cap, n_dev)(n_arr, work, tie_u, rid,
-                                               scn_flat)
+                                               sub_u, scn_flat)
     out_np = [np.asarray(o)[:n] for o in out]
     s = len(seeds)
     return [
@@ -956,10 +1268,12 @@ def serve_one(seed: int, cell: ServeConfig, *,
         trace_occupancy=trace_occupancy,
     )
     n_cap = _round_up(wl.total, 1024)
-    n_arr, work, tie_u, rid = _pad_workload(wl, static.slots,
-                                            static.max_arrivals)
+    d = static.sqd if static.policy == "sqd" else 0
+    n_arr, work, tie_u, rid, sub_u = _pad_workload(
+        wl, static.slots, static.max_arrivals, d
+    )
     out = _serve_one_jit(
         jnp.asarray(n_arr), jnp.asarray(work), jnp.asarray(tie_u),
-        jnp.asarray(rid), cell.scenario(), n_cap, static,
+        jnp.asarray(rid), jnp.asarray(sub_u), cell.scenario(), n_cap, static,
     )
     return ServeResult.from_run(wl, *(np.asarray(o) for o in out))

@@ -21,6 +21,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.care import approx as approx_lib
 
+# Hypothesis-heavy: part of the full suite, skipped by the fast tier-1
+# gate (pytest -m "not slow").
+pytestmark = pytest.mark.slow
+
 
 def _replay(arrivals, services, x, kind, comm, msr_slots=4):
     """Replay a single-server sample path through the emulation machinery.

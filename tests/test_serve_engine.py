@@ -17,15 +17,26 @@ change the physics:
   cell x seed, shard_map padding, padded horizon + arrival lanes) must
   reproduce per-cell ``serve_one`` runs exactly; padding is
   semantics-preserving by construction and asserted here.
+* **Policy x comm matrix** -- every (policy in {jsaq, sqd, rr, drain}) x
+  (comm in {exact, et, dt, rt}) cell has a numpy golden and a
+  jax-vs-numpy bit-identity assertion, including 2:1 heterogeneous
+  ``decode_rates`` and a non-dyadic rate profile (both backends carry the
+  emulation in float32, so the IEEE ops match exactly); plus unit tests
+  for the masked ``pick_min_tied`` and the shared ``subset_mask``
+  derivation the SQ(d) path rides on.
 """
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.serve import engine
 
 KINDS = ["exact", "et", "dt", "rt", "et_rt"]
+POLICIES = ["jsaq", "sqd", "rr", "drain"]
+MATRIX_KINDS = ["exact", "et", "dt", "rt"]  # the policy x comm test matrix
+HETERO_21 = (2.0, 2.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0)  # 2:1 replica speeds
 
 
 def small_cell(comm: str, **kw) -> engine.ServeConfig:
@@ -126,6 +137,147 @@ class TestNumpyGolden:
         np.testing.assert_array_equal(wa.n_arr, wb.n_arr)
 
 
+# Fingerprints of the numpy engine at seed 7 per (policy, comm) cell of
+# the routing-policy matrix (small_cell(comm, policy=policy)):
+# (offered, completed, messages, jct_sum, final_occupancy_sum).  Captured
+# at the PR that lifted the policy axis into the serving tier.  Structural
+# sanity is baked in: "rr" rows share one JCT trajectory across comm kinds
+# (round robin never reads the state the comm axis approximates) and
+# "drain" rows equal "jsaq" rows exactly (uniform rates -- the drain score
+# is an argmin-invariant scaling).
+POLICY_GOLDEN = {
+    ("jsaq", "exact"): (3247, 3168, 3168, 108767, 79),
+    ("jsaq", "et"): (3247, 3166, 4245, 112641, 81),
+    ("jsaq", "dt"): (3247, 3158, 1024, 129408, 89),
+    ("jsaq", "rt"): (3247, 3156, 496, 128238, 91),
+    ("sqd", "exact"): (3247, 3163, 3163, 121102, 84),
+    ("sqd", "et"): (3247, 3162, 4225, 122015, 85),
+    ("sqd", "dt"): (3247, 3151, 1020, 139920, 96),
+    ("sqd", "rt"): (3247, 3148, 496, 142961, 99),
+    ("rr", "exact"): (3247, 3161, 3161, 120303, 86),
+    ("rr", "et"): (3247, 3161, 4233, 120303, 86),
+    ("rr", "dt"): (3247, 3161, 1025, 120303, 86),
+    ("rr", "rt"): (3247, 3161, 496, 120303, 86),
+    ("drain", "exact"): (3247, 3168, 3168, 108767, 79),
+    ("drain", "et"): (3247, 3166, 4245, 112641, 81),
+    ("drain", "dt"): (3247, 3158, 1024, 129408, 89),
+    ("drain", "rt"): (3247, 3156, 496, 128238, 91),
+}
+
+# Fingerprints at seed 7 under 2:1 heterogeneous decode rates (ET-3,
+# msr_drain=0.25 so the emulation runs at per-rate nominal capacity):
+# (offered, completed, messages, jct_sum).  The rate-blind "rr" pays ~3x
+# the JCT of the state-driven policies -- the heterogeneity is real.
+HETERO_GOLDEN = {
+    "jsaq": (4848, 4682, 441, 190212),
+    "sqd": (4848, 4668, 442, 207745),
+    "rr": (4848, 4001, 586, 588396),
+    "drain": (4848, 4674, 446, 194580),
+}
+
+
+def policy_cell(policy: str, comm: str, **kw) -> engine.ServeConfig:
+    return small_cell(comm, policy=policy, **kw)
+
+
+def hetero_cell(policy: str, comm: str = "et") -> engine.ServeConfig:
+    return policy_cell(
+        policy, comm, decode_rates=HETERO_21, msr_drain=0.25
+    )
+
+
+class TestPolicyMatrix:
+    """Every (policy, comm) cell: numpy golden + jax bit-identity."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("comm", MATRIX_KINDS)
+    def test_numpy_golden(self, policy, comm):
+        out = run_reference(policy_cell(policy, comm), 7)
+        offered, completed, msgs, jct_sum, occ_sum = POLICY_GOLDEN[
+            (policy, comm)
+        ]
+        assert out["offered"] == offered
+        assert out["completed"] == completed
+        assert out["messages"] == msgs
+        assert int(out["jct"].sum()) == jct_sum
+        assert int(out["final_occupancy"].sum()) == occ_sum
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("comm", MATRIX_KINDS)
+    def test_jax_matches_numpy_bitwise(self, policy, comm):
+        cell = policy_cell(policy, comm)
+        ref = run_reference(cell, 7, checkpoints=(600, 1999))
+        res = engine.serve_one(7, cell, trace_occupancy=True)
+        assert res.messages == ref["messages"]
+        assert res.completed == ref["completed"]
+        assert res.dropped == 0
+        np.testing.assert_array_equal(res.jct_by_rid, ref["jct_by_rid"])
+        np.testing.assert_array_equal(
+            res.final_occupancy, ref["final_occupancy"]
+        )
+        for slot, occ in ref["occupancy"].items():
+            np.testing.assert_array_equal(res.occupancy[slot], occ)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_hetero_rates_golden_and_bitwise(self, policy):
+        cell = hetero_cell(policy)
+        ref = run_reference(cell, 7)
+        offered, completed, msgs, jct_sum = HETERO_GOLDEN[policy]
+        assert ref["offered"] == offered
+        assert ref["completed"] == completed
+        assert ref["messages"] == msgs
+        assert int(ref["jct"].sum()) == jct_sum
+        res = engine.serve_one(7, cell)
+        assert res.messages == ref["messages"]
+        np.testing.assert_array_equal(res.jct_by_rid, ref["jct_by_rid"])
+        np.testing.assert_array_equal(
+            res.final_occupancy, ref["final_occupancy"]
+        )
+
+    def test_nondyadic_rates_still_bitwise(self):
+        # Both backends carry the approximation in float32, so bit-identity
+        # survives non-dyadic rates and drains (same IEEE single ops).
+        cell = small_cell(
+            "et", policy="drain", msr_drain=0.25,
+            decode_rates=(1.5, 4 / 3, 1.0, 0.75, 1.25, 1.0, 2.0, 0.5),
+        )
+        ref = run_reference(cell, 5)
+        res = engine.serve_one(5, cell)
+        assert res.messages == ref["messages"]
+        np.testing.assert_array_equal(res.jct_by_rid, ref["jct_by_rid"])
+
+    def test_drain_reduces_to_jsaq_on_uniform_rates(self):
+        a = run_reference(policy_cell("drain", "et"), 7)
+        b = run_reference(policy_cell("jsaq", "et"), 7)
+        assert a["messages"] == b["messages"]
+        np.testing.assert_array_equal(a["jct_by_rid"], b["jct_by_rid"])
+
+    def test_rr_trajectory_is_comm_invariant(self):
+        # Round robin never reads the approximated state, so the comm axis
+        # may only change the message count, never the routing trajectory.
+        jcts = [
+            run_reference(policy_cell("rr", comm), 7)["jct_by_rid"]
+            for comm in MATRIX_KINDS
+        ]
+        for other in jcts[1:]:
+            np.testing.assert_array_equal(jcts[0], other)
+
+    def test_workload_shared_across_policies(self):
+        # The policy axis never re-keys the stream -- the paper's
+        # comparison method (identical input under every policy), and what
+        # makes the matrix a controlled comparison.
+        wa = engine.workload_for(policy_cell("jsaq", "et"), 3)
+        wb = engine.workload_for(policy_cell("sqd", "et", sqd=4), 3)
+        np.testing.assert_array_equal(wa.n_arr, wb.n_arr)
+        np.testing.assert_array_equal(wa.sub_u, wb.sub_u)
+
+    def test_mismatched_policy_static_rejected(self):
+        cells = [policy_cell("sqd", "et")]
+        static = dataclasses.replace(cells[0].static_part(), policy="jsaq")
+        with pytest.raises(ValueError, match="does not match"):
+            engine.serve_grid([0], static, cells)
+
+
 class TestBackendEquivalence:
     @pytest.mark.parametrize("comm", KINDS)
     def test_jax_matches_numpy_bitwise(self, comm):
@@ -192,6 +344,32 @@ class TestGridEquivalence:
                     got.final_occupancy, ref.final_occupancy
                 )
 
+    def test_policy_grid_matches_single_runs(self):
+        # One compiled program per policy sweeps x *and* the rate profile
+        # (decode_rates is a traced operand): uniform-ones and 2:1 cells
+        # share the program, and every cell must equal its serve_one
+        # reference bit for bit.
+        ones = (1.0,) * 8
+        for policy in ["sqd", "drain"]:
+            cells = [
+                policy_cell(policy, "et", x=2, decode_rates=ones,
+                            msr_drain=0.25),
+                policy_cell(policy, "et", x=4, decode_rates=ones,
+                            msr_drain=0.25),
+                policy_cell(policy, "et", x=4, decode_rates=HETERO_21,
+                            msr_drain=0.25),
+            ]
+            static = cells[0].static_part()
+            grid = engine.serve_grid([0, 1], static, cells)
+            for cell, row in zip(cells, grid):
+                for seed, got in zip([0, 1], row):
+                    ref = engine.serve_one(seed, cell)
+                    assert got.messages == ref.messages
+                    assert got.completed == ref.completed
+                    np.testing.assert_array_equal(
+                        got.jct_by_rid, ref.jct_by_rid
+                    )
+
     def test_grid_unsharded_matches_sharded(self):
         cells = [small_cell("dt", x=2, slots=800),
                  small_cell("dt", x=5, slots=800)]
@@ -237,3 +415,93 @@ class TestPickMinTied:
             counts[engine.pick_min_tied(occ, u)] += 1
         assert counts[0] == 0
         assert counts[1:].min() > 300  # ~333 each over the tie set
+
+    def test_masked_subset_matches_reference_enumeration(self):
+        # The SQ(d) path: the argmin (and its tie set) is restricted to
+        # the mask, and the f32 rank arithmetic is unchanged.
+        rng = np.random.default_rng(1)
+        hits = 0
+        for _ in range(300):
+            n = int(rng.integers(2, 12))
+            occ = rng.integers(0, 4, size=n).astype(float)
+            mask = rng.random(n) < 0.5
+            if not mask.any():
+                continue
+            hits += 1
+            u = np.float32(rng.random())
+            j = engine.pick_min_tied(occ, u, mask=mask)
+            assert mask[j]
+            cand = np.flatnonzero(mask)
+            sub_min = occ[cand].min()
+            assert occ[j] == sub_min
+            ties = cand[occ[cand] == sub_min]
+            rank = min(int(np.float32(u) * np.float32(len(ties))),
+                       len(ties) - 1)
+            assert j == ties[rank]
+        assert hits > 200
+
+    def test_masked_edge_cases(self):
+        occ = np.array([3.0, 1.0, 2.0, 0.0])
+        # Single candidate: returned regardless of u, even when a smaller
+        # occupancy exists outside the mask.
+        only = np.array([True, False, False, False])
+        for u in (np.float32(0.0), np.float32(0.5), np.float32(0.999)):
+            assert engine.pick_min_tied(occ, u, mask=only) == 0
+        # All-masked: the -1 sentinel (the engine never routes on an empty
+        # subset -- sqd >= 1 -- but the helper must not crash or alias).
+        none = np.zeros(4, bool)
+        assert engine.pick_min_tied(occ, np.float32(0.3), mask=none) == -1
+        # Mask of everything degenerates to the unmasked pick.
+        full = np.ones(4, bool)
+        for u in (np.float32(0.1), np.float32(0.9)):
+            assert engine.pick_min_tied(occ, u, mask=full) == \
+                engine.pick_min_tied(occ, u)
+
+    def test_inf_occupancy_outside_mask_never_ties(self):
+        # A masked-out zero must not join the tie set of a masked-in zero.
+        occ = np.array([0.0, 0.0, 5.0, 0.0])
+        mask = np.array([False, True, True, False])
+        for u in np.linspace(0, 0.999, 64, dtype=np.float32):
+            assert engine.pick_min_tied(occ, u, mask=mask) == 1
+
+
+class TestSubsetMask:
+    def test_numpy_and_jax_derive_identical_subsets(self):
+        # The same pre-drawn f32 row must yield the same d-subset on both
+        # backends -- the SQ(d) bit-identity hinges on it.
+        rng = np.random.default_rng(2)
+        for _ in range(200):
+            n = int(rng.integers(1, 16))
+            d = int(rng.integers(1, min(n, engine.SQD_MAX) + 1))
+            row = rng.random(engine.SQD_MAX, dtype=np.float32)
+            m_np = engine.subset_mask(row, n, d, xp=np)
+            m_jx = np.asarray(engine.subset_mask(jnp.asarray(row), n, d,
+                                                 xp=jnp))
+            np.testing.assert_array_equal(m_np, m_jx)
+            assert int(m_np.sum()) == d  # always d distinct replicas
+
+    def test_subset_is_uniform_over_pairs(self):
+        # d=2 over 4 replicas: each of the 6 unordered pairs ~1/6.
+        rng = np.random.default_rng(3)
+        counts: dict = {}
+        for _ in range(3000):
+            m = engine.subset_mask(
+                rng.random(engine.SQD_MAX, dtype=np.float32), 4, 2, xp=np
+            )
+            counts[tuple(np.flatnonzero(m))] = counts.get(
+                tuple(np.flatnonzero(m)), 0
+            ) + 1
+        assert len(counts) == 6
+        assert min(counts.values()) > 3000 / 6 * 0.7
+
+    def test_boundary_uniforms(self):
+        # u = 0 picks the first available replica; u -> 1 the last (the
+        # min() clamp keeps the f32 product from indexing past the end).
+        lo = np.zeros(engine.SQD_MAX, np.float32)
+        hi = np.full(engine.SQD_MAX, np.float32(1.0 - 1e-7))
+        np.testing.assert_array_equal(
+            np.flatnonzero(engine.subset_mask(lo, 5, 2, xp=np)), [0, 1]
+        )
+        np.testing.assert_array_equal(
+            np.flatnonzero(engine.subset_mask(hi, 5, 2, xp=np)), [3, 4]
+        )

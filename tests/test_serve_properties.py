@@ -17,7 +17,15 @@ invariants proved here transfer to the traced path.  Checked:
   (and <= x-1 when ``msr_drain`` keeps the approximation integral) --
   ET fires the same slot the error reaches x and the message snaps the
   approximation to the truth.
+* **Policy-suite invariants** (the routing-policy axis): work
+  conservation holds per slot for every policy under heterogeneous
+  ``decode_rates``; SQ(d) only ever routes inside its sampled subset
+  (which always has exactly d members); drain-time-aware JSAQ replays
+  JSAQ's exact trajectory whenever the rates are uniform (the score is
+  an argmin-invariant scaling with an identical f32 tie set).
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -25,6 +33,10 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serve import engine  # noqa: E402
+
+# Hypothesis-heavy: part of the full suite, skipped by the fast tier-1
+# gate (pytest -m "not slow").
+pytestmark = pytest.mark.slow
 
 
 @st.composite
@@ -45,11 +57,13 @@ def serving_runs(draw, comms=("exact", "et", "dt", "rt", "et_rt")):
     return cfg, slots, load, seed
 
 
-def _replay(cfg, slots, load, seed, per_slot_check):
-    """Drive the dispatcher slot by slot, calling the invariant hook."""
+def _replay(cfg, slots, load, seed, per_slot_check, per_route_check=None):
+    """Drive the dispatcher slot by slot, calling the invariant hooks."""
+    rate_scale = engine.mean_decode_rate(cfg.decode_rates)
     wl = engine.sample_workload(
         seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
         slots=slots, load=load, mean_prefill=2, mean_decode=6,
+        rate_scale=rate_scale,
     )
     disp = engine.CareDispatcher(cfg, seed)
     finished = []
@@ -58,15 +72,17 @@ def _replay(cfg, slots, load, seed, per_slot_check):
         b = int(wl.base[now])
         for i in range(int(wl.n_arr[now])):
             rid = b + i
-            disp.route(
+            j = disp.route(
                 engine.Request(
                     rid=rid, arrival=now,
                     prefill_cost=int(wl.prefill[rid]),
                     decode_len=int(wl.decode[rid]),
                 ),
-                now, u=float(wl.tie_u[rid]),
+                now, u=float(wl.tie_u[rid]), sub_u=wl.sub_u[rid],
             )
             offered += 1
+            if per_route_check is not None:
+                per_route_check(disp, j)
         finished.extend(disp.step(now))
         per_slot_check(disp, offered, finished, now)
     return disp, wl, finished
@@ -111,6 +127,97 @@ class TestExactAccounting:
             assert disp.messages == disp.total_completions
 
         _replay(cfg, slots, load, seed, check)
+
+
+@st.composite
+def policy_runs(draw):
+    """Runs across the routing-policy suite, optionally rate-asymmetric."""
+    r = draw(st.integers(2, 6))
+    rates = draw(
+        st.one_of(
+            st.none(),
+            st.lists(
+                st.sampled_from([0.5, 1.0, 1.5, 2.0]),
+                min_size=r, max_size=r,
+            ).map(tuple),
+        )
+    )
+    cfg = engine.EngineConfig(
+        num_replicas=r,
+        decode_slots=draw(st.integers(1, 4)),
+        comm=draw(st.sampled_from(["exact", "et", "dt", "rt"])),
+        et_x=draw(st.integers(1, 6)),
+        dt_x=draw(st.integers(1, 6)),
+        rt_period=draw(st.integers(1, 24)),
+        msr_drain=draw(st.sampled_from([1.0, 0.5, 0.25])),
+        policy=draw(st.sampled_from(["jsaq", "sqd", "rr", "drain"])),
+        sqd=draw(st.integers(1, r)),
+        decode_rates=rates,
+        mean_prefill=2.0,
+        mean_decode=6.0,
+    )
+    slots = draw(st.integers(30, 120))
+    load = draw(st.floats(0.3, 1.4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return cfg, slots, load, seed
+
+
+class TestPolicyConservation:
+    @settings(max_examples=30, deadline=None)
+    @given(policy_runs())
+    def test_conservation_under_any_policy_and_rates(self, run):
+        # Work conservation is policy- and rate-independent: every offered
+        # request is completed, queued, or in a decode slot -- in
+        # particular the heterogeneous credit schedule never loses or
+        # double-counts a request.
+        cfg, slots, load, seed = run
+
+        def check(disp, offered, finished, now):
+            in_system = int(disp.true_occupancy().sum())
+            assert offered == len(finished) + in_system
+
+        _replay(cfg, slots, load, seed, check)
+
+
+class TestSqdSubset:
+    @settings(max_examples=25, deadline=None)
+    @given(policy_runs())
+    def test_routes_only_inside_sampled_subset(self, run):
+        cfg, slots, load, seed = run
+        cfg = dataclasses.replace(cfg, policy="sqd")
+
+        def on_route(disp, j):
+            assert disp.last_subset is not None
+            assert int(disp.last_subset.sum()) == cfg.sqd
+            assert disp.last_subset[j]
+
+        _replay(cfg, slots, load, seed, lambda *a: None,
+                per_route_check=on_route)
+
+
+class TestDrainReducesToJsaq:
+    @settings(max_examples=25, deadline=None)
+    @given(policy_runs(), st.sampled_from([0.5, 1.0, 2.0]))
+    def test_uniform_rates_replay_jsaq_exactly(self, run, rate):
+        # Scaling every queue length by the same positive E[S]/r is
+        # argmin-invariant with an identical f32 tie set, so the drain
+        # policy must replay JSAQ's trajectory message for message.
+        cfg, slots, load, seed = run
+        uniform = (rate,) * cfg.num_replicas
+        runs = {}
+        for policy in ("drain", "jsaq"):
+            cfg_p = dataclasses.replace(
+                cfg, policy=policy, decode_rates=uniform
+            )
+            disp, _, finished = _replay(cfg_p, slots, load, seed,
+                                        lambda *a: None)
+            runs[policy] = (
+                disp.messages,
+                disp.total_completions,
+                sorted((f.rid, f.finished) for f in finished),
+                disp.true_occupancy().tolist(),
+            )
+        assert runs["drain"] == runs["jsaq"]
 
 
 class TestEtErrorBound:

@@ -24,6 +24,10 @@ try:
 except ImportError:  # statistical tests skip; deterministic ones still run
     given = settings = st = None
 
+# Hypothesis-heavy statistical sweeps: part of the full suite, skipped by
+# the fast tier-1 gate (pytest -m "not slow").
+pytestmark = pytest.mark.slow
+
 from repro.core.care import workload
 
 N = 200_000
