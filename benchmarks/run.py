@@ -74,6 +74,7 @@ BENCHES = [
     "bench_heavy_tail",
     "bench_moe_balance",
     "bench_serving",
+    "bench_route",
     "bench_roofline",
 ]
 

@@ -42,8 +42,19 @@ def argmin_random_ties(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
     return jnp.argmax(score).astype(jnp.int32)
 
 
-def route_shortest(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
-    """JSQ / JSAQ: join the shortest (approximated) queue."""
+def route_shortest(
+    q: jnp.ndarray, key: jax.Array, deterministic: bool = False
+) -> jnp.ndarray:
+    """JSQ / JSAQ: join the shortest (approximated) queue.
+
+    ``deterministic=True`` resolves ties to the lowest index instead of
+    uniformly at random -- the convention of the Pallas routing kernels
+    (``kernels/jsaq_route.py``), so the dense path can be compared to the
+    kernel path decision for decision.  The key is still accepted (and
+    ignored) so the callers' stream plumbing is identical either way.
+    """
+    if deterministic:
+        return jnp.argmin(q).astype(jnp.int32)
     return argmin_random_ties(q, key)
 
 
@@ -75,8 +86,14 @@ def route(
     key: jax.Array,
     d: int = 2,
     drain_slots: jnp.ndarray | None = None,
+    deterministic: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch one job.  Returns ``(server, rr_ptr')``.
+
+    ``deterministic`` (static) switches the shortest-queue family's
+    tie-break from uniformly random to lowest index (the Pallas kernel
+    convention); the subset-sampling and random policies keep their
+    random draws regardless.
 
     ``policy`` is static (Python-level), so jitted callers specialise on it.
     ``drain_slots`` (optional, ``(K,)``) supplies the expected per-job
@@ -99,9 +116,9 @@ def route(
         scaled_true = q_true.astype(jnp.float32) * drain_slots
         scaled_app = q_app.astype(jnp.float32) * drain_slots
     if policy == "jsq":
-        return route_shortest(scaled_true, key), rr_ptr
+        return route_shortest(scaled_true, key, deterministic), rr_ptr
     if policy == "jsaq":
-        return route_shortest(scaled_app, key), rr_ptr
+        return route_shortest(scaled_app, key, deterministic), rr_ptr
     if policy == "sq2":
         return route_sqd(scaled_true, 2, key), rr_ptr
     if policy == "sqd":

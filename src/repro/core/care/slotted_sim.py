@@ -138,6 +138,16 @@ class StaticConfig:
     service: workload_lib.ServiceKind = "geometric"
     use_rates: bool = False  # heterogeneous service_rates in play
     rate_aware: bool = True
+    # Which routing engine executes the slot loop: "dense" (the golden
+    # reference -- per-slot one-hot array ops) or "pallas" (the fused
+    # kernels/jsaq_route.care_route_pallas mean-field kernel; requires
+    # policy jsq/jsaq, msr approximation, deterministic service, unit
+    # rates and deterministic_ties -- see _check_pallas_static).
+    route_backend: str = "dense"
+    # Shortest-queue tie-break: False = uniformly random (the paper's
+    # JSAQ definition), True = lowest index (the kernel convention; the
+    # mode in which dense and pallas backends are decision-identical).
+    deterministic_ties: bool = False
 
 
 @jax.tree_util.register_dataclass
@@ -294,6 +304,8 @@ class SimConfig:
     diurnal_amp: float = 0.0
     diurnal_period: float = 1.0
     max_slots: Optional[int] = None  # padded scan length (>= slots)
+    route_backend: str = "dense"  # "dense" | "pallas" (see StaticConfig)
+    deterministic_ties: bool = False
 
     def static_part(self) -> StaticConfig:
         if self.max_slots is not None and self.max_slots < self.slots:
@@ -312,6 +324,8 @@ class SimConfig:
             service=self.service,
             use_rates=self.service_rates is not None,
             rate_aware=self.rate_aware,
+            route_backend=self.route_backend,
+            deterministic_ties=self.deterministic_ties,
         )
 
     def scenario(self) -> Scenario:
@@ -451,6 +465,7 @@ def _sim_core(
         server, rr_ptr = routing_lib.route(
             static.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
             d=static.sqd, drain_slots=drain_slots,
+            deterministic=static.deterministic_ties,
         )
         # Dense one-hot arithmetic instead of scalar gathers / scatters /
         # conds: under vmap those lower to serial per-batch-element loops
@@ -632,6 +647,102 @@ def grid_compile_count() -> int:
     )
 
 
+def _check_pallas_static(static: StaticConfig) -> None:
+    """Validate a StaticConfig against the fused kernel's restrictions.
+
+    The mean-field kernel (``kernels/jsaq_route.care_route_pallas``)
+    carries all per-server state as in-kernel loop carries and no per-job
+    FIFO ring, which pins the modelling corner it reproduces exactly:
+    shortest-queue routing with lowest-index ties, MSR emulation, and
+    deterministic (mean-sized) jobs at unit rates -- the regime of the
+    paper's mean-field / diffusion limits.  Anything else must use the
+    dense reference backend.
+    """
+    if static.policy not in ("jsq", "jsaq"):
+        raise ValueError(
+            f"route_backend='pallas' supports policies 'jsq'/'jsaq', got "
+            f"{static.policy!r}"
+        )
+    if static.approx != "msr":
+        raise ValueError(
+            f"route_backend='pallas' requires approx='msr', got "
+            f"{static.approx!r}"
+        )
+    if static.service != "deterministic":
+        raise ValueError(
+            f"route_backend='pallas' requires service='deterministic' "
+            f"(per-job sizes live in a FIFO ring the kernel does not "
+            f"carry), got {static.service!r}"
+        )
+    if static.use_rates:
+        raise ValueError(
+            "route_backend='pallas' requires homogeneous unit service rates"
+        )
+    if not static.deterministic_ties:
+        raise ValueError(
+            "route_backend='pallas' requires deterministic_ties=True (the "
+            "kernel breaks ties to the lowest index)"
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_grid_fn(static: StaticConfig):
+    """The one compiled program for a pallas-backend grid.
+
+    The batched ``_prep`` (plain jnp -- identical workload stream to the
+    dense backend, since only ``k_arr`` of the per-run key split feeds the
+    arrival draw) builds the (N, T) arrival matrix, and a single
+    ``care_route_pallas`` call advances every run as one kernel domain --
+    the flattened run axis *is* the kernel's native domain axis, so no
+    vmap-of-pallas is involved.  Output tuple matches ``_run_one`` so
+    ``_finalize``/:class:`SimResult` are shared; ``comp_slot`` is all -1
+    (per-job completion tracking needs the FIFO ring the mean-field
+    kernel deliberately drops, so JCT metrics are empty at this scale).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    def run(keys, scn):
+        arrive, _sizes, _keys, _active = jax.vmap(
+            lambda k, s: _prep(k, static, s)
+        )(keys, scn)
+        params = jnp.stack(
+            [
+                scn.x.astype(jnp.int32),
+                scn.rt_period.astype(jnp.int32),
+                scn.service.msr_slots.astype(jnp.int32),
+                scn.horizon.astype(jnp.int32),
+            ],
+            axis=1,
+        )
+        _routed, q_final, per_srv, stats = kernel_ops.care_route(
+            arrive.astype(jnp.int32),
+            params,
+            servers=static.servers,
+            cap=static.buffer_cap,
+            policy=static.policy,
+            comm=static.comm,
+        )
+        n, t = arrive.shape
+        comp_slot = jnp.full((n, t), -1, jnp.int32)
+        return (
+            arrive,
+            comp_slot,
+            stats[:, 0],  # msgs
+            stats[:, 1],  # deps
+            stats[:, 2],  # arrs
+            stats[:, 4],  # max_aq
+            stats[:, 5],  # max_q
+            per_srv,
+            q_final,
+            stats[:, 3],  # dropped
+            stats[:, 6],  # gap_sup
+        )
+
+    fn = jax.jit(run)
+    _GRID_PROGRAMS.append(fn)
+    return fn
+
+
 def _pad_indices(n: int, n_dev: int) -> np.ndarray:
     """Gather indices padding ``n`` runs up to a multiple of ``n_dev``.
 
@@ -707,6 +818,14 @@ def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
     """
     static, scn = cfg.static_part(), cfg.scenario()
     _check_diurnal_peak(static, scn)
+    if static.route_backend == "pallas":
+        _check_pallas_static(static)
+        out = _pallas_grid_fn(static)(
+            key[None], jax.tree.map(lambda a: a[None], scn)
+        )
+        return _finalize(
+            np.asarray(out[0][0]), tuple(o[0] for o in out[1:])
+        )
     out = _simulate_jit(key, scn, static)
     return _finalize(np.asarray(out[0]), out[1:])
 
@@ -756,6 +875,23 @@ def simulate_grid(
     scn_flat = jax.tree.map(
         lambda a: jnp.repeat(a, s, axis=0), scn_stacked
     )
+
+    if static_cfg.route_backend == "pallas":
+        # The kernel's grid axis is the flattened run axis itself; no
+        # shard_map (the mean-field path targets one big accelerator).
+        _check_pallas_static(static_cfg)
+        out = _pallas_grid_fn(static_cfg)(keys_flat, scn_flat)
+        out_np = [np.asarray(o) for o in out]
+        arrive, rest = out_np[0], out_np[1:]
+        return [
+            [
+                _finalize(
+                    arrive[i * s + j], tuple(o[i * s + j] for o in rest)
+                )
+                for j in range(s)
+            ]
+            for i in range(c)
+        ]
 
     n_dev = jax.local_device_count() if shard else 1
     idx = _pad_indices(n, n_dev)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched JSAQ dispatch.
+"""Pallas TPU kernel family: fused CARE routing at mean-field scale.
 
 Join-the-Shortest-Approximated-Queue routes each arriving job to the argmin
 of the balancer's approximated queue vector and immediately increments that
@@ -6,38 +6,159 @@ entry (the balancer knows its own routing decisions -- Eq. 10 in the paper).
 The per-job decision is inherently sequential, which is hostile to a SIMD
 machine; the TPU adaptation is:
 
-* vectorise over *independent balancer domains* (rows) -- e.g. parallel
-  simulation replicas, per-device dispatchers, or per-layer expert groups --
-  so each VPU lane group advances a different domain;
-* keep the (domains_tile, K) state resident in VMEM across the whole
-  sequential inner loop, so the argmin/update chain never touches HBM.
+* vectorise over *independent balancer domains* (rows) -- parallel
+  simulation replicas, per-device dispatchers, grid runs -- so each VPU
+  lane group advances a different domain;
+* keep the whole (domain_tile, K) state resident in VMEM across the
+  sequential inner loop, so the route/trigger/update chain never touches
+  HBM between slots.
 
-Layout: domains on the sublane axis (tile of 8), servers K on the lane axis
-(padded to 128) -- the natural (8, 128) VREG shape.
+Three kernels share the layout and the segmented reduction:
 
-Grid: one program per domain tile; jobs dimension is the sequential
+* :func:`jsaq_route_pallas` -- the seed kernel: route ``num_jobs`` jobs by
+  sequential JSAQ from a given state (consumed by ``kernels/ops.py`` and
+  the kernel unit tests).
+* :func:`care_route_pallas` -- the mean-field simulator kernel: the whole
+  ``T``-slot CARE loop (route + admit + deterministic service + MSR
+  emulation drain + RT/DT/ET/ET+RT/exact trigger + snap) fused into one
+  kernel invocation, so a million-server cell never materialises per-slot
+  (K,)-sized intermediates in HBM.  Decision-identical to the dense
+  ``slotted_sim`` path under ``deterministic_ties`` (asserted by
+  ``tests/test_route_backend.py``).
+* :func:`serve_route_pallas` -- the serving engine's within-slot arrival
+  lane loop (sequential routing over the slot's arrival batch with the
+  occupancy/approximation state resident), replacing the dense
+  ``lax.scan`` lane body of ``serve/engine.py``.
+
+Segmented-reduction layout
+--------------------------
+
+Domains live on the sublane axis (tile of :data:`DOMAIN_TILE` = 8),
+servers K on the lane axis padded to the 128-wide lane tile
+(:data:`LANE_TILE`) -- the natural (8, 128) VREG shape.  When K exceeds
+one lane tile, :func:`seg_argmin` replaces the full-width argmin with a
+segmented reduction: a sequential ``fori_loop`` over 128-lane tiles
+carries the running per-lane-slot minimum ``vmin`` and the tile index
+``tmin`` that achieved it (strict ``<`` keeps the *earliest* tile on
+ties), then one cross-tile combine recovers the global argmin as the
+minimum global index ``tmin * 128 + lane`` among lanes achieving the
+global minimum.  Ties therefore resolve to the lowest *global* server
+index, matching ``jnp.argmin`` and the simulators' ``deterministic_ties``
+mode exactly.  Only the two (tile, 128) carries are live at any point, so
+the reduction working set is independent of K.
+
+Pad-lane safety: callers (``kernels/ops.py``) pad the server axis to a
+lane-tile multiple with ``int32`` max / ``+inf`` *before* the call, and
+the stateful kernels additionally mask scores with an in-kernel
+``lane < servers`` validity mask -- a pad lane can never win the argmin,
+never triggers a message, and never contributes to the max/min metrics.
+
+VMEM budget: :func:`care_route_pallas` keeps ~7 (domain_tile, K) int32
+carries resident; at one domain row per program that is ~28 bytes/server,
+so K = 10^6 wants ~28 MB -- beyond a single TPU core's VMEM.  At that
+scale run one domain per program (``domain_tile`` adapts automatically)
+and shorten to f16 carries or block the lane axis across the grid; under
+the interpreter (CPU CI and the benchmarks here) the arrays live in host
+memory and the full sweep runs unmodified.
+
+Grid: one program per domain tile; slots/jobs/lanes are the sequential
 ``fori_loop`` inside the kernel.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DOMAIN_TILE = 8
+LANE_TILE = 128
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def lane_pad(k: int) -> int:
+    """The server axis padded up to a full lane-tile multiple."""
+    return max(LANE_TILE, ((k + LANE_TILE - 1) // LANE_TILE) * LANE_TILE)
+
+
+def domain_tile(d: int) -> int:
+    """Largest tile dividing ``d`` (<= DOMAIN_TILE), so no domain padding."""
+    return math.gcd(d, DOMAIN_TILE)
+
+
+def seg_argmin(score: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise argmin via a segmented lane-tile reduction.
+
+    Args:
+      score: (Dt, Kp) values; ``Kp`` must be a multiple of
+        :data:`LANE_TILE` when it exceeds one tile.  Callers lift invalid
+        (padding) lanes to ``int32`` max / ``+inf`` beforehand.
+
+    Returns:
+      ``(j, vmin)``: (Dt, 1) argmin indices (ties -> lowest global index,
+      matching ``jnp.argmin``) and (Dt, 1) minimum values.
+
+    For ``Kp`` within one lane tile this is a plain full-width reduction.
+    Beyond that, a ``fori_loop`` over 128-lane tiles carries the running
+    per-lane-slot minimum and the (earliest) tile achieving it -- the
+    working set stays (Dt, 128) regardless of K -- and a final cross-tile
+    combine takes the minimum global index among lanes achieving the
+    global minimum (a plain lane argmin would return the lowest *lane*,
+    not the lowest global index).
+    """
+    d, kp = score.shape
+    if kp <= LANE_TILE:
+        vmin = jnp.min(score, axis=1, keepdims=True)
+        lane = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+        j = jnp.min(
+            jnp.where(score == vmin, lane, _I32_MAX), axis=1, keepdims=True
+        )
+        return j, vmin
+    if kp % LANE_TILE:
+        raise ValueError(
+            f"lane axis ({kp}) beyond one tile must be a multiple of "
+            f"{LANE_TILE}"
+        )
+    nt = kp // LANE_TILE
+
+    def tile(i, carry):
+        vmin, tmin = carry
+        blk = jax.lax.dynamic_slice(score, (0, i * LANE_TILE), (d, LANE_TILE))
+        better = blk < vmin  # strict: ties keep the earliest tile
+        return jnp.where(better, blk, vmin), jnp.where(better, i, tmin)
+
+    v0 = jax.lax.dynamic_slice(score, (0, 0), (d, LANE_TILE))
+    vmin, tmin = jax.lax.fori_loop(
+        1, nt, tile, (v0, jnp.zeros((d, LANE_TILE), jnp.int32))
+    )
+    lane = jax.lax.broadcasted_iota(jnp.int32, (d, LANE_TILE), 1)
+    gidx = tmin * LANE_TILE + lane
+    gmin = jnp.min(vmin, axis=1, keepdims=True)
+    j = jnp.min(jnp.where(vmin == gmin, gidx, _I32_MAX), axis=1, keepdims=True)
+    return j, gmin
+
+
+# ---------------------------------------------------------------------------
+# Seed kernel: batched JSAQ dispatch from a given state.
+# ---------------------------------------------------------------------------
 
 
 def _jsaq_kernel(q_ref, idx_ref, qout_ref, *, num_jobs: int):
-    """One domain-tile: route ``num_jobs`` jobs sequentially per domain."""
+    """One domain-tile: route ``num_jobs`` jobs sequentially per domain.
+
+    Pad lanes (if any) carry ``int32`` max from the wrapper, so the
+    segmented argmin can never route to them.
+    """
     q = q_ref[...].astype(jnp.int32)
 
     def body(n, q):
-        j = jnp.argmin(q, axis=1).astype(jnp.int32)  # (Dt,)
-        idx_ref[:, pl.dslice(n, 1)] = j[:, None]
+        j, _ = seg_argmin(q)  # (Dt, 1); ties -> lowest index
+        idx_ref[:, pl.dslice(n, 1)] = j
         onehot = (
-            jax.lax.broadcasted_iota(jnp.int32, q.shape, 1) == j[:, None]
+            jax.lax.broadcasted_iota(jnp.int32, q.shape, 1) == j
         ).astype(q.dtype)
         return q + onehot
 
@@ -52,6 +173,9 @@ def jsaq_route_pallas(
 
     Args:
       q_app: (D, K) int32 approximated queue lengths, one row per domain.
+        ``K`` beyond one lane tile must be a multiple of 128, with pad
+        lanes pre-masked to ``int32`` max (``kernels/ops.py`` handles
+        both).
       num_jobs: number of jobs to dispatch per domain (static).
       interpret: run the Pallas interpreter (CPU validation).
 
@@ -81,3 +205,387 @@ def jsaq_route_pallas(
         interpret=interpret,
     )(q_app)
     return idx, q_out
+
+
+# ---------------------------------------------------------------------------
+# Mean-field simulator kernel: the whole CARE slot loop, fused.
+# ---------------------------------------------------------------------------
+
+
+def _care_kernel(
+    arrive_ref,
+    params_ref,
+    routed_ref,
+    qtrue_ref,
+    persrv_ref,
+    stats_ref,
+    *,
+    servers: int,
+    cap: int,
+    policy: str,
+    comm: str,
+):
+    """One domain-tile: fused CARE trigger+route loop over all slots.
+
+    Mirrors ``slotted_sim._sim_core`` operation for operation under its
+    mean-field restrictions (deterministic service of ``msr_slots`` per
+    job, MSR emulation, unit rates, deterministic lowest-index ties), so
+    the two paths are bit-identical -- but with all (Dt, K) state as
+    ``fori_loop`` carries (VMEM-resident on TPU) and no per-job FIFO
+    ring, per-slot PRNG keys or one-hot HBM traffic.
+
+    ``params_ref`` carries the per-domain scenario scalars
+    ``[x, rt_period, msr_slots, horizon]`` (int32); ``servers`` masks the
+    pad lanes; ``cap``/``policy``/``comm`` are trace-time.
+    """
+    dt, kp = qtrue_ref.shape
+    slots = arrive_ref.shape[1]
+    arrive = arrive_ref[...]
+    x = params_ref[:, 0:1]
+    rt_period = params_ref[:, 1:2]
+    msr = params_ref[:, 2:3]
+    horizon = params_ref[:, 3:4]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (dt, kp), 1)
+    valid = lane < servers
+    zeros = jnp.zeros((dt, kp), jnp.int32)
+    zeros1 = jnp.zeros((dt, 1), jnp.int32)
+
+    def slot(t, st):
+        (q, qa, hr, eh, ds, ss, ps,
+         msgs, deps, arrs, drops, max_aq, max_q, gap) = st
+        act = t < horizon  # (dt, 1) bool; pad domains carry horizon 0
+        arr = jax.lax.dynamic_slice(arrive, (0, t), (dt, 1))
+        arr = (arr > 0) & act
+
+        # --- 1. arrival & routing (lowest-index ties) ----------------
+        score = qa if policy == "jsaq" else q
+        j, _ = seg_argmin(jnp.where(valid, score, _I32_MAX))
+        onehot = lane == j
+        q_sel = jnp.sum(jnp.where(onehot, q, 0), axis=1, keepdims=True)
+        admit = arr & (q_sel < cap)
+        drops = drops + (arr & ~admit).astype(jnp.int32)
+        sel = onehot & admit
+        hr = jnp.where(sel & (q == 0), msr, hr)
+        q = q + sel.astype(jnp.int32)
+        was_empty = qa == 0
+        qa = qa + sel.astype(jnp.int32)
+        eh = jnp.where(sel & was_empty, msr, eh)
+        arrs = arrs + admit.astype(jnp.int32)
+        ps = ps + sel.astype(jnp.int32)
+        routed_ref[:, pl.dslice(t, 1)] = jnp.where(admit, j, -1)
+
+        # --- 2. service (deterministic msr_slots-sized jobs) ----------
+        busy = (q > 0) & act
+        hr = jnp.where(busy, hr - 1, hr)
+        dep = busy & (hr <= 0)
+        q = jnp.where(dep, q - 1, q)
+        hr = jnp.where(dep & (q > 0), msr, hr)
+        deps = deps + jnp.sum(dep.astype(jnp.int32), axis=1, keepdims=True)
+
+        # --- 3. MSR emulation drain -----------------------------------
+        ticking = (qa > 0) & act
+        eh = jnp.where(ticking, eh - 1, eh)
+        dep_e = ticking & (eh <= 0)
+        qa = jnp.where(dep_e, qa - 1, qa)
+        eh = jnp.where(dep_e, msr, eh)
+
+        # --- 4/5. trigger (comm.evaluate semantics, fused) ------------
+        err = jnp.abs(q - qa)
+        dsa = ds + dep.astype(jnp.int32)
+        ssa = ss + 1
+        if comm == "rt":
+            trig = ssa >= rt_period
+        elif comm == "dt":
+            trig = dsa >= x
+        elif comm == "et":
+            trig = err >= x
+        elif comm == "et_rt":
+            trig = (err >= x) | (ssa >= rt_period)
+        elif comm == "exact":
+            trig = dep
+        elif comm == "none":
+            trig = jnp.zeros_like(dep)
+        else:
+            raise ValueError(f"unknown communication kind: {comm}")
+        trig = trig & act & valid
+        if comm == "exact":
+            sent = jnp.sum(dep.astype(jnp.int32), axis=1, keepdims=True)
+        else:
+            sent = jnp.sum(trig.astype(jnp.int32), axis=1, keepdims=True)
+        msgs = msgs + jnp.where(act, sent, 0)
+        ds = jnp.where(act, jnp.where(trig, 0, dsa), ds)
+        ss = jnp.where(act, jnp.where(trig, 0, ssa), ss)
+        qa = jnp.where(trig, q, qa)
+        eh = jnp.where(trig, msr, eh)
+
+        # --- 6. metrics (pad lanes masked out of the extrema) ---------
+        aq = jnp.max(jnp.abs(q - qa), axis=1, keepdims=True)
+        qmax = jnp.max(jnp.where(valid, q, 0), axis=1, keepdims=True)
+        qmin = jnp.min(jnp.where(valid, q, _I32_MAX), axis=1, keepdims=True)
+        return (
+            q, qa, hr, eh, ds, ss, ps,
+            msgs, deps, arrs, drops,
+            jnp.maximum(max_aq, aq),
+            jnp.maximum(max_q, qmax),
+            jnp.maximum(gap, qmax - qmin),
+        )
+
+    init = (
+        zeros,  # q_true
+        zeros,  # q_app
+        zeros,  # head_rem (true tier)
+        zeros + jnp.broadcast_to(msr, (dt, kp)),  # emu head (EmuState.init)
+        zeros,  # deps_since_msg
+        zeros,  # slots_since_msg
+        zeros,  # per-server arrivals
+        zeros1, zeros1, zeros1, zeros1,  # msgs, deps, arrs, dropped
+        zeros1, zeros1, zeros1,  # max_aq, max_q, gap_sup
+    )
+    (q, _qa, _hr, _eh, _ds, _ss, ps,
+     msgs, deps, arrs, drops, max_aq, max_q, gap) = jax.lax.fori_loop(
+        0, slots, slot, init
+    )
+    qtrue_ref[...] = q
+    persrv_ref[...] = ps
+    stats_ref[...] = jnp.concatenate(
+        [msgs, deps, arrs, drops, max_aq, max_q, gap, zeros1], axis=1
+    )
+
+
+def care_route_pallas(
+    arrive: jax.Array,
+    params: jax.Array,
+    *,
+    servers: int,
+    cap: int,
+    policy: str,
+    comm: str,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused CARE trigger+route simulation, one domain per row.
+
+    Args:
+      arrive: (D, T) int32 per-slot arrival indicators, pre-masked by each
+        domain's horizon (``slotted_sim._prep`` output).
+      params: (D, 4) int32 per-domain scalars ``[x, rt_period, msr_slots,
+        horizon]``.
+      servers: K, the live server count (static); the lane axis pads to a
+        lane-tile multiple internally and pad lanes are masked everywhere.
+      cap: per-server FIFO capacity (arrivals beyond it drop), static.
+      policy: "jsq" | "jsaq" (which state vector the argmin consumes).
+      comm: trigger kind ("rt" | "dt" | "et" | "et_rt" | "exact" | "none").
+      interpret: run the Pallas interpreter (CPU).
+
+    Returns:
+      ``(routed, q_true, per_srv, stats)``: (D, T) int32 routed server per
+      slot (-1 when no admitted arrival), final (D, K) queue lengths,
+      (D, K) per-server admitted arrivals, and (D, 8) int32 stats
+      ``[msgs, deps, arrs, dropped, max_aq, max_q, gap_sup, 0]``.
+    """
+    if policy not in ("jsq", "jsaq"):
+        raise ValueError(
+            f"care_route_pallas supports policies 'jsq'/'jsaq', got {policy!r}"
+        )
+    d, t = arrive.shape
+    kp = lane_pad(servers)
+    dt = domain_tile(d)
+    grid = (d // dt,)
+    kernel = functools.partial(
+        _care_kernel, servers=servers, cap=cap, policy=policy, comm=comm
+    )
+    routed, q_true, per_srv, stats = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((dt, t), lambda i: (i, 0)),
+            pl.BlockSpec((dt, 4), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((dt, t), lambda i: (i, 0)),
+            pl.BlockSpec((dt, kp), lambda i: (i, 0)),
+            pl.BlockSpec((dt, kp), lambda i: (i, 0)),
+            pl.BlockSpec((dt, 8), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, t), jnp.int32),
+            jax.ShapeDtypeStruct((d, kp), jnp.int32),
+            jax.ShapeDtypeStruct((d, kp), jnp.int32),
+            jax.ShapeDtypeStruct((d, 8), jnp.int32),
+        ],
+        interpret=interpret,
+    )(arrive.astype(jnp.int32), params.astype(jnp.int32))
+    return routed, q_true[:, :servers], per_srv[:, :servers], stats
+
+
+# ---------------------------------------------------------------------------
+# Serving engine kernel: within-slot sequential arrival-lane routing.
+# ---------------------------------------------------------------------------
+
+
+def _serve_kernel(
+    tie_ref,
+    qlen_ref,
+    qhead_ref,
+    busy_ref,
+    approx_ref,
+    par_ref,
+    jv_ref,
+    tail_ref,
+    admit_ref,
+    qlen_out_ref,
+    approx_out_ref,
+    stats_ref,
+    *,
+    replicas: int,
+    cap: int,
+    comm: str,
+):
+    """One slot's arrival lanes routed sequentially, state resident.
+
+    Mirrors the dense lane scan of ``serve/engine._serve_core`` under
+    deterministic (lowest-index) ties: each admitted arrival immediately
+    bumps the occupancy/approximation the next lane sees.  The f32
+    approximation update is the identical IEEE ``+1.0f``, so the two
+    backends stay bit-identical.  ``tie_ref`` rides along only to pin the
+    lane count; deterministic ties never consume the uniforms.
+    """
+    a_n = tie_ref.shape[1]
+    rp = qlen_ref.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, rp), 1)
+    valid = lane < replicas
+    n_arr = par_ref[:, 0:1]
+    act = par_ref[:, 1:2] > 0
+    qhead = qhead_ref[...]
+    busy = busy_ref[...]
+
+    def body(a, st):
+        qlen, approx, drops = st
+        live = act & (a < n_arr)
+        if comm == "exact":
+            score = (qlen + busy).astype(jnp.float32)
+        else:
+            score = approx
+        j, _ = seg_argmin(jnp.where(valid, score, jnp.inf))
+        onehot = lane == j
+        len_j = jnp.sum(jnp.where(onehot, qlen, 0), axis=1, keepdims=True)
+        admit = live & (len_j < cap)
+        sel = onehot & admit
+        tail = (
+            jnp.sum(jnp.where(onehot, qhead, 0), axis=1, keepdims=True)
+            + len_j
+        ) % cap
+        qlen = qlen + sel.astype(jnp.int32)
+        approx = approx + sel.astype(jnp.float32)
+        drops = drops + (live & ~admit).astype(jnp.int32)
+        jv_ref[:, pl.dslice(a, 1)] = j
+        tail_ref[:, pl.dslice(a, 1)] = tail
+        admit_ref[:, pl.dslice(a, 1)] = admit.astype(jnp.int32)
+        return qlen, approx, drops
+
+    qlen, approx, drops = jax.lax.fori_loop(
+        0,
+        a_n,
+        body,
+        (qlen_ref[...], approx_ref[...], jnp.zeros((1, 1), jnp.int32)),
+    )
+    qlen_out_ref[...] = qlen
+    approx_out_ref[...] = approx
+    stats_ref[...] = drops
+
+
+def serve_route_pallas(
+    tie_u: jax.Array,
+    q_len: jax.Array,
+    q_head: jax.Array,
+    busy_cnt: jax.Array,
+    approx: jax.Array,
+    n_arr: jax.Array,
+    act: jax.Array,
+    *,
+    cap: int,
+    comm: str,
+    interpret: bool = False,
+):
+    """Route one slot's arrival lanes sequentially (JSAQ, lowest-index ties).
+
+    Args:
+      tie_u: (A,) f32 lane uniforms (unused under deterministic ties; pins
+        the lane count).
+      q_len / q_head: (R,) int32 pending-ring lengths and head indices.
+      busy_cnt: (R,) int32 busy decode-slot counts (the "exact" score term).
+      approx: (R,) f32 emulated occupancy.
+      n_arr: () int32 live arrival count this slot.
+      act: () bool horizon mask.
+      cap: pending-ring capacity (static).
+      comm: the comm kind; "exact" scores on true occupancy.
+      interpret: run the Pallas interpreter (CPU).
+
+    Returns:
+      ``(jv, tailv, admitv, q_len', approx', dropped)``: per-lane routed
+      replica / ring tail / admit flag (shapes (A,)), the post-slot ring
+      lengths and approximation (shapes (R,)), and the () int32 count of
+      dropped lanes.
+    """
+    a_n = tie_u.shape[0]
+    r = q_len.shape[0]
+    rp = lane_pad(r)
+
+    def pad(v, fill):
+        v2 = v[None, :]
+        if rp == r:
+            return v2
+        return jnp.concatenate(
+            [v2, jnp.full((1, rp - r), fill, v2.dtype)], axis=1
+        )
+
+    par = jnp.stack(
+        [n_arr.astype(jnp.int32), act.astype(jnp.int32),
+         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)]
+    )[None, :]
+    kernel = functools.partial(
+        _serve_kernel, replicas=r, cap=cap, comm=comm
+    )
+    jv, tailv, admitv, qlen_o, approx_o, drops = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, a_n), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, a_n), lambda i: (0, 0)),
+            pl.BlockSpec((1, a_n), lambda i: (0, 0)),
+            pl.BlockSpec((1, a_n), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, a_n), jnp.int32),
+            jax.ShapeDtypeStruct((1, a_n), jnp.int32),
+            jax.ShapeDtypeStruct((1, a_n), jnp.int32),
+            jax.ShapeDtypeStruct((1, rp), jnp.int32),
+            jax.ShapeDtypeStruct((1, rp), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        tie_u[None, :],
+        pad(q_len, 0),
+        pad(q_head, 0),
+        pad(busy_cnt, 0),
+        pad(approx, 0.0),
+        par,
+    )
+    return (
+        jv[0],
+        tailv[0],
+        admitv[0].astype(bool),
+        qlen_o[0, :r],
+        approx_o[0, :r],
+        drops[0, 0],
+    )

@@ -33,7 +33,11 @@ def jsaq_route(
 ) -> tuple[jax.Array, jax.Array]:
     """Batched JSAQ dispatch (see kernels/jsaq_route.py).
 
-    Pads the domain axis to the tile size; (D, K) -> ((D,N) idx, (D,K) q').
+    Pads the domain axis to the tile size and the server axis to a full
+    128-lane tile; (D, K) -> ((D,N) idx, (D,K) q').  Pad *lanes* are
+    masked to the dtype's max so the argmin can never route to one (on a
+    real TPU an unmasked lane-tile pad holds undefined values); pad rows
+    are sliced off on the way out.
     """
     if not use_pallas:
         return _ref.jsaq_route_ref(q_app, num_jobs)
@@ -45,8 +49,87 @@ def jsaq_route(
         q_app = jnp.concatenate(
             [q_app, jnp.zeros((pad, k), q_app.dtype)], axis=0
         )
+    kp = _jsaq.lane_pad(k)
+    if kp != k:
+        q_app = jnp.concatenate(
+            [
+                q_app,
+                jnp.full(
+                    (q_app.shape[0], kp - k),
+                    jnp.iinfo(q_app.dtype).max,
+                    q_app.dtype,
+                ),
+            ],
+            axis=1,
+        )
     idx, q_out = _jsaq.jsaq_route_pallas(q_app, num_jobs, interpret=interpret)
-    return idx[:d], q_out[:d]
+    return idx[:d], q_out[:d, :k]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("servers", "cap", "policy", "comm", "interpret"),
+)
+def care_route(
+    arrive: jax.Array,
+    params: jax.Array,
+    *,
+    servers: int,
+    cap: int,
+    policy: str,
+    comm: str,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused mean-field CARE simulation (see kernels/jsaq_route.py).
+
+    (D, T) arrivals + (D, 4) per-domain scalars -> (routed, q_true,
+    per_srv, stats); the pallas ``route_backend`` of
+    ``slotted_sim.simulate_grid`` and the direct entry point for the
+    large-K invariants tests and ``benchmarks/bench_route.py``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _jsaq.care_route_pallas(
+        arrive,
+        params,
+        servers=servers,
+        cap=cap,
+        policy=policy,
+        comm=comm,
+        interpret=interpret,
+    )
+
+
+def serve_route(
+    tie_u: jax.Array,
+    q_len: jax.Array,
+    q_head: jax.Array,
+    busy_cnt: jax.Array,
+    approx: jax.Array,
+    n_arr: jax.Array,
+    act: jax.Array,
+    *,
+    cap: int,
+    comm: str,
+    interpret: bool | None = None,
+):
+    """One serving slot's fused arrival-lane routing (jsaq_route.py).
+
+    Not jitted here: it is called from inside the serving engine's traced
+    scan body (``serve/engine._serve_core``), which owns the jit.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return _jsaq.serve_route_pallas(
+        tie_u,
+        q_len,
+        q_head,
+        busy_cnt,
+        approx,
+        n_arr,
+        act,
+        cap=cap,
+        comm=comm,
+        interpret=interpret,
+    )
 
 
 @functools.partial(

@@ -83,6 +83,7 @@ import numpy as np
 from repro.core.care import comm as comm_lib
 from repro.core.care import routing as routing_lib
 from repro.core.care import workload as workload_lib
+from repro.kernels import ops as kernel_ops
 
 # The serving tier's routing-policy suite (paper Sec 2.1.4 restated for
 # continuous batching).  All policies consume the same state vector JSAQ
@@ -147,6 +148,10 @@ class EngineConfig:
     # Mean request work components; the "drain" policy's E[S] term.
     mean_prefill: float = 4.0
     mean_decode: float = 64.0
+    # Tie-break mode: False = pre-drawn f32-uniform rank (the historical
+    # convention), True = lowest index (the Pallas kernel convention --
+    # see kernels/jsaq_route.py).
+    deterministic_ties: bool = False
 
     def comm_config(self) -> comm_lib.CommConfig:
         """This tier's trigger parameters in shared-core terms."""
@@ -206,6 +211,12 @@ class ServeConfig:
     # (e.g. to the maximum over every seed set a benchmark will submit) so
     # repeat invocations reuse one compiled shape.
     max_arrivals: int = 0
+    # Routing engine for the within-slot arrival-lane loop: "dense" (the
+    # golden lax.scan lane body) or "pallas" (the fused
+    # kernels/jsaq_route.serve_route_pallas kernel; requires policy
+    # "jsaq" and deterministic_ties).  Tie-break mode as in EngineConfig.
+    route_backend: str = "dense"
+    deterministic_ties: bool = False
 
     def rate_scale(self) -> float:
         """Mean decode rate: the capacity multiplier of heterogeneity."""
@@ -238,6 +249,17 @@ class ServeConfig:
                 f"decode_rates has {len(self.decode_rates)} entries for "
                 f"{self.replicas} replicas"
             )
+        if self.route_backend == "pallas":
+            if self.policy != "jsaq":
+                raise ValueError(
+                    f"route_backend='pallas' supports policy 'jsaq' only, "
+                    f"got {self.policy!r}"
+                )
+            if not self.deterministic_ties:
+                raise ValueError(
+                    "route_backend='pallas' requires deterministic_ties="
+                    "True (the kernel breaks ties to the lowest index)"
+                )
         return EngineStatic(
             replicas=self.replicas,
             decode_slots=self.decode_slots,
@@ -251,6 +273,8 @@ class ServeConfig:
             sqd=self.sqd if self.policy == "sqd" else 0,
             use_rates=self.decode_rates is not None,
             max_arrivals=self.max_arrivals,
+            route_backend=self.route_backend,
+            deterministic_ties=self.deterministic_ties,
         )
 
     def scenario(self) -> "EngineScenario":
@@ -281,6 +305,7 @@ class ServeConfig:
             decode_rates=self.decode_rates,
             mean_prefill=float(self.mean_prefill),
             mean_decode=float(self.mean_decode),
+            deterministic_ties=self.deterministic_ties,
         )
 
     def workload_key(self) -> tuple:
@@ -326,6 +351,8 @@ class EngineStatic:
     use_rates: bool = False
     max_arrivals: int = 0
     trace_occupancy: bool = False
+    route_backend: str = "dense"  # "dense" | "pallas" (see ServeConfig)
+    deterministic_ties: bool = False
 
 
 @jax.tree_util.register_dataclass
@@ -480,13 +507,22 @@ def workload_for(cell: ServeConfig, seed: int) -> ServeWorkload:
 
 
 def pick_min_tied(
-    occ: np.ndarray, u: float, mask: Optional[np.ndarray] = None
+    occ: np.ndarray,
+    u: float,
+    mask: Optional[np.ndarray] = None,
+    deterministic: bool = False,
 ) -> int:
     """Index of the minimum of ``occ``; ties broken by the uniform ``u``.
 
     The rank is computed in float32 (``int(f32(u) * f32(n_ties))``) so the
     traced f32 engine reproduces the choice bit for bit; ``u`` must come
     from a float32 draw (``ServeWorkload.tie_u``) for that guarantee.
+
+    ``deterministic=True`` ignores ``u`` and resolves ties to the lowest
+    index -- the Pallas routing-kernel convention (rank 0 in the shared
+    rank arithmetic), so every backend of the serving tier (this numpy
+    reference, the traced lane, the fused kernel) picks the same replica
+    on the same state vector.
 
     ``mask`` (optional, bool ``(R,)``) restricts the minimum to a candidate
     subset -- the SQ(d) path: non-candidates are lifted to ``+inf`` before
@@ -500,6 +536,8 @@ def pick_min_tied(
             return -1
         occ = np.where(mask, occ, np.inf)
     ties = np.flatnonzero(occ == occ.min())
+    if deterministic:
+        return int(ties[0])
     rank = min(int(np.float32(u) * np.float32(len(ties))), len(ties) - 1)
     return int(ties[rank])
 
@@ -657,16 +695,17 @@ class CareDispatcher:
         else:
             if u is None:
                 u = self.rng.random(dtype=np.float32)
+            det = cfg.deterministic_ties
             if cfg.policy == "sqd":
                 if sub_u is None:
                     sub_u = self.rng.random(size=SQD_MAX, dtype=np.float32)
                 mask = subset_mask(sub_u, cfg.num_replicas, cfg.sqd, xp=np)
                 self.last_subset = mask
-                j = pick_min_tied(occ, u, mask=mask)
+                j = pick_min_tied(occ, u, mask=mask, deterministic=det)
             elif cfg.policy == "drain":
-                j = pick_min_tied(occ * self._drain_slots, u)
+                j = pick_min_tied(occ * self._drain_slots, u, deterministic=det)
             else:  # jsaq
-                j = pick_min_tied(occ, u)
+                j = pick_min_tied(occ, u, deterministic=det)
         if self._q_len[j] >= self._qcap:
             self._grow_queues()
         self._ensure_rid(req.rid)
@@ -907,11 +946,16 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
                     cand = subset_mask(sub_l, r_n, static.sqd, xp=jnp)
                     score = jnp.where(cand, score, jnp.inf)
                 is_min = score == jnp.min(score)
-                n_ties = jnp.sum(is_min, dtype=jnp.int32)
-                rank = jnp.minimum(
-                    (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
-                    n_ties - 1,
-                )
+                if static.deterministic_ties:
+                    # Lowest-index ties: rank 0 in the shared rank
+                    # arithmetic (the Pallas kernel convention).
+                    rank = jnp.zeros((), jnp.int32)
+                else:
+                    n_ties = jnp.sum(is_min, dtype=jnp.int32)
+                    rank = jnp.minimum(
+                        (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
+                        n_ties - 1,
+                    )
                 cum = jnp.cumsum(is_min.astype(jnp.int32))
                 j = jnp.argmax(cum == rank + 1).astype(jnp.int32)
             onehot = rep_idx == j
@@ -927,10 +971,23 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
             dropped = dropped + (live & ~admit).astype(jnp.int32)
             return (q_len, approx, rr_ptr, dropped), (j, tail, admit)
 
-        lane_xs = (tie_t, sub_t, jnp.arange(a_n, dtype=jnp.int32))
-        (q_len, approx, rr_ptr, dropped), (jv, tailv, admitv) = jax.lax.scan(
-            lane, (q_len, approx, rr_ptr, dropped), lane_xs
-        )
+        if static.route_backend == "pallas":
+            # Fused arrival-lane routing: the kernel's fori_loop over lanes
+            # replaces the inner scan, carrying the same (q_len, approx)
+            # state and emitting the same deferred scatter operands.  The
+            # rr pointer is untouched (the pallas path is jsaq-only).
+            jv, tailv, admitv, q_len, approx, d_drop = kernel_ops.serve_route(
+                tie_t, q_len, q_head, busy_cnt, approx, n_arr_t, act,
+                cap=c_n, comm=static.comm,
+            )
+            dropped = dropped + d_drop
+        else:
+            lane_xs = (tie_t, sub_t, jnp.arange(a_n, dtype=jnp.int32))
+            (q_len, approx, rr_ptr, dropped), (jv, tailv, admitv) = (
+                jax.lax.scan(
+                    lane, (q_len, approx, rr_ptr, dropped), lane_xs
+                )
+            )
         jv = jnp.where(admitv, jv, r_n)  # out of bounds -> dropped scatter
         q_work = q_work.at[jv, tailv].set(work_t, mode="drop")
         q_rid = q_rid.at[jv, tailv].set(rid_t, mode="drop")
@@ -1180,10 +1237,12 @@ def serve_grid(
         cs = cell.static_part()
         if (
             cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm,
-            cs.policy, cs.sqd, cs.use_rates,
+            cs.policy, cs.sqd, cs.use_rates, cs.route_backend,
+            cs.deterministic_ties,
         ) != (
             static.replicas, static.decode_slots, static.queue_cap,
             static.comm, static.policy, static.sqd, static.use_rates,
+            static.route_backend, static.deterministic_ties,
         ):
             raise ValueError(
                 f"cell static part {cs} does not match grid static {static}"

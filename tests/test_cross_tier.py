@@ -142,6 +142,62 @@ class TestJsaqConsistency:
         assert total >= 200
 
 
+class TestDeterministicTies:
+    """Unified lowest-index tie-breaking across all three route paths.
+
+    Under ``deterministic_ties`` every backend -- the slotted
+    ``routing.route``, the serving ``pick_min_tied`` and the Pallas
+    kernel's segmented argmin -- must agree on *every* decision, ties
+    included (no forced-decision filtering): they all resolve to the
+    lowest index, which is what makes dense-vs-kernel bit-parity
+    assertable at all.
+    """
+
+    def test_all_three_paths_agree_on_ties(self):
+        from repro.kernels import ops as kernel_ops
+
+        rng = np.random.default_rng(5)
+        for trial in range(30):
+            k = int(rng.integers(2, 40))
+            occ = rng.integers(0, 4, size=k).astype(np.int64)  # many ties
+            j_ref = int(np.argmin(occ))  # lowest index among minima
+            j_slot = _slotted_decision_det(occ)
+            j_serve = engine.pick_min_tied(
+                occ.astype(np.float32), np.float32(rng.random()),
+                deterministic=True,
+            )
+            idx, _ = kernel_ops.jsaq_route(
+                jnp.asarray(occ.astype(np.int32))[None, :], 1,
+                interpret=True,
+            )
+            j_kern = int(np.asarray(idx)[0, 0])
+            assert j_slot == j_serve == j_kern == j_ref, (
+                f"trial {trial}: occ={occ} slotted={j_slot} "
+                f"serving={j_serve} kernel={j_kern} ref={j_ref}"
+            )
+
+    def test_u_is_ignored(self):
+        occ = np.asarray([2.0, 1.0, 1.0, 1.0], np.float32)
+        picks = {
+            engine.pick_min_tied(occ, np.float32(u), deterministic=True)
+            for u in (0.0, 0.3, 0.6, 0.999)
+        }
+        assert picks == {1}
+
+
+def _slotted_decision_det(occ):
+    """The slotted tier's deterministic-ties route step."""
+    j, _ = routing_lib.route(
+        "jsaq",
+        q_true=jnp.asarray(occ),
+        q_app=jnp.asarray(occ),
+        rr_ptr=jnp.zeros((), jnp.int32),
+        key=jax.random.key(0),
+        deterministic=True,
+    )
+    return int(j)
+
+
 class TestSqdConsistency:
     @pytest.mark.parametrize("comm", ["exact", "et"])
     @pytest.mark.parametrize("d", [2, 3])

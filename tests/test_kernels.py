@@ -46,6 +46,40 @@ class TestJsaqRoute:
             np.asarray(q_out.sum(axis=1)), np.asarray(q.sum(axis=1)) + 17
         )
 
+    @pytest.mark.parametrize("k", [130, 200, 300])
+    def test_lane_tile_segmented(self, k):
+        # K beyond one 128-lane tile exercises the segmented reduction
+        # (per-tile argmin + cross-tile combine) and the lane padding.
+        q = jax.random.randint(jax.random.key(k), (8, k), 0, 50, jnp.int32)
+        idx_p, q_p = ops.jsaq_route(q, 9, interpret=True)
+        idx_r, q_r = ref.jsaq_route_ref(q, 9)
+        np.testing.assert_array_equal(np.asarray(idx_p), np.asarray(idx_r))
+        np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_r))
+
+    def test_pad_lanes_never_win(self):
+        # K not a multiple of 128: the wrapper must mask pad lanes to the
+        # dtype max so the argmin can never route to one, even when every
+        # real queue is huge (on a real TPU unmasked pads are undefined).
+        q = jnp.full((8, 130), 10**6, jnp.int32)
+        idx_p, q_p = ops.jsaq_route(q, 32, interpret=True)
+        assert (np.asarray(idx_p) < 130).all()
+        np.testing.assert_array_equal(
+            np.asarray(q_p.sum(axis=1)), 130 * 10**6 + 32
+        )
+
+    def test_ties_lowest_index(self):
+        # Segmented cross-tile combine must pick the lowest *global* index
+        # among tied minima (matching jnp.argmin), not the lowest lane
+        # within the winning tile.
+        q = jnp.full((8, 260), 7, jnp.int32)
+        q = q.at[:, 3].set(1).at[:, 200].set(1)
+        idx_p, _ = ops.jsaq_route(q, 1, interpret=True)
+        np.testing.assert_array_equal(np.asarray(idx_p[:, 0]), 3)
+        # And when only a later tile holds the minimum:
+        q2 = jnp.full((8, 260), 7, jnp.int32).at[:, 200].set(1)
+        idx2, _ = ops.jsaq_route(q2, 1, interpret=True)
+        np.testing.assert_array_equal(np.asarray(idx2[:, 0]), 200)
+
 
 class TestMoeRoute:
     @pytest.mark.parametrize("t", [128, 256])
