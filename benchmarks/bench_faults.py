@@ -1,0 +1,302 @@
+"""Fault-injection tier: CARE under degraded networks and server faults.
+
+Three row families measure the degraded control plane end to end:
+
+* ``faults/delay*`` -- the **delay frontier** (slotted tier): CARE
+  (JSAQ over ET-3 corrections) vs fresh-but-stale SQ(2) (per-arrival
+  queries billed as 2d in-band round-trips, answers stale by the same
+  delivery delay) under 1/4/8/16-slot delays.  Every knob of the ladder
+  (delay, jitter, drop, thresholds) is a traced ``Scenario`` operand, so
+  each policy's whole ladder shares one compiled program
+  (``faults/grid_compile_count``).  The ``faults/frontier`` headline
+  claims the paper's robustness story: once the network is slow enough
+  that SQ(d)'s answers go stale in flight (>= 4 slots here), event-driven
+  CARE corrections hold a *lower* JCT at *no more* than SQ(d)'s message
+  rate -- queries pay 2d messages per arrival for state that is exactly
+  as stale as the pushed corrections.
+
+* ``faults/drop*`` -- the **loss ladder**: i.i.d. delivery-drop
+  probabilities 0 -> 0.5 at a fixed 2-slot delay.  Lost corrections are
+  billed on the wire (the sender cannot know) and never retransmitted;
+  the rows record how gracefully JCT degrades as the update stream thins.
+
+* ``faults/crash_recovery`` -- **graceful degradation** (numpy serving
+  engine, engineered fault stream): one replica crash-stops at a known
+  slot and recovers later.  Three runs replay the identical workload:
+  fault-free control, crash with suspect masking
+  (``suspect_age`` staleness timeout), and crash with masking disabled.
+  The headline bool claims post-recovery mean JCT with masking within
+  10% of the fault-free control -- the resync force-send plus suspect
+  exclusion contain the damage to the outage window.  Full mode adds a
+  stochastic crash/recovery ladder on the slotted tier (the heavy
+  ``slow`` cells -- excluded from the ``--quick`` CI baseline).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.care import slotted_sim
+from repro.serve import engine
+
+DELAYS = (1, 4, 8, 16)
+DROPS = (0.0, 0.1, 0.3, 0.5)
+
+# Paper Section 9.1 setting; load 0.95 is where staleness hurts most.
+_SLOTTED = dict(servers=30, load=0.95, mean_service=30)
+
+
+def _care_cell(slots: int, **kw) -> slotted_sim.SimConfig:
+    return slotted_sim.SimConfig(
+        slots=slots, policy="jsaq", comm="et", x=3, network="net",
+        **_SLOTTED, **kw,
+    )
+
+
+def _sqd_cell(slots: int, **kw) -> slotted_sim.SimConfig:
+    # SQ(2) routes on per-arrival queries (2d round-trips billed in-band,
+    # answers stale by the delivery delay); the balancer-side stream it
+    # would otherwise listen to is throttled to a negligible RT trickle.
+    return slotted_sim.SimConfig(
+        slots=slots, policy="sq2", comm="rt", rt_rate=1e-4, network="net",
+        **_SLOTTED, **kw,
+    )
+
+
+def _mean(vals) -> float:
+    return float(np.mean(vals))
+
+
+def _jct_msgs(per_seed, slots: int) -> tuple[float, float]:
+    """(mean JCT, messages per slot) averaged across seeds."""
+    jct = _mean([float(r.jct.mean()) if r.jct.size else 0.0 for r in per_seed])
+    msgs = _mean([r.messages / slots for r in per_seed])
+    return jct, msgs
+
+
+def _crash_workload(cfg: engine.EngineConfig, slots: int, crash_at: int,
+                    recover_at: int, target: int, seed: int):
+    """The shared workload with an engineered single-crash fault stream.
+
+    ``fault_u`` is forced quiet everywhere except one crash draw at
+    ``crash_at`` and one recovery draw at ``recover_at`` for ``target``;
+    the arrival / tie-break / subset streams are the untouched
+    ``SeedSequence`` children, so the fault-free control replays the
+    exact same offered load.
+    """
+    wl = engine.sample_workload(
+        seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
+        slots=slots, load=0.85, mean_prefill=4, mean_decode=28,
+        with_fault=True,
+    )
+    fu = wl.fault_u
+    fu[:] = 0.9  # quiet: above both rates, no transition fires
+    fu[crash_at, target] = 0.0
+    fu[recover_at, target] = 0.0
+    return wl
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = common.sim_slots(quick)
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    rows: list[dict] = []
+
+    # --- delay frontier: CARE ET-3 vs fresh-but-stale SQ(2) ------------
+    progs_before = slotted_sim.grid_compile_count()
+    named = [
+        (f"delay{d}/{tag}", mk(slots, net_delay=d))
+        for d in DELAYS
+        for tag, mk in (("care_et", _care_cell), ("sqd", _sqd_cell))
+    ]
+    results, walls = common.timed_simulate_grid([c for _, c in named], seeds)
+    frontier: dict = {}
+    for (name, _), per_seed, wall in zip(named, results, walls):
+        jct, msgs = _jct_msgs(per_seed, slots)
+        frontier[name] = (jct, msgs)
+        rows.append(
+            common.row(
+                f"faults/{name}",
+                wall,
+                slots,
+                common.fmt_derived(
+                    mean_jct=jct,
+                    msgs_per_slot=msgs,
+                    net_drops=int(np.sum([r.net_drops for r in per_seed])),
+                    seeds=len(seeds),
+                ),
+                mean_jct=jct,
+                msgs_per_slot=msgs,
+            )
+        )
+    # Headline: at every delay >= 4, CARE holds lower JCT at no more than
+    # SQ(d)'s message rate.
+    slow = [d for d in DELAYS if d >= 4]
+    care_wins = all(
+        frontier[f"delay{d}/care_et"][0] < frontier[f"delay{d}/sqd"][0]
+        and frontier[f"delay{d}/care_et"][1] <= frontier[f"delay{d}/sqd"][1]
+        for d in slow
+    )
+    d_ref = slow[0]
+    rows.append(
+        common.row(
+            "faults/frontier",
+            0.0,
+            slots,
+            common.fmt_derived(
+                care_beats_stale_sqd=care_wins,
+                jct_ratio_d4=frontier[f"delay{d_ref}/care_et"][0]
+                / max(frontier[f"delay{d_ref}/sqd"][0], 1e-9),
+                msg_ratio_d4=frontier[f"delay{d_ref}/care_et"][1]
+                / max(frontier[f"delay{d_ref}/sqd"][1], 1e-9),
+                delays_checked=len(slow),
+            ),
+            care_beats_stale_sqd=care_wins,
+        )
+    )
+
+    # --- drop ladder at a fixed 2-slot delay ---------------------------
+    # Same static group as the CARE frontier cells: only traced operands
+    # (delay, drop) differ, so the ladder reuses the compiled program.
+    drop_named = [
+        (f"drop{p}", _care_cell(slots, net_delay=2, net_drop=p))
+        for p in DROPS
+    ]
+    d_results, d_walls = common.timed_simulate_grid(
+        [c for _, c in drop_named], seeds
+    )
+    for (name, _), per_seed, wall in zip(drop_named, d_results, d_walls):
+        jct, msgs = _jct_msgs(per_seed, slots)
+        rows.append(
+            common.row(
+                f"faults/{name}",
+                wall,
+                slots,
+                common.fmt_derived(
+                    mean_jct=jct,
+                    msgs_per_slot=msgs,
+                    net_drops=int(np.sum([r.net_drops for r in per_seed])),
+                    seeds=len(seeds),
+                ),
+                mean_jct=jct,
+            )
+        )
+    programs = slotted_sim.grid_compile_count() - progs_before
+    rows.append(
+        common.row(
+            "faults/grid_compile_count",
+            0.0,
+            slots,
+            common.fmt_derived(
+                programs=programs,
+                cells=len(named) + len(drop_named),
+                # One program per (policy, comm) static group: CARE
+                # (shared by frontier + drop ladder) and SQ(2).
+                fused=programs <= 2,
+            ),
+            programs=programs,
+            fused=programs <= 2,
+        )
+    )
+
+    # --- crash/recovery: engineered outage on the serving engine -------
+    c_slots = 2_500 if quick else 4_000
+    crash_at, recover_at = c_slots // 4, c_slots // 2
+    # Post-recovery window: start a quarter-horizon past the recovery so
+    # the outage backlog (the crashed replica's frozen queue plus what the
+    # survivors absorbed) has drained and the tail measures the restored
+    # steady state, not the catch-up transient.
+    window = recover_at + c_slots // 4
+    # msr_drain = decode_slots / mean_work = 8/32: the MSR emulation must
+    # match the nominal per-replica completion rate (see bench_serving).
+    # comm="et_rt": the suspect timeout only works on top of the RT
+    # keepalive -- a healthy replica is guaranteed a message every
+    # rt_period slots, so age > suspect_age (> rt_period) singles out the
+    # crashed one instead of whoever ET happened to keep quiet.
+    base = dict(num_replicas=8, decode_slots=8, comm="et_rt", et_x=3,
+                rt_period=8, mean_prefill=4.0, mean_decode=28.0,
+                msr_drain=0.25)
+    variants = (
+        ("fault_free", dict(fault="none")),
+        ("suspect_on", dict(fault="crash", crash_rate=0.5, recover_rate=0.5,
+                            suspect_age=16)),
+        ("suspect_off", dict(fault="crash", crash_rate=0.5, recover_rate=0.5)),
+    )
+    tail_jct: dict = {}
+    for name, kw in variants:
+        cfg = engine.EngineConfig(**base, **kw)
+        wl = _crash_workload(cfg, c_slots, crash_at, recover_at,
+                             target=3, seed=0)
+        t0 = time.perf_counter()
+        out = engine.run_serving_sim(
+            cfg, slots=c_slots, load=0.85, mean_prefill=4, mean_decode=28,
+            seed=0, workload=wl,
+        )
+        wall = time.perf_counter() - t0
+        jbr, arr = out["jct_by_rid"], wl.arrival_slot
+        in_tail = (arr >= window) & (jbr >= 0)
+        tail = float(jbr[in_tail].mean()) if in_tail.any() else 0.0
+        tail_jct[name] = tail
+        rows.append(
+            common.row(
+                f"faults/crash/{name}",
+                wall,
+                c_slots,
+                common.fmt_derived(
+                    tail_mean_jct=tail,
+                    mean_jct=out["mean_jct"],
+                    completed=out["completed"],
+                    messages=out["messages"],
+                ),
+                tail_mean_jct=tail,
+            )
+        )
+    ratio = tail_jct["suspect_on"] / max(tail_jct["fault_free"], 1e-9)
+    rows.append(
+        common.row(
+            "faults/crash_recovery",
+            0.0,
+            c_slots,
+            common.fmt_derived(
+                recovered_within_10pct=ratio <= 1.1,
+                tail_jct_ratio=ratio,
+                unmasked_ratio=tail_jct["suspect_off"]
+                / max(tail_jct["fault_free"], 1e-9),
+            ),
+            recovered_within_10pct=ratio <= 1.1,
+        )
+    )
+
+    # --- stochastic crash ladder (full mode only: the heavy cells) -----
+    # The pytest twin of these cells is marked ``slow``; here the gate is
+    # ``--quick``, so the CI baseline never records them and full runs
+    # may take the wall hit.
+    if not quick:
+        ladder = [
+            (f"crash_rate{cr}", slotted_sim.SimConfig(
+                slots=slots, policy="jsaq", comm="et", x=3, fault="crash",
+                crash_rate=cr, recover_rate=0.01, suspect_age=32,
+                **_SLOTTED,
+            ))
+            for cr in (1e-5, 1e-4, 5e-4)
+        ]
+        l_results, l_walls = common.timed_simulate_grid(
+            [c for _, c in ladder], seeds
+        )
+        for (name, _), per_seed, wall in zip(ladder, l_results, l_walls):
+            jct, msgs = _jct_msgs(per_seed, slots)
+            rows.append(
+                common.row(
+                    f"faults/{name}",
+                    wall,
+                    slots,
+                    common.fmt_derived(
+                        mean_jct=jct,
+                        msgs_per_slot=msgs,
+                        seeds=len(seeds),
+                    ),
+                    mean_jct=jct,
+                )
+            )
+    return rows

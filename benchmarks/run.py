@@ -42,6 +42,7 @@ The mapping to paper artifacts:
   bench_heavy_tail      -> beyond-paper: ET-x under Pareto job sizes
   bench_moe_balance     -> beyond-paper: CARE balancer in MoE training
   bench_serving         -> beyond-paper: CARE dispatch in serving
+  bench_faults          -> beyond-paper: degraded networks + server faults
   bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -75,6 +76,7 @@ BENCHES = [
     "bench_moe_balance",
     "bench_serving",
     "bench_route",
+    "bench_faults",
     "bench_roofline",
 ]
 

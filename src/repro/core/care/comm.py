@@ -47,6 +47,11 @@ import jax.numpy as jnp
 
 CommKind = Literal["none", "rt", "dt", "et", "et_rt", "exact"]
 
+# Control-plane network model kinds: "none" keeps today's instant lossless
+# delivery (bit-identical, zero overhead); "net" routes every message
+# through the traced delay/jitter/drop model of :func:`net_step`.
+NetworkKind = Literal["none", "net"]
+
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
@@ -144,6 +149,10 @@ def evaluate(
     err,
     new_deps,
     xp=jnp,
+    *,
+    can_send=None,
+    force=None,
+    count_msgs: bool = True,
 ) -> Tuple[Any, CommState]:
     """Advance the pattern by one slot and evaluate the trigger.
 
@@ -160,6 +169,17 @@ def evaluate(
       err: ``(K,)`` current approximation error per server (any real dtype).
       new_deps: ``(K,)`` departures that completed this slot (int).
       xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.
+      can_send: optional ``(K,)`` bool -- servers able to send this slot.
+        Crashed servers (fault process) pass ``False`` here: their trigger is
+        suppressed but the underlying counters keep advancing, so the very
+        first healthy slot re-fires any due trigger (resync retry path).
+      force: optional ``(K,)`` bool -- servers that must send regardless of
+        the trigger predicate (resync-on-recovery).  Applied before
+        ``can_send``.
+      count_msgs: when ``False`` the trigger *intent* is returned but
+        ``msgs`` is left untouched -- the network model (:func:`net_step`)
+        owns message accounting because piggyback batching makes
+        sends-on-the-wire differ from trigger events.
 
     Returns:
       ``(triggered, state')`` where ``triggered`` is a ``(K,)`` bool mask of
@@ -178,8 +198,14 @@ def evaluate(
         new_deps=new_deps,
         xp=xp,
     )
+    if force is not None:
+        triggered = triggered | force
+    if can_send is not None:
+        triggered = triggered & can_send
 
-    if cfg.kind == "exact":
+    if not count_msgs:
+        sent = xp.zeros((), xp.int32)
+    elif cfg.kind == "exact":
         # Full state information costs one message per departure (Prop 6.1),
         # even when several departures share a slot.
         sent = xp.sum(new_deps, dtype=xp.int32)
@@ -191,3 +217,260 @@ def evaluate(
         slots_since_msg=xp.where(triggered, 0, slots_since),
         msgs=state.msgs + sent,
     )
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    """Control-plane network model: static kind, traced numeric operands.
+
+    Mirrors :class:`CommConfig`'s static-kind/traced-operand split.  With
+    ``kind="none"`` no :class:`NetState` exists and delivery is today's
+    instant lossless path, bit-identical.  With ``kind="net"`` every
+    server->balancer message traverses :func:`net_step`:
+
+    * ``delay`` -- deterministic delivery delay in slots (RTT/2; a message
+      sent in slot t is applied at the balancer in slot ``t + delay``).
+    * ``jitter`` -- additional uniform integer delay in ``[0, jitter]``,
+      sampled i.i.d. per message.
+    * ``drop`` -- i.i.d. probability a sent message is lost in flight.  A
+      lost message still costs one message on the wire; no ack exists, so
+      recovery relies on the trigger re-firing (ET re-arms as error keeps
+      growing; RT/et_rt re-fires after ``rt_period`` slots).
+
+    All three may be Python numbers or traced scalars, so a delay x drop
+    ladder shares one compiled program.
+    """
+
+    kind: NetworkKind = "none"
+    delay: Any = 0
+    jitter: Any = 0
+    drop: Any = 0.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NetState:
+    """Per-server in-flight message buffer, shape ``(K,)`` (+ scalar totals).
+
+    Each server has one in-flight slot (messages are tiny and serialised per
+    sender): ``timer`` counts down the slots until the in-flight message is
+    applied at the balancer (``-1`` = nothing in flight), ``payload`` carries
+    the state snapshot taken at send time, and ``pending`` marks a trigger
+    that fired while a message was already in flight -- it is *piggybacked*:
+    batched behind the in-flight message and sent (with a fresh snapshot)
+    the slot the channel frees up, costing one message no matter how many
+    triggers queued.  ``age`` counts slots since the balancer last received
+    an update from each server -- the staleness clock the suspect-server
+    timeout reads.  ``drops`` totals messages lost in flight.
+    """
+
+    timer: Any  # (K,) int32, -1 = idle
+    payload: Any  # (K,) snapshot in flight (payload dtype is tier-specific)
+    pending: Any  # (K,) bool, queued trigger to piggyback
+    age: Any  # (K,) int32 slots since last delivered update
+    drops: Any  # () int32 total messages lost
+
+    @staticmethod
+    def init(k: int, xp=jnp, payload_dtype=None) -> "NetState":
+        dtype = payload_dtype if payload_dtype is not None else xp.int32
+        return NetState(
+            timer=xp.full((k,), -1, xp.int32),
+            payload=xp.zeros((k,), dtype),
+            pending=xp.zeros((k,), bool),
+            age=xp.zeros((k,), xp.int32),
+            drops=xp.zeros((), xp.int32),
+        )
+
+
+def net_step(
+    state: NetState,
+    cfg: NetworkConfig,
+    triggered,
+    payload_now,
+    drop_u,
+    jit_u,
+    xp=jnp,
+) -> Tuple[Any, Any, Any, NetState]:
+    """Advance the network by one slot: send, fly, drop, deliver, piggyback.
+
+    Written against the shared numpy/jax array namespace like
+    :func:`evaluate`, so the jax scans and the numpy ``CareDispatcher``
+    reference share one delivery semantics bit-for-bit.
+
+    Per-slot order (all vectorised over the server axis):
+
+    1. in-flight messages with ``timer == 0`` are *due* this slot;
+    2. a server sends iff its channel is free (idle or due) and it either
+       triggered now or has a ``pending`` piggybacked trigger -- the send
+       snapshots ``payload_now`` (fresh state, not the stale queued one);
+    3. each send costs one message; with probability ``drop`` it is lost
+       (counted in ``drops``, never delivered, channel stays idle so the
+       next trigger can retry);
+    4. surviving sends draw ``delay + U{0..jitter}`` total delay: zero-delay
+       sends deliver *this slot* (the ``none``-kind instant path, which is
+       what makes a zero-operand ``net`` cell bit-identical to ``none``),
+       positive-delay sends enter the in-flight buffer;
+    5. due messages deliver; ``age`` resets for delivered servers and
+       advances otherwise.
+
+    Args:
+      state: current :class:`NetState`.
+      cfg: :class:`NetworkConfig` with ``kind == "net"``.
+      triggered: ``(K,)`` bool trigger intents from :func:`evaluate`.
+      payload_now: ``(K,)`` current true state to snapshot on send.
+      drop_u: ``(K,)`` f32 i.i.d. uniforms for the drop draw.
+      jit_u: ``(K,)`` f32 i.i.d. uniforms for the jitter draw.
+      xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.
+
+    Returns:
+      ``(delivered, out_payload, sent, state')``: ``delivered`` is the
+      ``(K,)`` bool mask of servers whose update reaches the balancer this
+      slot, ``out_payload`` the snapshot to apply for those servers, and
+      ``sent`` the () int32 count of messages put on the wire this slot
+      (the caller adds it to ``CommState.msgs``).
+    """
+    in_flight = state.timer >= 0
+    due = in_flight & (state.timer == 0)
+    free = ~in_flight | due
+
+    send = (triggered | state.pending) & free
+    # Triggers arriving while the channel is busy queue up for piggybacking;
+    # a send clears the queue (the fresh snapshot covers everything queued).
+    pending = (state.pending | triggered) & ~send
+
+    lost = send & (drop_u < cfg.drop)
+    # f32 jitter draw: u in [0,1) so floor(u * (jitter+1)) <= jitter.
+    extra = (jit_u * xp.asarray(cfg.jitter + 1, xp.float32)).astype(xp.int32)
+    total_delay = xp.asarray(cfg.delay, xp.int32) + extra
+
+    enq = send & ~lost
+    instant = enq & (total_delay == 0)
+    flying = enq & (total_delay > 0)
+
+    delivered = due | instant
+    # Two distinct payloads on a handoff slot (a due delivery coinciding
+    # with a new send): the *delivered* snapshot is the due message's
+    # send-time payload (or the fresh one for an instant send, which
+    # lands later within the slot and wins), while the *stored* snapshot
+    # is the new send's -- the due payload must not be overwritten
+    # before it is read.
+    out_payload = xp.where(instant, payload_now, state.payload)
+    stored = xp.where(flying | instant, payload_now, state.payload)
+
+    timer = xp.where(
+        flying,
+        total_delay - 1,
+        xp.where(in_flight & ~due, state.timer - 1, -1),
+    ).astype(xp.int32)
+
+    sent = xp.sum(send, dtype=xp.int32)
+    return delivered, out_payload, sent, NetState(
+        timer=timer,
+        payload=stored,
+        pending=pending,
+        age=xp.where(delivered, 0, state.age + 1).astype(xp.int32),
+        drops=state.drops + xp.sum(lost, dtype=xp.int32),
+    )
+
+
+def validate_control_plane(
+    *,
+    network: str = "none",
+    net_delay: float = 0,
+    net_jitter: float = 0,
+    net_drop: float = 0.0,
+    suspect_age: float = 0,
+    fault: str = "none",
+    crash_rate: float = 0.0,
+    recover_rate: float = 0.0,
+    slow_factor: float = 1.0,
+) -> None:
+    """Reject invalid network/fault operands at config-validation time.
+
+    Called from the host-side config entry points of both tiers
+    (``SimConfig``/``Scenario.create`` and ``ServeConfig``/
+    ``EngineConfig``) before anything is traced, mirroring the
+    ``route_backend="pallas"`` corner-pinning style: every error names the
+    offending field and the fix.
+    """
+    if network not in ("none", "net"):
+        raise ValueError(
+            f"unknown network kind: {network!r} (expected 'none' or 'net')"
+        )
+    if fault not in ("none", "crash", "slow"):
+        raise ValueError(
+            f"unknown fault kind: {fault!r} "
+            "(expected 'none', 'crash' or 'slow')"
+        )
+    if net_delay < 0:
+        raise ValueError(f"net_delay must be >= 0 slots, got {net_delay}")
+    if net_jitter < 0:
+        raise ValueError(f"net_jitter must be >= 0 slots, got {net_jitter}")
+    if net_drop < 0:
+        raise ValueError(
+            f"net_drop is a probability and must be >= 0, got {net_drop}"
+        )
+    if net_drop >= 1:
+        raise ValueError(
+            f"net_drop must be < 1, got {net_drop} -- a drop probability of"
+            " 1 loses every message and no trigger retry can ever land"
+        )
+    if suspect_age < 0:
+        raise ValueError(
+            f"suspect_age must be >= 0 slots (0 disables suspect masking),"
+            f" got {suspect_age}"
+        )
+    if network == "none":
+        for field, val in (
+            ("net_delay", net_delay),
+            ("net_jitter", net_jitter),
+            ("net_drop", net_drop),
+        ):
+            if val != 0:
+                raise ValueError(
+                    f"{field}={val} has no effect with network='none';"
+                    " set network='net' to model the control plane"
+                )
+    if not 0.0 <= crash_rate <= 1.0:
+        raise ValueError(
+            f"crash_rate is a per-slot probability in [0, 1], got {crash_rate}"
+        )
+    if not 0.0 <= recover_rate <= 1.0:
+        raise ValueError(
+            f"recover_rate is a per-slot probability in [0, 1],"
+            f" got {recover_rate}"
+        )
+    if crash_rate > 0 and recover_rate == 0:
+        raise ValueError(
+            "recover_rate must be > 0 when crash_rate > 0 -- with"
+            f" recover_rate=0 every crashed server (crash_rate={crash_rate})"
+            " stays down forever and the system drains to zero capacity"
+        )
+    if slow_factor <= 0 or slow_factor > 1:
+        raise ValueError(
+            f"slow_factor scales service_rates and must be in (0, 1],"
+            f" got {slow_factor}"
+        )
+    if fault == "none":
+        for field, val, neutral in (
+            ("crash_rate", crash_rate, 0.0),
+            ("recover_rate", recover_rate, 0.0),
+            ("slow_factor", slow_factor, 1.0),
+        ):
+            if val != neutral:
+                raise ValueError(
+                    f"{field}={val} has no effect with fault='none';"
+                    " set fault='crash' or fault='slow'"
+                )
+    if fault == "crash" and slow_factor != 1.0:
+        raise ValueError(
+            f"slow_factor={slow_factor} has no effect with fault='crash';"
+            " use fault='slow' for transient slowdowns"
+        )
+    if suspect_age > 0 and network == "none" and fault == "none":
+        raise ValueError(
+            "suspect_age > 0 needs a modeled control plane -- with"
+            " network='none' and fault='none' updates are instant and"
+            " servers never fail, so the staleness timeout would only"
+            " mis-mask idle servers; enable network='net' and/or a fault"
+            " kind"
+        )

@@ -42,8 +42,26 @@ def argmin_random_ties(q: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
     return jnp.argmax(score).astype(jnp.int32)
 
 
+def mask_scores(score: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Lift masked-out candidates' scores to ``+inf`` (suspect exclusion).
+
+    ``mask`` marks *eligible* servers.  An all-``False`` mask falls back to
+    all-eligible -- when every server looks suspect the balancer has no
+    information to discriminate on, so it degrades to the unmasked policy
+    rather than routing nowhere.  Scores are cast to float32 first (exact
+    for integer queue lengths below 2**24, so tie sets -- and therefore
+    decisions -- are identical to the integer path when the mask is
+    all-``True``).
+    """
+    mask = jnp.where(jnp.any(mask), mask, True)
+    return jnp.where(mask, score.astype(jnp.float32), jnp.inf)
+
+
 def route_shortest(
-    q: jnp.ndarray, key: jax.Array, deterministic: bool = False
+    q: jnp.ndarray,
+    key: jax.Array,
+    deterministic: bool = False,
+    mask: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """JSQ / JSAQ: join the shortest (approximated) queue.
 
@@ -52,18 +70,36 @@ def route_shortest(
     (``kernels/jsaq_route.py``), so the dense path can be compared to the
     kernel path decision for decision.  The key is still accepted (and
     ignored) so the callers' stream plumbing is identical either way.
+    ``mask`` (optional) restricts the candidate set (see
+    :func:`mask_scores`); its presence is structural.
     """
+    if mask is not None:
+        q = mask_scores(q, mask)
     if deterministic:
         return jnp.argmin(q).astype(jnp.int32)
     return argmin_random_ties(q, key)
 
 
-def route_sqd(q_true: jnp.ndarray, d: int, key: jax.Array) -> jnp.ndarray:
-    """SQ(d): sample ``d`` distinct servers, join the shortest among them."""
+def route_sqd(
+    q_true: jnp.ndarray,
+    d: int,
+    key: jax.Array,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """SQ(d): sample ``d`` distinct servers, join the shortest among them.
+
+    ``mask`` (optional) excludes suspect servers *within the sampled
+    subset*: the d queries still go out (the sample is taken before the
+    balancer knows who answers), but a suspect candidate loses any
+    comparison unless the whole subset is suspect (fallback per
+    :func:`mask_scores`).
+    """
     k = q_true.shape[0]
     key_perm, key_tie = jax.random.split(key)
     sample = jax.random.permutation(key_perm, k)[:d]
     sub = q_true[sample]
+    if mask is not None:
+        sub = mask_scores(sub, mask[sample])
     j = argmin_random_ties(sub, key_tie)
     return sample[j].astype(jnp.int32)
 
@@ -87,8 +123,16 @@ def route(
     d: int = 2,
     drain_slots: jnp.ndarray | None = None,
     deterministic: bool = False,
+    mask: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch one job.  Returns ``(server, rr_ptr')``.
+
+    ``mask`` (optional, ``(K,)`` bool) marks servers *eligible* for the
+    shortest-queue family -- the suspect-server exclusion of the degraded
+    control plane (an all-``False`` mask degrades to unmasked, see
+    :func:`mask_scores`).  ``rr`` and ``random`` ignore it: they are
+    state-blind by definition and keep their deterministic / uniform
+    behaviour.
 
     ``deterministic`` (static) switches the shortest-queue family's
     tie-break from uniformly random to lowest index (the Pallas kernel
@@ -116,13 +160,13 @@ def route(
         scaled_true = q_true.astype(jnp.float32) * drain_slots
         scaled_app = q_app.astype(jnp.float32) * drain_slots
     if policy == "jsq":
-        return route_shortest(scaled_true, key, deterministic), rr_ptr
+        return route_shortest(scaled_true, key, deterministic, mask), rr_ptr
     if policy == "jsaq":
-        return route_shortest(scaled_app, key, deterministic), rr_ptr
+        return route_shortest(scaled_app, key, deterministic, mask), rr_ptr
     if policy == "sq2":
-        return route_sqd(scaled_true, 2, key), rr_ptr
+        return route_sqd(scaled_true, 2, key, mask), rr_ptr
     if policy == "sqd":
-        return route_sqd(scaled_true, d, key), rr_ptr
+        return route_sqd(scaled_true, d, key, mask), rr_ptr
     if policy == "rr":
         server, ptr = route_rr(rr_ptr, k)
         return server.astype(jnp.int32), ptr

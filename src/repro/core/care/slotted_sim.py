@@ -148,6 +148,20 @@ class StaticConfig:
     # JSAQ definition), True = lowest index (the kernel convention; the
     # mode in which dense and pallas backends are decision-identical).
     deterministic_ties: bool = False
+    # Control-plane modelling (fault-injection layer).  ``network="net"``
+    # routes every server->balancer message through ``comm.net_step``
+    # (traced delay / jitter / drop operands; SQ(d) query round-trips are
+    # then counted as real traffic too); ``fault`` runs the crash/recovery
+    # or transient-slowdown server process of ``workload.fault_transitions``.
+    # "none"/"none" is bit-identical to the historical instant, fault-free
+    # program.
+    network: str = "none"  # "none" | "net"
+    fault: str = "none"  # "none" | "crash" | "slow"
+    # Ring capacity for the stale true-state views the query policies
+    # (jsq / sq2 / sqd) route on under network="net"; must exceed every
+    # ``net_delay`` in the grid (validated at the host entry points).
+    # Static because it is an array shape.
+    net_delay_cap: int = 32
 
 
 @jax.tree_util.register_dataclass
@@ -180,6 +194,14 @@ class Scenario:
     horizon: jnp.ndarray  # () i32 effective slots (>= StaticConfig.slots = unpadded)
     diurnal_amp: jnp.ndarray  # () f32 diurnal curve amplitude (0 = flat)
     diurnal_period: jnp.ndarray  # () f32 diurnal curve period in slots
+    # Control-plane operands (all neutral when the static kinds are "none").
+    net_delay: jnp.ndarray  # () i32 deterministic delivery delay (slots)
+    net_jitter: jnp.ndarray  # () i32 max extra uniform delay (slots)
+    net_drop: jnp.ndarray  # () f32 i.i.d. message-drop probability
+    suspect_age: jnp.ndarray  # () i32 staleness bound (0 = no suspect masking)
+    crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
+    recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
+    slow_factor: jnp.ndarray  # () f32 rate multiplier while slowed (fault="slow")
 
     @staticmethod
     def create(
@@ -197,7 +219,27 @@ class Scenario:
         diurnal_amp: float = 0.0,
         diurnal_period: float = 1.0,
         arrival: str = "bernoulli",  # diurnal peak-rate validation only
+        network: str = "none",  # control-plane operand validation only
+        net_delay: int = 0,
+        net_jitter: int = 0,
+        net_drop: float = 0.0,
+        suspect_age: int = 0,
+        fault: str = "none",  # control-plane operand validation only
+        crash_rate: float = 0.0,
+        recover_rate: float = 0.0,
+        slow_factor: float = 1.0,
     ) -> "Scenario":
+        comm_lib.validate_control_plane(
+            network=network,
+            net_delay=net_delay,
+            net_jitter=net_jitter,
+            net_drop=net_drop,
+            suspect_age=suspect_age,
+            fault=fault,
+            crash_rate=crash_rate,
+            recover_rate=recover_rate,
+            slow_factor=slow_factor,
+        )
         lam_hi = min(burst_intensity * load, 1.0)
         lam_lo = max(2.0 * load - lam_hi, 0.0)
         period = max(int(round(1.0 / max(rt_rate, 1e-9))), 1)
@@ -242,6 +284,13 @@ class Scenario:
             horizon=jnp.int32(horizon),
             diurnal_amp=jnp.float32(diurnal_amp),
             diurnal_period=jnp.float32(max(float(diurnal_period), 1e-6)),
+            net_delay=jnp.int32(net_delay),
+            net_jitter=jnp.int32(net_jitter),
+            net_drop=jnp.float32(net_drop),
+            suspect_age=jnp.int32(suspect_age),
+            crash_rate=jnp.float32(crash_rate),
+            recover_rate=jnp.float32(recover_rate),
+            slow_factor=jnp.float32(slow_factor),
         )
 
 
@@ -306,11 +355,29 @@ class SimConfig:
     max_slots: Optional[int] = None  # padded scan length (>= slots)
     route_backend: str = "dense"  # "dense" | "pallas" (see StaticConfig)
     deterministic_ties: bool = False
+    # Control plane (fault-injection layer; see StaticConfig / comm.py).
+    network: str = "none"  # "none" | "net"
+    net_delay: int = 0
+    net_jitter: int = 0
+    net_drop: float = 0.0
+    suspect_age: int = 0  # staleness bound in slots (0 = no suspect masking)
+    fault: str = "none"  # "none" | "crash" | "slow"
+    crash_rate: float = 0.0
+    recover_rate: float = 0.0
+    slow_factor: float = 1.0
+    net_delay_cap: int = 32  # stale-view ring capacity (static shape)
 
     def static_part(self) -> StaticConfig:
         if self.max_slots is not None and self.max_slots < self.slots:
             raise ValueError(
                 f"max_slots ({self.max_slots}) must be >= slots ({self.slots})"
+            )
+        if self.comm == "exact" and self.network != "none":
+            raise ValueError(
+                "comm='exact' cannot run through the network model: its "
+                "per-departure message accounting (Prop 6.1) assumes "
+                "instant delivery -- use comm='dt' with x=1 for a "
+                "near-exact pattern under network='net'"
             )
         return StaticConfig(
             servers=self.servers,
@@ -326,6 +393,9 @@ class SimConfig:
             rate_aware=self.rate_aware,
             route_backend=self.route_backend,
             deterministic_ties=self.deterministic_ties,
+            network=self.network,
+            fault=self.fault,
+            net_delay_cap=self.net_delay_cap,
         )
 
     def scenario(self) -> Scenario:
@@ -344,6 +414,15 @@ class SimConfig:
             diurnal_amp=self.diurnal_amp,
             diurnal_period=self.diurnal_period,
             arrival=self.arrival,
+            network=self.network,
+            net_delay=self.net_delay,
+            net_jitter=self.net_jitter,
+            net_drop=self.net_drop,
+            suspect_age=self.suspect_age,
+            fault=self.fault,
+            crash_rate=self.crash_rate,
+            recover_rate=self.recover_rate,
+            slow_factor=self.slow_factor,
         )
 
 
@@ -364,6 +443,7 @@ class SimResult:
     msgs_per_departure: float = 0.0
     queue_gap_sup: int = 0  # sup_t max_ij |Q_i - Q_j| (for SSC experiments)
     dropped: int = 0  # arrivals rejected because the FIFO was full
+    net_drops: int = 0  # messages lost in flight (network="net")
 
 
 @dataclasses.dataclass
@@ -382,6 +462,12 @@ class _Carry:
     max_aq: jnp.ndarray  # () running sup of end-of-slot AQ
     max_q: jnp.ndarray  # () running sup of max queue length
     gap_sup: jnp.ndarray  # () running sup of max_ij |Q_i - Q_j|
+    # Control-plane state; None (an empty pytree subtree) whenever the
+    # corresponding static kind is off, so the "none" carry structure --
+    # and therefore the compiled program -- is unchanged.
+    fault_state: Optional[jnp.ndarray] = None  # (K,) bool servers faulted
+    net: Optional[comm_lib.NetState] = None  # in-flight message buffer
+    q_hist: Optional[jnp.ndarray] = None  # (cap, K) stale true-state ring
 
 
 jax.tree_util.register_dataclass(
@@ -390,7 +476,8 @@ jax.tree_util.register_dataclass(
 
 
 def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
-    """Draw the replayable workload: (arrive, sizes, slot_keys, active).
+    """Draw the replayable workload: (arrive, sizes, slot_keys, active)
+    plus per-slot network / fault key streams when those kinds are on.
 
     Fully traceable in the scenario operands (the arrival and service
     *kinds* alone are static), so a grid of cells shares one compiled
@@ -415,11 +502,20 @@ def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
     arrive = arrive & active
     sizes = workload_lib.service_sizes(k_size, t, scn.service)
     slot_keys = jax.random.split(k_scan, t)
-    return arrive, sizes, slot_keys, active
+    out = (arrive, sizes, slot_keys, active)
+    # Control-plane randomness comes from fold_in-derived side streams so
+    # the three historical children of `key` -- and therefore the whole
+    # "none"-kind sample path -- stay byte-stable.
+    if static.network != "none":
+        out += (jax.random.split(jax.random.fold_in(key, 7), t),)
+    if static.fault != "none":
+        out += (jax.random.split(jax.random.fold_in(key, 11), t),)
+    return out
 
 
 def _sim_core(
-    arrive, sizes, slot_keys, active, static: StaticConfig, scn: Scenario
+    arrive, sizes, slot_keys, active, static: StaticConfig, scn: Scenario,
+    net_keys=None, fault_keys=None,
 ):
     """One full slotted run as a lax.scan; traceable (also under vmap).
 
@@ -443,6 +539,31 @@ def _sim_core(
     ccfg = comm_lib.CommConfig(
         kind=static.comm, x=scn.x, rt_period=scn.rt_period
     )
+    has_net = static.network != "none"
+    has_fault = static.fault != "none"
+    if has_net and static.comm == "exact":
+        raise ValueError(
+            "comm='exact' cannot run through the network model: its "
+            "per-departure message accounting (Prop 6.1) assumes instant "
+            "delivery -- use comm='dt' with x=1 under network='net'"
+        )
+    ncfg = (
+        comm_lib.NetworkConfig(
+            kind=static.network,
+            delay=scn.net_delay,
+            jitter=scn.net_jitter,
+            drop=scn.net_drop,
+        )
+        if has_net
+        else None
+    )
+    # Under a modeled network the query policies route on *stale* true
+    # state: the 2d SQ(d) probes (and JSQ's state feed) suffer the same
+    # delivery delay as push messages, read from a ring of end-of-slot
+    # queue snapshots.  Delay 0 reads the previous slot's end state ==
+    # this slot's pre-route state, bit-identical to the instant path.
+    stale_ring = has_net and static.policy in ("jsq", "sq2", "sqd")
+    cap = static.net_delay_cap
     if static.use_rates:
         rates = scn.service_rates
         # Expected per-job drain time E[S]/r_i in slots, precomputed once
@@ -459,13 +580,47 @@ def _sim_core(
         drain_slots = None
 
     def slot(c: _Carry, xs):
-        arr, size, jid, skey, act = xs
+        arr, size, jid, skey, act = xs[:5]
+        rest = xs[5:]
+        nkey = rest[0] if has_net else None
+        fkey = rest[-1] if has_fault else None
+
+        # --- 0. fault transitions -------------------------------------
+        # The server fault chain advances first: this slot's service (and
+        # trigger suppression) sees this slot's fault state, matching the
+        # numpy serving reference.  Frozen past the horizon.
+        if has_fault:
+            fault_u = jax.random.uniform(fkey, (k,), jnp.float32)
+            faulted, recovered = workload_lib.fault_transitions(
+                c.fault_state, fault_u, scn.crash_rate, scn.recover_rate
+            )
+            faulted = jnp.where(act, faulted, c.fault_state)
+            recovered = recovered & act
+        else:
+            faulted = recovered = None
 
         # --- 1. arrival & routing -------------------------------------
+        if stale_ring:
+            hist_idx = jid - 1 - scn.net_delay
+            q_route = jnp.where(hist_idx >= 0, c.q_hist[hist_idx % cap], 0)
+        else:
+            q_route = c.q_true
+        if has_net or has_fault:
+            # Staleness timeout: a server whose last delivered update is
+            # older than suspect_age is suspect and excluded from the
+            # shortest-queue candidate set (suspect_age 0 disables -- the
+            # all-True mask is decision-identical to no mask).  Without a
+            # network model delivery is instant, so the trigger counter
+            # slots_since_msg *is* the update age.
+            age = c.net.age if has_net else c.comm.slots_since_msg
+            healthy = (scn.suspect_age <= 0) | (age <= scn.suspect_age)
+        else:
+            healthy = None
         server, rr_ptr = routing_lib.route(
-            static.policy, c.q_true, c.emu.q_app, c.rr_ptr, skey,
+            static.policy, q_route, c.emu.q_app, c.rr_ptr, skey,
             d=static.sqd, drain_slots=drain_slots,
             deterministic=static.deterministic_ties,
+            mask=healthy,
         )
         # Dense one-hot arithmetic instead of scalar gathers / scatters /
         # conds: under vmap those lower to serial per-batch-element loops
@@ -498,10 +653,24 @@ def _sim_core(
         busy = (q_true > 0) & act
         if rates is None:
             units = None
-            head_rem = jnp.where(busy, head_rem - 1, head_rem)
+            if has_fault:
+                eff_units = workload_lib.faulted_service_units(
+                    jid, faulted, jnp.ones((k,), jnp.int32),
+                    static.fault, scn.slow_factor,
+                )
+                head_rem = jnp.where(busy, head_rem - eff_units, head_rem)
+            else:
+                head_rem = jnp.where(busy, head_rem - 1, head_rem)
         else:
             units = workload_lib.service_units(jid, rates)
-            head_rem = jnp.where(busy, head_rem - units, head_rem)
+            if has_fault:
+                eff_units = workload_lib.faulted_service_units(
+                    jid, faulted, units, static.fault, scn.slow_factor,
+                    rates=rates,
+                )
+            else:
+                eff_units = units
+            head_rem = jnp.where(busy, head_rem - eff_units, head_rem)
         dep = busy & (head_rem <= 0)
         departed_jid = jnp.where(
             dep, buf_jid[jnp.arange(k), c.head_ptr % b], -1
@@ -523,16 +692,68 @@ def _sim_core(
         # the padding; evaluate unconditionally, then select the advanced
         # state only on active slots (the identity when act is True).
         err = approx_lib.approximation_error(emu, q_true)
+        # Crashed servers cannot send (their counters keep advancing, so
+        # the first healthy slot re-fires); a recovery force-sends a
+        # resync.  The emulation keeps draining with *nominal* units --
+        # the balancer is fault-unaware, so a crash or slowdown grows the
+        # error until the trigger or the staleness timeout reacts.
+        if has_fault and static.fault == "crash":
+            can_send, force = ~faulted, recovered
+        else:
+            can_send = force = None
         triggered, comm_adv = comm_lib.evaluate(
-            c.comm, ccfg, err, dep.astype(jnp.int32)
+            c.comm, ccfg, err, dep.astype(jnp.int32),
+            can_send=can_send, force=force, count_msgs=not has_net,
         )
         triggered = triggered & act
+        if has_net:
+            kd, kj = jax.random.split(nkey)
+            delivered, payload, sent, net_adv = comm_lib.net_step(
+                c.net, ncfg, triggered, q_true,
+                jax.random.uniform(kd, (k,), jnp.float32),
+                jax.random.uniform(kj, (k,), jnp.float32),
+            )
+            delivered = delivered & act
+            net_state = jax.tree.map(
+                lambda adv, old: jnp.where(act, adv, old), net_adv, c.net
+            )
+            # net_step owns wire accounting (piggybacking batches queued
+            # triggers into one send).
+            comm_adv = comm_lib.CommState(
+                deps_since_msg=comm_adv.deps_since_msg,
+                slots_since_msg=comm_adv.slots_since_msg,
+                msgs=comm_adv.msgs + jnp.where(act, sent, 0),
+            )
+            snap_mask, snap_payload = delivered, payload
+        else:
+            net_state = c.net
+            snap_mask, snap_payload = triggered, q_true
+        if has_net and static.policy in ("sq2", "sqd"):
+            # SQ(d)'s query implementation costs 2d messages per offered
+            # arrival (d probes + d replies), now counted as real traffic
+            # on the same axis as the push-based schemes.  The probes ride
+            # the same network: their staleness is the q_hist ring above
+            # (they are not subject to loss -- a query that must be
+            # re-issued would stall the arrival, so d is effectively the
+            # retry budget).
+            d_q = 2 if static.policy == "sq2" else static.sqd
+            comm_adv = comm_lib.CommState(
+                deps_since_msg=comm_adv.deps_since_msg,
+                slots_since_msg=comm_adv.slots_since_msg,
+                msgs=comm_adv.msgs + 2 * d_q * arr.astype(jnp.int32),
+            )
         comm_state = jax.tree.map(
             lambda adv, old: jnp.where(act, adv, old), comm_adv, c.comm
         )
-        emu = approx_lib.emu_message_reset(emu, q_true, triggered, acfg)
+        emu = approx_lib.emu_message_reset(emu, snap_payload, snap_mask, acfg)
 
         # --- 6. metrics ---------------------------------------------------
+        if stale_ring:
+            q_hist = c.q_hist.at[jid % cap].set(
+                jnp.where(act, q_true, c.q_hist[jid % cap])
+            )
+        else:
+            q_hist = c.q_hist
         aq = jnp.max(jnp.abs(q_true - emu.q_app))
         gap = jnp.max(q_true) - jnp.min(q_true)
         carry = _Carry(
@@ -550,6 +771,9 @@ def _sim_core(
             max_aq=jnp.maximum(c.max_aq, aq),
             max_q=jnp.maximum(c.max_q, jnp.max(q_true)),
             gap_sup=jnp.maximum(c.gap_sup, gap),
+            fault_state=faulted,
+            net=net_state,
+            q_hist=q_hist,
         )
         return carry, departed_jid
 
@@ -569,8 +793,15 @@ def _sim_core(
         max_aq=jnp.zeros((), jnp.int32),
         max_q=jnp.zeros((), jnp.int32),
         gap_sup=jnp.zeros((), jnp.int32),
+        fault_state=jnp.zeros((k,), bool) if has_fault else None,
+        net=comm_lib.NetState.init(k) if has_net else None,
+        q_hist=jnp.zeros((cap, k), jnp.int32) if stale_ring else None,
     )
     xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys, active)
+    if has_net:
+        xs += (net_keys,)
+    if has_fault:
+        xs += (fault_keys,)
     final, departed = jax.lax.scan(slot, init, xs)
 
     # completion slot per job id (-1 if never completed).
@@ -593,13 +824,21 @@ def _sim_core(
         final.q_true,
         final.dropped,
         final.gap_sup,
+        final.net.drops if has_net else jnp.zeros((), jnp.int32),
     )
 
 
 def _run_one(key, scn: Scenario, static: StaticConfig):
     """Workload draw + scan for one (key, scenario) pair; vmap-able."""
-    arrive, sizes, slot_keys, active = _prep(key, static, scn)
-    return (arrive,) + _sim_core(arrive, sizes, slot_keys, active, static, scn)
+    prep = _prep(key, static, scn)
+    arrive, sizes, slot_keys, act = prep[:4]
+    rest = prep[4:]
+    net_keys = rest[0] if static.network != "none" else None
+    fault_keys = rest[-1] if static.fault != "none" else None
+    return (arrive,) + _sim_core(
+        arrive, sizes, slot_keys, act, static, scn,
+        net_keys=net_keys, fault_keys=fault_keys,
+    )
 
 
 _simulate_jit = jax.jit(_run_one, static_argnums=(2,))
@@ -683,6 +922,15 @@ def _check_pallas_static(static: StaticConfig) -> None:
             "route_backend='pallas' requires deterministic_ties=True (the "
             "kernel breaks ties to the lowest index)"
         )
+    if static.network != "none" or static.fault != "none":
+        raise NotImplementedError(
+            f"route_backend='pallas' does not implement the fault-injection "
+            f"control plane (network={static.network!r}, "
+            f"fault={static.fault!r}): care_route_pallas carries no "
+            f"in-flight message buffer or fault state and would silently "
+            f"compute instant-delivery, fault-free results -- use "
+            f"route_backend='dense'"
+        )
 
 
 @functools.lru_cache(maxsize=None)
@@ -736,6 +984,7 @@ def _pallas_grid_fn(static: StaticConfig):
             q_final,
             stats[:, 3],  # dropped
             stats[:, 6],  # gap_sup
+            jnp.zeros((n,), jnp.int32),  # net_drops (no network model)
         )
 
     fn = jax.jit(run)
@@ -782,10 +1031,86 @@ def _check_diurnal_peak(static: StaticConfig, scn: Scenario) -> None:
         )
 
 
+def _check_control_plane(static: StaticConfig, scn: Scenario) -> None:
+    """Validate network/fault operands against their static kinds.
+
+    ``Scenario.create`` already validates when told the kinds, but a
+    hand-built Scenario meets its StaticConfig for the first time here
+    (host-level entry points; inside the traced core the operands are
+    tracers).  Mirrors :func:`_check_diurnal_peak`; every error names the
+    offending field.
+    """
+    delay = np.asarray(scn.net_delay)
+    jitter = np.asarray(scn.net_jitter)
+    drop = np.asarray(scn.net_drop)
+    crash = np.asarray(scn.crash_rate)
+    recover = np.asarray(scn.recover_rate)
+    slow = np.asarray(scn.slow_factor)
+    if static.network == "none":
+        for name, arr, neutral in (
+            ("net_delay", delay, 0),
+            ("net_jitter", jitter, 0),
+            ("net_drop", drop, 0),
+        ):
+            if np.any(arr != neutral):
+                raise ValueError(
+                    f"{name} is nonzero for {int(np.sum(arr != neutral))} "
+                    f"cell(s) but network='none'; set network='net'"
+                )
+        if static.fault == "none" and np.any(np.asarray(scn.suspect_age) > 0):
+            raise ValueError(
+                "suspect_age > 0 needs a modeled control plane "
+                "(network='net' and/or a fault kind)"
+            )
+    else:
+        if np.any(delay < 0) or np.any(jitter < 0):
+            raise ValueError("net_delay / net_jitter must be >= 0 slots")
+        if np.any(drop < 0) or np.any(drop >= 1):
+            raise ValueError(
+                "net_drop is a probability and must be in [0, 1)"
+            )
+        if static.policy in ("jsq", "sq2", "sqd") and np.any(
+            delay >= static.net_delay_cap
+        ):
+            raise ValueError(
+                f"net_delay must be < net_delay_cap "
+                f"({static.net_delay_cap}) for the query policies' stale "
+                f"state ring, got max {int(np.max(delay))}; raise "
+                f"StaticConfig.net_delay_cap"
+            )
+    if static.fault == "none":
+        for name, arr, neutral in (
+            ("crash_rate", crash, 0.0),
+            ("recover_rate", recover, 0.0),
+            ("slow_factor", slow, 1.0),
+        ):
+            if np.any(arr != neutral):
+                raise ValueError(
+                    f"{name} is non-neutral for "
+                    f"{int(np.sum(arr != neutral))} cell(s) but "
+                    f"fault='none'; set fault='crash' or fault='slow'"
+                )
+    else:
+        if np.any((crash < 0) | (crash > 1)) or np.any(
+            (recover < 0) | (recover > 1)
+        ):
+            raise ValueError(
+                "crash_rate / recover_rate are per-slot probabilities in "
+                "[0, 1]"
+            )
+        if np.any((crash > 0) & (recover == 0)):
+            raise ValueError(
+                "recover_rate must be > 0 when crash_rate > 0 (faulted "
+                "servers would never recover)"
+            )
+        if np.any((slow <= 0) | (slow > 1)):
+            raise ValueError("slow_factor must be in (0, 1]")
+
+
 def _finalize(arrive_np: np.ndarray, out) -> SimResult:
     """Convert one run's device outputs into a host-side SimResult."""
     (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
-     gap_sup) = (np.asarray(o) for o in out)
+     gap_sup, net_drops) = (np.asarray(o) for o in out)
 
     arrival_slots = np.nonzero(arrive_np)[0]
     comp = comp_slot[arrival_slots]
@@ -807,6 +1132,7 @@ def _finalize(arrive_np: np.ndarray, out) -> SimResult:
         msgs_per_departure=(msgs_i / deps_i) if deps_i else 0.0,
         queue_gap_sup=int(gap_sup),
         dropped=int(dropped),
+        net_drops=int(net_drops),
     )
 
 
@@ -818,6 +1144,7 @@ def simulate(key: jax.Array, cfg: SimConfig) -> SimResult:
     """
     static, scn = cfg.static_part(), cfg.scenario()
     _check_diurnal_peak(static, scn)
+    _check_control_plane(static, scn)
     if static.route_backend == "pallas":
         _check_pallas_static(static)
         out = _pallas_grid_fn(static)(
@@ -867,6 +1194,7 @@ def simulate_grid(
         c = len(scenarios)
         scn_stacked = stack_scenarios(scenarios)
     _check_diurnal_peak(static_cfg, scn_stacked)
+    _check_control_plane(static_cfg, scn_stacked)
     s = keys.shape[0]
     n = c * s
 
@@ -932,15 +1260,22 @@ def simulate_batch(
     )[0]
 
 
-def exact_state_messages(result: SimResult, policy: str, sqd: int = 2) -> int:
+def exact_state_messages(
+    result: SimResult, policy: str, sqd: int = 2, network: str = "none"
+) -> int:
     """Messages the *policy itself* fundamentally needs (paper Fig. 5).
 
     JSQ needs one message per departure [LXK+11]; SQ(d) needs 2d messages per
     arrival under the query implementation; RR / Random need none.  CARE
-    policies report their trigger-counted messages directly.
+    policies report their trigger-counted messages directly.  Under a
+    modeled network (``network="net"``) the SQ(d) query round-trips are
+    already counted as real traffic in ``result.messages`` (and suffer the
+    delivery delay), so the analytic formula would double-count them.
     """
     if policy == "jsq":
         return result.departures
+    if policy in ("sq2", "sqd") and network != "none":
+        return result.messages
     if policy == "sq2":
         return 4 * result.arrivals
     if policy == "sqd":

@@ -276,3 +276,68 @@ def service_units(slot_idx, rates, xp=jnp):
     """
     t = xp.asarray(slot_idx).astype(xp.float32)
     return (xp.floor((t + 1.0) * rates) - xp.floor(t * rates)).astype(xp.int32)
+
+def fault_transitions(faulted, fault_u, crash_rate, recover_rate, xp=jnp):
+    """One slot of the two-state server fault chain (crash <-> healthy).
+
+    A healthy server crashes with per-slot probability ``crash_rate`` and a
+    crashed server recovers with probability ``recover_rate``, driven by one
+    i.i.d. uniform per (slot, server) -- the single draw serves both
+    transitions because a server is in exactly one state.  ``xp`` selects
+    the array namespace so the jax scans and the numpy ``CareDispatcher``
+    reference replay identical fault sample paths from the same pre-drawn
+    uniforms.
+
+    Args:
+      faulted: ``(K,)`` bool, servers currently down (or slowed).
+      fault_u: ``(K,)`` f32 uniforms for this slot.
+      crash_rate / recover_rate: per-slot probabilities (traced operands).
+
+    Returns:
+      ``(faulted', recovered)``: the new fault mask and the mask of servers
+      that recovered *this slot* (the resync-on-recovery trigger).
+    """
+    crash = ~faulted & (fault_u < crash_rate)
+    recover = faulted & (fault_u < recover_rate)
+    return (faulted | crash) & ~recover, recover
+
+
+def faulted_service_units(
+    slot_idx, faulted, nominal_units, fault_kind, slow_factor, rates=None, xp=jnp
+):
+    """Effective per-server work units under the fault process.
+
+    * ``fault_kind == "crash"``: a crashed server completes no work (its
+      queued jobs are preserved and resume on recovery).
+    * ``fault_kind == "slow"``: a faulted server's ``service_rates`` are
+      scaled by ``slow_factor`` -- realised through the same deterministic
+      credit schedule (:func:`service_units`) so a rate-1 server slowed to
+      0.5 works every other slot.
+
+    The *balancer's* MSR emulation keeps draining with the nominal units:
+    it is fault-unaware by design, so a slowdown or crash grows the
+    approximation error until the trigger fires (ET) or the staleness
+    timeout marks the server suspect.
+
+    Args:
+      slot_idx: scalar slot index (for the credit schedule).
+      faulted: ``(K,)`` bool fault mask for this slot.
+      nominal_units: ``(K,)`` int32 fault-free units (scalar 1 broadcast is
+        fine for homogeneous unit-rate servers).
+      fault_kind: "crash" or "slow" (static).
+      slow_factor: () f32 rate multiplier in (0, 1] (traced operand).
+      rates: optional ``(K,)`` f32 nominal service rates (None = unit rate).
+    """
+    nominal_units = xp.asarray(nominal_units)
+    if fault_kind == "crash":
+        slowed = xp.zeros_like(nominal_units)
+    elif fault_kind == "slow":
+        base = (
+            xp.ones(xp.shape(faulted), xp.float32)
+            if rates is None
+            else xp.asarray(rates, xp.float32)
+        )
+        slowed = service_units(slot_idx, base * slow_factor, xp=xp)
+    else:
+        raise ValueError(f"unknown fault kind: {fault_kind}")
+    return xp.where(faulted, slowed, nominal_units)

@@ -152,6 +152,18 @@ class EngineConfig:
     # convention), True = lowest index (the Pallas kernel convention --
     # see kernels/jsaq_route.py).
     deterministic_ties: bool = False
+    # Control plane (fault-injection layer; see comm.py).  network="net"
+    # routes every replica->dispatcher update through comm.net_step;
+    # fault runs the crash/recovery or transient-slowdown replica process.
+    network: str = "none"  # "none" | "net"
+    net_delay: int = 0
+    net_jitter: int = 0
+    net_drop: float = 0.0
+    suspect_age: int = 0  # staleness bound in slots (0 = no suspect masking)
+    fault: str = "none"  # "none" | "crash" | "slow"
+    crash_rate: float = 0.0
+    recover_rate: float = 0.0
+    slow_factor: float = 1.0
 
     def comm_config(self) -> comm_lib.CommConfig:
         """This tier's trigger parameters in shared-core terms."""
@@ -217,6 +229,19 @@ class ServeConfig:
     # "jsaq" and deterministic_ties).  Tie-break mode as in EngineConfig.
     route_backend: str = "dense"
     deterministic_ties: bool = False
+    # Control plane (fault-injection layer; see comm.py).  The *kinds*
+    # are static (trace-time code paths); every numeric knob is a traced
+    # EngineScenario operand, so a delay x drop ladder shares one
+    # compiled program.
+    network: str = "none"  # "none" | "net"
+    net_delay: int = 0
+    net_jitter: int = 0
+    net_drop: float = 0.0
+    suspect_age: int = 0
+    fault: str = "none"  # "none" | "crash" | "slow"
+    crash_rate: float = 0.0
+    recover_rate: float = 0.0
+    slow_factor: float = 1.0
 
     def rate_scale(self) -> float:
         """Mean decode rate: the capacity multiplier of heterogeneity."""
@@ -260,6 +285,29 @@ class ServeConfig:
                     "route_backend='pallas' requires deterministic_ties="
                     "True (the kernel breaks ties to the lowest index)"
                 )
+            if self.network != "none" or self.fault != "none":
+                raise NotImplementedError(
+                    f"route_backend='pallas' does not support the degraded "
+                    f"control plane (network={self.network!r}, "
+                    f"fault={self.fault!r}); use route_backend='dense'"
+                )
+        comm_lib.validate_control_plane(
+            network=self.network,
+            net_delay=self.net_delay,
+            net_jitter=self.net_jitter,
+            net_drop=self.net_drop,
+            suspect_age=self.suspect_age,
+            fault=self.fault,
+            crash_rate=self.crash_rate,
+            recover_rate=self.recover_rate,
+            slow_factor=self.slow_factor,
+        )
+        if self.network != "none" and self.comm == "exact":
+            raise ValueError(
+                "comm='exact' assumes instant delivery (per-departure "
+                "accounting); it cannot compose with network="
+                f"{self.network!r}"
+            )
         return EngineStatic(
             replicas=self.replicas,
             decode_slots=self.decode_slots,
@@ -275,6 +323,8 @@ class ServeConfig:
             max_arrivals=self.max_arrivals,
             route_backend=self.route_backend,
             deterministic_ties=self.deterministic_ties,
+            network=self.network,
+            fault=self.fault,
         )
 
     def scenario(self) -> "EngineScenario":
@@ -288,6 +338,13 @@ class ServeConfig:
             horizon=self.slots,
             replicas=self.replicas,
             decode_rates=self.decode_rates,
+            net_delay=self.net_delay,
+            net_jitter=self.net_jitter,
+            net_drop=self.net_drop,
+            suspect_age=self.suspect_age,
+            crash_rate=self.crash_rate,
+            recover_rate=self.recover_rate,
+            slow_factor=self.slow_factor,
         )
 
     def engine_config(self) -> EngineConfig:
@@ -306,6 +363,15 @@ class ServeConfig:
             mean_prefill=float(self.mean_prefill),
             mean_decode=float(self.mean_decode),
             deterministic_ties=self.deterministic_ties,
+            network=self.network,
+            net_delay=self.net_delay,
+            net_jitter=self.net_jitter,
+            net_drop=self.net_drop,
+            suspect_age=self.suspect_age,
+            fault=self.fault,
+            crash_rate=self.crash_rate,
+            recover_rate=self.recover_rate,
+            slow_factor=self.slow_factor,
         )
 
     def workload_key(self) -> tuple:
@@ -320,6 +386,11 @@ class ServeConfig:
         return (
             self.replicas, self.decode_slots, self.slots, self.load,
             self.mean_prefill, self.mean_decode, self.rate_scale(),
+            # Extra uniform streams of the degraded control plane --
+            # drawn from prefix-stable SeedSequence children, so cells
+            # with both kinds off replay the historical stream byte for
+            # byte (only the *presence* of each stream keys the cache).
+            self.network != "none", self.fault != "none",
         )
 
 
@@ -353,6 +424,8 @@ class EngineStatic:
     trace_occupancy: bool = False
     route_backend: str = "dense"  # "dense" | "pallas" (see ServeConfig)
     deterministic_ties: bool = False
+    network: str = "none"  # "none" | "net" (control-plane kind, static)
+    fault: str = "none"  # "none" | "crash" | "slow" (replica fault kind)
 
 
 @jax.tree_util.register_dataclass
@@ -376,6 +449,14 @@ class EngineScenario:
     mean_decode: jnp.ndarray  # () f32 (drain policy E[S] term)
     decode_rates: jnp.ndarray  # (R,) f32 per-replica speeds (ones if unused)
     horizon: jnp.ndarray  # () i32 effective slots (<= EngineStatic.slots)
+    # Degraded-control-plane operands (neutral when the kinds are "none"):
+    net_delay: jnp.ndarray  # () i32 base delivery delay in slots
+    net_jitter: jnp.ndarray  # () i32 extra uniform delay in [0, jitter]
+    net_drop: jnp.ndarray  # () f32 i.i.d. message-drop probability
+    suspect_age: jnp.ndarray  # () i32 staleness bound (0 = no masking)
+    crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
+    recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
+    slow_factor: jnp.ndarray  # () f32 service-rate scale of fault="slow"
 
     @staticmethod
     def create(
@@ -388,6 +469,13 @@ class EngineScenario:
         horizon: Optional[int] = None,
         replicas: int = 8,
         decode_rates: Optional[Sequence[float]] = None,
+        net_delay: int = 0,
+        net_jitter: int = 0,
+        net_drop: float = 0.0,
+        suspect_age: int = 0,
+        crash_rate: float = 0.0,
+        recover_rate: float = 0.0,
+        slow_factor: float = 1.0,
     ) -> "EngineScenario":
         if horizon is None:
             horizon = np.iinfo(np.int32).max
@@ -405,6 +493,13 @@ class EngineScenario:
             mean_decode=jnp.float32(mean_decode),
             decode_rates=rates,
             horizon=jnp.int32(horizon),
+            net_delay=jnp.int32(net_delay),
+            net_jitter=jnp.int32(net_jitter),
+            net_drop=jnp.float32(net_drop),
+            suspect_age=jnp.int32(suspect_age),
+            crash_rate=jnp.float32(crash_rate),
+            recover_rate=jnp.float32(recover_rate),
+            slow_factor=jnp.float32(slow_factor),
         )
 
 
@@ -440,6 +535,13 @@ class ServeWorkload:
     tie_u: np.ndarray  # (N,) float32 routing tie-break uniforms
     sub_u: np.ndarray  # (N, SQD_MAX) float32 SQ(d) subset uniforms
     arrival_slot: np.ndarray  # (N,) int64
+    # Degraded-control-plane uniform streams (independent SeedSequence
+    # children; None unless the corresponding kind is on, so the base
+    # stream bytes never move): message-drop and jitter draws per
+    # (slot, replica), and the fault-chain transition draws.
+    net_drop_u: Optional[np.ndarray] = None  # (T, R) float32
+    net_jit_u: Optional[np.ndarray] = None  # (T, R) float32
+    fault_u: Optional[np.ndarray] = None  # (T, R) float32
 
     @property
     def total(self) -> int:
@@ -456,6 +558,8 @@ def sample_workload(
     mean_prefill: float = 4,
     mean_decode: float = 64,
     rate_scale: float = 1.0,
+    with_net: bool = False,
+    with_fault: bool = False,
 ) -> ServeWorkload:
     """Draw the replayable serving workload for one (parameters, seed).
 
@@ -465,9 +569,13 @@ def sample_workload(
     differently) can never perturb the offered workload and vice versa.
     ``rate_scale`` is the mean per-replica decode rate -- heterogeneous
     ``decode_rates`` scale the offered capacity without re-keying the
-    tie-break or subset streams.
+    tie-break or subset streams.  ``with_net`` / ``with_fault`` draw the
+    degraded-control-plane uniforms from two further children (3 and 4);
+    ``SeedSequence`` spawning is prefix-stable, so turning them on cannot
+    move the first three streams -- a fault ladder replays the exact
+    arrival/tie-break bytes of its fault-free control.
     """
-    w_ss, r_ss, s_ss = np.random.SeedSequence(int(seed)).spawn(3)
+    w_ss, r_ss, s_ss, n_ss, f_ss = np.random.SeedSequence(int(seed)).spawn(5)
     wrng = np.random.default_rng(w_ss)
     rrng = np.random.default_rng(r_ss)
     srng = np.random.default_rng(s_ss)
@@ -482,20 +590,29 @@ def sample_workload(
     sub_u = srng.random(size=(total, SQD_MAX), dtype=np.float32)
     base = np.concatenate([[0], np.cumsum(n_arr)[:-1]]).astype(np.int64)
     arrival_slot = np.repeat(np.arange(slots, dtype=np.int64), n_arr)
+    net_drop_u = net_jit_u = fault_u = None
+    if with_net:
+        nrng = np.random.default_rng(n_ss)
+        net_drop_u = nrng.random(size=(slots, replicas), dtype=np.float32)
+        net_jit_u = nrng.random(size=(slots, replicas), dtype=np.float32)
+    if with_fault:
+        frng = np.random.default_rng(f_ss)
+        fault_u = frng.random(size=(slots, replicas), dtype=np.float32)
     return ServeWorkload(
         n_arr=n_arr, base=base, prefill=prefill, decode=decode,
         work=work, tie_u=tie_u, sub_u=sub_u, arrival_slot=arrival_slot,
+        net_drop_u=net_drop_u, net_jit_u=net_jit_u, fault_u=fault_u,
     )
 
 
 @functools.lru_cache(maxsize=512)
 def _cached_workload(key: tuple, seed: int) -> ServeWorkload:
     (replicas, decode_slots, slots, load, mean_prefill, mean_decode,
-     rate_scale) = key
+     rate_scale, with_net, with_fault) = key
     return sample_workload(
         seed, replicas=replicas, decode_slots=decode_slots, slots=slots,
         load=load, mean_prefill=mean_prefill, mean_decode=mean_decode,
-        rate_scale=rate_scale,
+        rate_scale=rate_scale, with_net=with_net, with_fault=with_fault,
     )
 
 
@@ -618,8 +735,43 @@ class CareDispatcher:
                 f"decode_rates has {len(cfg.decode_rates)} entries for "
                 f"{r} replicas"
             )
+        comm_lib.validate_control_plane(
+            network=cfg.network,
+            net_delay=cfg.net_delay,
+            net_jitter=cfg.net_jitter,
+            net_drop=cfg.net_drop,
+            suspect_age=cfg.suspect_age,
+            fault=cfg.fault,
+            crash_rate=cfg.crash_rate,
+            recover_rate=cfg.recover_rate,
+            slow_factor=cfg.slow_factor,
+        )
+        if cfg.network != "none" and cfg.comm == "exact":
+            raise ValueError(
+                "comm='exact' assumes instant delivery (per-departure "
+                "accounting); it cannot compose with network="
+                f"{cfg.network!r}"
+            )
         self.cfg = cfg
         self._ccfg = cfg.comm_config()
+        # Degraded control plane: per-replica in-flight message buffer
+        # (network="net") and the fault mask of the crash/slow process.
+        if cfg.network != "none":
+            self.net = comm_lib.NetState.init(
+                r, xp=np, payload_dtype=np.float32
+            )
+            self._ncfg = comm_lib.NetworkConfig(
+                kind=cfg.network,
+                delay=np.int32(cfg.net_delay),
+                jitter=np.int32(cfg.net_jitter),
+                drop=np.float32(cfg.net_drop),
+            )
+        else:
+            self.net = None
+            self._ncfg = None
+        self.faulted = (
+            np.zeros(r, bool) if cfg.fault != "none" else None
+        )
         self.active_rem = np.zeros((r, s), np.int64)
         self.active_rid = np.full((r, s), -1, np.int64)
         self._qcap = queue_cap
@@ -689,6 +841,21 @@ class CareDispatcher:
         else:
             occ = self.approx
         self.last_subset = None
+        # Suspect-server exclusion: a replica whose last update is older
+        # than the staleness bound is excluded from the shortest-queue
+        # family's candidate set (all-suspect degrades to unmasked).  The
+        # staleness clock is the network age when messages are delayed,
+        # else the trigger's slots-since-message counter -- RT keepalives
+        # reset either one, doubling as failure detection.
+        healthy = None
+        if cfg.suspect_age > 0:
+            age = (
+                self.net.age if self.net is not None
+                else self.comm.slots_since_msg
+            )
+            healthy = age <= cfg.suspect_age
+            if not healthy.any():
+                healthy = np.ones_like(healthy)
         if cfg.policy == "rr":
             j = self._rr_ptr % cfg.num_replicas
             self._rr_ptr += 1
@@ -701,11 +868,26 @@ class CareDispatcher:
                     sub_u = self.rng.random(size=SQD_MAX, dtype=np.float32)
                 mask = subset_mask(sub_u, cfg.num_replicas, cfg.sqd, xp=np)
                 self.last_subset = mask
+                if healthy is not None:
+                    m = mask & healthy
+                    mask = m if m.any() else mask
                 j = pick_min_tied(occ, u, mask=mask, deterministic=det)
             elif cfg.policy == "drain":
-                j = pick_min_tied(occ * self._drain_slots, u, deterministic=det)
+                j = pick_min_tied(
+                    occ * self._drain_slots, u, mask=healthy,
+                    deterministic=det,
+                )
             else:  # jsaq
-                j = pick_min_tied(occ, u, deterministic=det)
+                j = pick_min_tied(occ, u, mask=healthy, deterministic=det)
+        if cfg.policy == "sqd" and self.net is not None:
+            # SQ(d) is a pull scheme: each routed arrival costs d query +
+            # d response messages on the wire (2d round-trips), putting
+            # query-based sampling on the same honest message-rate axis
+            # as CARE's push updates.
+            self.comm = dataclasses.replace(
+                self.comm,
+                msgs=self.comm.msgs + np.int32(2 * cfg.sqd),
+            )
         if self._q_len[j] >= self._qcap:
             self._grow_queues()
         self._ensure_rid(req.rid)
@@ -721,14 +903,39 @@ class CareDispatcher:
         self.approx[j] += 1  # arrival known to the dispatcher (Eq. 10)
         return j
 
-    def step(self, now: int) -> list[Request]:
+    def step(
+        self,
+        now: int,
+        drop_u: Optional[np.ndarray] = None,
+        jit_u: Optional[np.ndarray] = None,
+        fault_u: Optional[np.ndarray] = None,
+    ) -> list[Request]:
         cfg = self.cfg
         rows = np.arange(cfg.num_replicas)[:, None]
+
+        # 0. fault transitions (before admission, like the traced slot
+        # body: arrivals were routed against the previous slot's state).
+        recovered = None
+        if self.faulted is not None:
+            if fault_u is None:
+                raise ValueError(
+                    "step() needs this slot's fault_u row when "
+                    f"fault={cfg.fault!r} (sample_workload with_fault=True)"
+                )
+            self.faulted, recovered = workload_lib.fault_transitions(
+                self.faulted, np.asarray(fault_u, np.float32),
+                np.float32(cfg.crash_rate), np.float32(cfg.recover_rate),
+                xp=np,
+            )
 
         # 1. admit: fill free decode slots from the pending rings, FIFO.
         free = self.active_rem <= 0
         free_rank = np.cumsum(free, axis=1) - 1
         n_admit = np.minimum(self._q_len, free.sum(axis=1))
+        if cfg.fault == "crash" and self.faulted is not None:
+            # A crashed replica is frozen: queued requests wait (conserved)
+            # and resume admission on recovery.
+            n_admit = np.where(self.faulted, 0, n_admit)
         take = free & (free_rank < n_admit[:, None])
         if take.any():
             qidx = (self._q_head[:, None] + free_rank) % self._qcap
@@ -745,7 +952,17 @@ class CareDispatcher:
         # workload.service_units; a finishing unit beyond the remaining
         # work is forfeit, so rem may go negative == free).
         active = self.active_rem > 0
-        if self._rates is None:
+        if self.faulted is not None:
+            if self._rates is None:
+                nominal = np.ones(cfg.num_replicas, np.int64)
+            else:
+                nominal = workload_lib.service_units(now, self._rates, xp=np)
+            units = workload_lib.faulted_service_units(
+                now, self.faulted, nominal, cfg.fault,
+                np.float32(cfg.slow_factor), rates=self._rates, xp=np,
+            )
+            self.active_rem = self.active_rem - units[:, None] * active
+        elif self._rates is None:
             self.active_rem = self.active_rem - active
         else:
             units = workload_lib.service_units(now, self._rates, xp=np)
@@ -770,12 +987,41 @@ class CareDispatcher:
         )
 
         # 4. trigger (replicas mirror the emulation exactly) -- shared core.
+        # Crashed replicas cannot send (counters keep advancing, so the
+        # first healthy slot re-fires a due trigger) and a recovery forces
+        # a resync message regardless of the trigger predicate.
         true_occ = self.true_occupancy().astype(np.float32)
         err = np.abs(true_occ - self.approx)
+        can_send = force = None
+        if cfg.fault == "crash" and self.faulted is not None:
+            can_send = ~self.faulted
+            force = recovered
         trig, self.comm = comm_lib.evaluate(
-            self.comm, self._ccfg, err, completions, xp=np
+            self.comm, self._ccfg, err, completions, xp=np,
+            can_send=can_send, force=force,
+            count_msgs=self.net is None,
         )
-        self.approx = np.where(trig, true_occ, self.approx)
+        # 5. network: triggered sends traverse the in-flight buffer (delay
+        # + jitter + drop, piggyback batching); the dispatcher's view only
+        # advances on *delivery* of the send-time snapshot.
+        if self.net is not None:
+            if drop_u is None or jit_u is None:
+                raise ValueError(
+                    "step() needs this slot's drop_u/jit_u rows when "
+                    f"network={cfg.network!r} (sample_workload "
+                    "with_net=True)"
+                )
+            delivered, payload, sent, self.net = comm_lib.net_step(
+                self.net, self._ncfg, trig, true_occ,
+                np.asarray(drop_u, np.float32),
+                np.asarray(jit_u, np.float32), xp=np,
+            )
+            self.comm = dataclasses.replace(
+                self.comm, msgs=self.comm.msgs + sent
+            )
+            self.approx = np.where(delivered, payload, self.approx)
+        else:
+            self.approx = np.where(trig, true_occ, self.approx)
         return finished
 
 
@@ -801,12 +1047,25 @@ def run_serving_sim(
     (``out["occupancy"][slot]``, captured at end of slot, matching the jax
     engine's ``trace_occupancy`` rows).
     """
+    with_net = cfg.network != "none"
+    with_fault = cfg.fault != "none"
     if workload is None:
         rate_scale = mean_decode_rate(cfg.decode_rates)
         workload = sample_workload(
             seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
             slots=slots, load=load, mean_prefill=mean_prefill,
             mean_decode=mean_decode, rate_scale=rate_scale,
+            with_net=with_net, with_fault=with_fault,
+        )
+    if with_net and workload.net_drop_u is None:
+        raise ValueError(
+            "workload lacks the network uniform streams; sample it with "
+            "with_net=True"
+        )
+    if with_fault and workload.fault_u is None:
+        raise ValueError(
+            "workload lacks the fault uniform stream; sample it with "
+            "with_fault=True"
         )
     # One source of truth for E[S]: the drain policy's score must use the
     # same mean work the workload was sampled with, or the two backends
@@ -835,7 +1094,12 @@ def run_serving_sim(
                 req, now, u=float(workload.tie_u[rid]),
                 sub_u=workload.sub_u[rid],
             )
-        finished.extend(disp.step(now))
+        finished.extend(disp.step(
+            now,
+            drop_u=workload.net_drop_u[now] if with_net else None,
+            jit_u=workload.net_jit_u[now] if with_net else None,
+            fault_u=workload.fault_u[now] if with_fault else None,
+        ))
         if now in want_ckpt:
             occupancy[now] = disp.true_occupancy().copy()
         if model_fn is not None:
@@ -861,6 +1125,7 @@ def run_serving_sim(
         "final_occupancy": disp.true_occupancy().copy(),
         "occupancy": occupancy,
         "requests": finished,
+        "net_drops": int(disp.net.drops) if disp.net is not None else 0,
     }
 
 
@@ -869,8 +1134,8 @@ def run_serving_sim(
 # ---------------------------------------------------------------------------
 
 
-def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
-                static: EngineStatic):
+def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+                n_cap, scn: EngineScenario, static: EngineStatic):
     """One serving run as a ``lax.scan`` over slots; traceable under vmap.
 
     Inputs are the padded per-slot workload: ``n_arr (T,)`` arrival counts,
@@ -883,7 +1148,11 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
     The slot body mirrors :class:`CareDispatcher` operation for operation:
     sequential within-slot routing (an inner scan over arrival lanes --
     each routed arrival immediately bumps the occupancy the next one
-    sees), then admit -> decode -> MSR drain -> shared-core trigger.
+    sees), then fault transitions -> admit -> decode -> MSR drain ->
+    shared-core trigger -> network delivery.  ``net_du`` / ``net_ju`` /
+    ``fault_u`` are the pre-drawn ``(T, R)`` control-plane uniforms
+    (zero-width ``(T, 0)`` when the corresponding kind is off, so the
+    grid sharding specs are shape-stable).
     ``static.policy`` picks the route step at trace time; the drain-time
     score and heterogeneous decode/drain rates consume the traced
     ``scn.decode_rates`` operand, so a rate ladder shares one program.
@@ -898,6 +1167,13 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
     a_n, t_n = work.shape[1], work.shape[0]
     ccfg = comm_lib.CommConfig(kind=static.comm, x=scn.x,
                                rt_period=scn.rt_period)
+    has_net = static.network != "none"
+    has_fault = static.fault != "none"
+    if has_net:
+        ncfg = comm_lib.NetworkConfig(
+            kind=static.network, delay=scn.net_delay,
+            jitter=scn.net_jitter, drop=scn.net_drop,
+        )
     rep_idx = jnp.arange(r_n, dtype=jnp.int32)
     # Per-replica emulated drain; msr_drain * 1.0 is exact, so the unused
     # operand cannot perturb the homogeneous path.
@@ -909,12 +1185,24 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
 
     def slot(carry, xs):
         (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-         rr_ptr, comp_slot, total_comp, dropped) = carry
-        t, n_arr_t, work_t, tie_t, rid_t, sub_t = xs
+         rr_ptr, comp_slot, total_comp, dropped, net_state, faulted) = carry
+        t, n_arr_t, work_t, tie_t, rid_t, sub_t, ndu_t, nju_t, fu_t = xs
         act = t < scn.horizon
         # Decode-slot busy count is frozen during the arrival phase -- the
         # dispatcher routes against the previous slot's replica state.
         busy_cnt = (rem > 0).sum(axis=1).astype(jnp.int32)
+
+        # Suspect-server mask (graceful degradation): computed once per
+        # slot from the carried staleness clock -- the network age under
+        # delayed delivery, else the trigger's slots-since-message counter
+        # (RT keepalives reset either, doubling as failure detection).
+        # suspect_age is a traced operand; 0 yields an all-True mask,
+        # which is decision-identical to no masking on both backends.
+        healthy = None
+        if has_net or has_fault:
+            age = net_state.age if has_net else comm_state.slots_since_msg
+            h = (scn.suspect_age <= 0) | (age <= scn.suspect_age)
+            healthy = jnp.where(jnp.any(h), h, True)
 
         # --- 1. route this slot's arrivals, sequentially (inner scan) ---
         # The scan carries only the small (R,) routing state (each routed
@@ -944,7 +1232,15 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
                     score = occ
                 if static.policy == "sqd":
                     cand = subset_mask(sub_l, r_n, static.sqd, xp=jnp)
+                    if healthy is not None:
+                        # Suspect exclusion within the sampled subset; an
+                        # all-suspect subset falls back to the raw sample
+                        # (mirrors the reference dispatcher exactly).
+                        m = cand & healthy
+                        cand = jnp.where(jnp.any(m), m, cand)
                     score = jnp.where(cand, score, jnp.inf)
+                elif healthy is not None:
+                    score = jnp.where(healthy, score, jnp.inf)
                 is_min = score == jnp.min(score)
                 if static.deterministic_ties:
                     # Lowest-index ties: rank 0 in the shared rank
@@ -992,11 +1288,24 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
         q_work = q_work.at[jv, tailv].set(work_t, mode="drop")
         q_rid = q_rid.at[jv, tailv].set(rid_t, mode="drop")
 
+        # --- 1b. fault transitions (after routing, before admission) ----
+        recovered = None
+        if has_fault:
+            adv_f, recovered = workload_lib.fault_transitions(
+                faulted, fu_t, scn.crash_rate, scn.recover_rate
+            )
+            faulted = jnp.where(act, adv_f, faulted)
+            recovered = recovered & act
+
         # --- 2. admit: fill free decode slots from the rings, FIFO ------
         free = rem <= 0
         free_rank = jnp.cumsum(free, axis=1) - 1
         n_admit = jnp.minimum(q_len, free.sum(axis=1, dtype=jnp.int32))
         n_admit = jnp.where(act, n_admit, 0)
+        if has_fault and static.fault == "crash":
+            # A crashed replica is frozen: queued requests wait (conserved)
+            # and resume admission on recovery.
+            n_admit = jnp.where(faulted, 0, n_admit)
         take = free & (free_rank < n_admit[:, None])
         qidx = (q_head[:, None] + free_rank) % c_n
         w_gather = jnp.take_along_axis(q_work, qidx, axis=1)
@@ -1011,7 +1320,19 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
         # credit-schedule units (rem may go negative == free, matching the
         # reference).
         active = (rem > 0) & act
-        if static.use_rates:
+        if has_fault:
+            if static.use_rates:
+                nominal = workload_lib.service_units(t, scn.decode_rates)
+                rates = scn.decode_rates
+            else:
+                nominal = jnp.ones((r_n,), jnp.int32)
+                rates = None
+            units = workload_lib.faulted_service_units(
+                t, faulted, nominal, static.fault, scn.slow_factor,
+                rates=rates,
+            )
+            rem = rem - units[:, None] * active.astype(rem.dtype)
+        elif static.use_rates:
             units = workload_lib.service_units(t, scn.decode_rates)
             rem = rem - units[:, None] * active.astype(rem.dtype)
         else:
@@ -1037,15 +1358,47 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
             jnp.float32
         )
         err = jnp.abs(true_occ - approx)
-        trig, comm_adv = comm_lib.evaluate(comm_state, ccfg, err, completions)
+        # Crashed replicas cannot send (counters keep advancing, so the
+        # first healthy slot re-fires a due trigger); a recovery forces a
+        # resync message regardless of the trigger predicate.  Under the
+        # network model the trigger only expresses *intent*: message
+        # accounting and the dispatcher-view update belong to net_step.
+        can_send = force = None
+        if has_fault and static.fault == "crash":
+            can_send = ~faulted
+            force = recovered
+        trig, comm_adv = comm_lib.evaluate(
+            comm_state, ccfg, err, completions,
+            can_send=can_send, force=force, count_msgs=not has_net,
+        )
         trig = trig & act
+        if has_net:
+            # --- 6. network delivery (delay/jitter/drop + piggyback) ----
+            delivered, payload, sent, net_adv = comm_lib.net_step(
+                net_state, ncfg, trig, true_occ, ndu_t, nju_t
+            )
+            delivered = delivered & act
+            extra = jnp.where(act, sent, 0)
+            if static.policy == "sqd":
+                # SQ(d)'s 2d query round-trips per routed arrival, on the
+                # same wire (mirrors CareDispatcher.route).
+                n_live = jnp.minimum(n_arr_t, a_n).astype(jnp.int32)
+                extra = extra + jnp.where(act, 2 * static.sqd * n_live, 0)
+            comm_adv = dataclasses.replace(
+                comm_adv, msgs=comm_adv.msgs + extra
+            )
+            net_state = jax.tree.map(
+                lambda adv, old: jnp.where(act, adv, old), net_adv, net_state
+            )
+            approx = jnp.where(delivered, payload, approx)
+        else:
+            approx = jnp.where(trig, true_occ, approx)
         comm_state = jax.tree.map(
             lambda adv, old: jnp.where(act, adv, old), comm_adv, comm_state
         )
-        approx = jnp.where(trig, true_occ, approx)
 
         carry = (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-                 rr_ptr, comp_slot, total_comp, dropped)
+                 rr_ptr, comp_slot, total_comp, dropped, net_state, faulted)
         out = true_occ.astype(jnp.int32) if static.trace_occupancy else None
         return carry, out
 
@@ -1062,21 +1415,31 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn: EngineScenario,
         jnp.full((n_cap,), -1, jnp.int32),  # comp_slot (rid-indexed)
         jnp.zeros((), jnp.int32),  # total completions
         jnp.zeros((), jnp.int32),  # dropped
+        # Control-plane state: None (an empty pytree subtree) when the
+        # kind is off, so the default program structure is unchanged.
+        comm_lib.NetState.init(r_n, payload_dtype=jnp.float32)
+        if has_net else None,
+        jnp.zeros((r_n,), bool) if has_fault else None,  # faulted
     )
-    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid, sub_u)
+    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid, sub_u,
+          net_du, net_ju, fault_u)
     final, occ_trace = jax.lax.scan(slot, init, xs)
     (q_len, _, _, _, rem, _, _, comm_state, _, comp_slot, total_comp,
-     dropped) = final
+     dropped, net_state, _) = final
     final_occ = q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)
-    outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ)
+    net_drops = net_state.drops if has_net else jnp.zeros((), jnp.int32)
+    outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ,
+            net_drops)
     if static.trace_occupancy:
         outs = outs + (occ_trace,)
     return outs
 
 
-@functools.partial(jax.jit, static_argnums=(6, 7))
-def _serve_one_jit(n_arr, work, tie_u, rid, sub_u, scn, n_cap, static):
-    return _serve_core(n_arr, work, tie_u, rid, sub_u, n_cap, scn, static)
+@functools.partial(jax.jit, static_argnums=(9, 10))
+def _serve_one_jit(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+                   scn, n_cap, static):
+    return _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju,
+                       fault_u, n_cap, scn, static)
 
 
 _SERVE_GRID_PROGRAMS: list = []  # jitted grid wrappers, one per (static, n_dev)
@@ -1092,8 +1455,10 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
     :func:`serve_compile_count`.
     """
     batched = jax.vmap(
-        lambda n_arr, work, tie_u, rid, sub_u, scn: _serve_core(
-            n_arr, work, tie_u, rid, sub_u, n_cap, scn, static
+        lambda n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u, scn:
+        _serve_core(
+            n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+            n_cap, scn, static
         )
     )
     if n_dev <= 1:
@@ -1103,7 +1468,7 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
         from jax.sharding import Mesh, PartitionSpec as P
 
         mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
-        spec = (P("runs"),) * 6
+        spec = (P("runs"),) * 9
         fn = jax.jit(
             shard_map(batched, mesh=mesh, in_specs=spec, out_specs=P("runs"))
         )
@@ -1137,11 +1502,12 @@ class ServeResult:
     mean_jct: float
     p99_jct: float
     msgs_per_completion: float
+    net_drops: int = 0  # messages lost in flight (network="net" only)
     occupancy: Optional[np.ndarray] = None  # (T, R) when trace_occupancy
 
     @staticmethod
     def from_run(wl: ServeWorkload, comp_slot, msgs, total_comp, dropped,
-                 final_occ, occ_trace=None) -> "ServeResult":
+                 final_occ, net_drops=0, occ_trace=None) -> "ServeResult":
         comp_slot = np.asarray(comp_slot)[: wl.total].astype(np.int64)
         done = comp_slot >= 0
         jct_by_rid = np.where(done, comp_slot - wl.arrival_slot + 1, -1)
@@ -1159,6 +1525,7 @@ class ServeResult:
             mean_jct=float(jct.mean()) if jct.size else 0.0,
             p99_jct=float(np.percentile(jct, 99)) if jct.size else 0.0,
             msgs_per_completion=msgs / max(int(total_comp), 1),
+            net_drops=int(net_drops),
             occupancy=None if occ_trace is None else np.asarray(occ_trace),
         )
 
@@ -1196,7 +1563,18 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0):
             sub_u[:t] = np.where(
                 mask[..., None], wl.sub_u[idx, :d], 0.0
             )
-    return n_arr, work, tie_u, rid, sub_u
+
+    def pad_cp(arr):
+        # Control-plane uniforms: (T, R) per-slot rows, zero-width when
+        # the corresponding kind is off (no memory, no transfer).
+        if arr is None:
+            return np.zeros((t_pad, 0), np.float32)
+        out = np.zeros((t_pad, arr.shape[1]), np.float32)
+        out[: arr.shape[0]] = arr
+        return out
+
+    return (n_arr, work, tie_u, rid, sub_u, pad_cp(wl.net_drop_u),
+            pad_cp(wl.net_jit_u), pad_cp(wl.fault_u))
 
 
 def serve_grid(
@@ -1238,11 +1616,12 @@ def serve_grid(
         if (
             cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm,
             cs.policy, cs.sqd, cs.use_rates, cs.route_backend,
-            cs.deterministic_ties,
+            cs.deterministic_ties, cs.network, cs.fault,
         ) != (
             static.replicas, static.decode_slots, static.queue_cap,
             static.comm, static.policy, static.sqd, static.use_rates,
             static.route_backend, static.deterministic_ties,
+            static.network, static.fault,
         ):
             raise ValueError(
                 f"cell static part {cs} does not match grid static {static}"
@@ -1268,11 +1647,7 @@ def serve_grid(
     d = static.sqd if static.policy == "sqd" else 0
 
     padded = [_pad_workload(w, static.slots, a_pad, d) for w in flat_wls]
-    n_arr = jnp.asarray(np.stack([p[0] for p in padded]))
-    work = jnp.asarray(np.stack([p[1] for p in padded]))
-    tie_u = jnp.asarray(np.stack([p[2] for p in padded]))
-    rid = jnp.asarray(np.stack([p[3] for p in padded]))
-    sub_u = jnp.asarray(np.stack([p[4] for p in padded]))
+    arrs = [jnp.asarray(np.stack([p[i] for p in padded])) for i in range(8)]
     scn_flat = stack_scenarios(
         [cell.scenario() for cell in cells for _ in seeds]
     )
@@ -1281,13 +1656,10 @@ def serve_grid(
     n_dev = jax.local_device_count() if shard else 1
     idx = _pad_indices(n, n_dev)
     if len(idx) != n:
-        n_arr, work, tie_u, rid, sub_u = (
-            a[idx] for a in (n_arr, work, tie_u, rid, sub_u)
-        )
+        arrs = [a[idx] for a in arrs]
         scn_flat = jax.tree.map(lambda a: a[idx], scn_flat)
 
-    out = _serve_grid_fn(static, n_cap, n_dev)(n_arr, work, tie_u, rid,
-                                               sub_u, scn_flat)
+    out = _serve_grid_fn(static, n_cap, n_dev)(*arrs, scn_flat)
     out_np = [np.asarray(o)[:n] for o in out]
     s = len(seeds)
     return [
@@ -1328,11 +1700,8 @@ def serve_one(seed: int, cell: ServeConfig, *,
     )
     n_cap = _round_up(wl.total, 1024)
     d = static.sqd if static.policy == "sqd" else 0
-    n_arr, work, tie_u, rid, sub_u = _pad_workload(
-        wl, static.slots, static.max_arrivals, d
-    )
+    padded = _pad_workload(wl, static.slots, static.max_arrivals, d)
     out = _serve_one_jit(
-        jnp.asarray(n_arr), jnp.asarray(work), jnp.asarray(tie_u),
-        jnp.asarray(rid), jnp.asarray(sub_u), cell.scenario(), n_cap, static,
+        *(jnp.asarray(p) for p in padded), cell.scenario(), n_cap, static,
     )
     return ServeResult.from_run(wl, *(np.asarray(o) for o in out))
