@@ -26,7 +26,6 @@ messages or syncs, per regime.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +96,9 @@ def _train(cfg, steps: int, sync_every_step: bool, seed: int = 0):
                     state, balancer=sync_fn(state.balancer)
                 )
                 syncs += 1
+    # The loop only forces metrics["loss"]; the last step's state update
+    # can still be in flight when the caller's clock stops.
+    jax.block_until_ready(state)
     return losses, imb, syncs
 
 
@@ -112,9 +114,7 @@ def _section_a(quick: bool) -> list[dict]:
     results = {}
     for name, (care, every) in regimes.items():
         cfg = _reduced_moe(care)
-        t0 = time.perf_counter()
-        losses, imb, syncs = _train(cfg, steps, every)
-        wall = time.perf_counter() - t0
+        (losses, imb, syncs), wall = common.timed(_train, cfg, steps, every)
         half = len(imb) // 2
         tail_imb = float(np.mean(imb[half:])) if imb else 0.0
         results[name] = (tail_imb, losses[-1], syncs)
@@ -173,10 +173,10 @@ def _section_b(quick: bool) -> list[dict]:
     rows = []
     results = {}
     for name, cfg in regimes:
-        t0 = time.perf_counter()
-        # All seeds in one vmapped scan (dispatch_batch), not a Python loop.
-        rs = dispatch_batch(range(seeds), cfg)
-        wall = time.perf_counter() - t0
+        # All seeds in one vmapped scan (dispatch_batch), not a Python
+        # loop; timed() blocks on the returned results before the clock
+        # stops.
+        rs, wall = common.timed(dispatch_batch, range(seeds), cfg)
         agg = {
             "tail_gap": float(np.mean([r.tail_gap for r in rs])),
             "transient_gap": float(np.mean([r.transient_gap for r in rs])),

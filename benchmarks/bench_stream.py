@@ -1,0 +1,239 @@
+"""Streaming serving tier: the segment engine of ``serve_stream``.
+
+Four row families measure what the chunked driver buys over one-shot and
+naively-chunked execution:
+
+* ``stream/slots_per_sec`` -- raw pipelined throughput: one
+  ``serve_stream`` call over the full horizon at a production chunk size
+  (4096), clock stopped behind the final blocking carry read.  The wall
+  field is machine-dependent (``slots_per_s``: perf-skipped by diff.py).
+
+* ``stream/overlap_ratio`` -- what the async pipeline saves.  The
+  *synchronous no-prefetch reference* is the naive chunker a user would
+  write without the streaming driver: one ``serve_stream`` call **per
+  chunk**, threading ``StreamResult.state`` through, so every chunk pays
+  a full device sync plus the host readback of the result counters
+  before the next chunk's slab is even sampled.  The pipelined driver
+  dispatches chunk k, samples chunk k+1's slab during k's device
+  execution, and never materialises mid-stream results.  Both arms
+  compute the *bit-identical* trace (asserted via the message / JCT
+  accumulators -- the ``stepped_matches_streamed`` flag), so the ratio
+  is a pure driver cost.  Gate: best ratio across the chunk ladder
+  >= 1.2 (``overlap_ge_1_2``); the ratio itself is recorded one-sided
+  (``overlap_speedup``).
+
+* ``stream/jct_load0.98`` -- steady-state JCT at load -> 0.98 from the
+  on-device warmup-discarded accumulators (Welford mean/std + log-bucket
+  histogram quantiles): the row the fixed-horizon engine cannot produce
+  without materialising a per-request JCT array.  Deterministic given
+  the seed, so the quantiles are diffable metric columns.
+
+* ``stream/soak`` -- long-horizon memory bound: a >= 1e7-slot run (full
+  mode; quick scales down) must hold host peak memory at the level of a
+  short probe run, because the driver keeps O(chunk) host state -- the
+  sampler's LRU block cache plus one in-flight slab -- independent of
+  the total horizon.  Peaks are tracemalloc's (Python + numpy; the
+  device carry is O(replicas * queue_cap) by construction), compared
+  probe vs 10x-longer soak after a warm-up run so jit compilation is
+  excluded (``bounded_memory``).
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+import numpy as np
+
+from benchmarks import common
+from repro.serve import engine
+
+# The serving cell of the streaming rows: paper-sized control plane (ET-4
+# corrections), modest replica group so CI walls stay in seconds.
+_CELL = dict(replicas=8, decode_slots=4, queue_cap=512, comm="et", x=4.0)
+
+OVERLAP_CHUNKS = (128, 256)
+THROUGHPUT_CHUNK = 4096
+
+
+def _cell(slots: int, load: float = 0.95) -> engine.ServeConfig:
+    return engine.ServeConfig(slots=slots, load=load, **_CELL)
+
+
+def _sampler(cell: engine.ServeConfig) -> engine.StreamSampler:
+    return engine.StreamSampler(0, engine.StreamParams.for_cell(cell))
+
+
+def _stream(cell, chunk, slots, **kw):
+    return engine.serve_stream(
+        0, cell, chunk=chunk, slots=slots, sampler=_sampler(cell), **kw
+    )
+
+
+def _stepped(cell, chunk, slots):
+    """The synchronous no-prefetch reference: one blocking segment per
+    chunk, state threaded through ``StreamResult`` -- per-chunk device
+    sync + host readback, next slab sampled only after."""
+    res = engine.serve_stream(
+        0, cell, chunk=chunk, slots=chunk, sampler=_sampler(cell),
+        prefetch=False,
+    )
+    for _ in range(1, slots // chunk):
+        res = engine.serve_stream(
+            0, cell, chunk=chunk, slots=chunk, state=res.state,
+            prefetch=False,
+        )
+    return res
+
+
+def _best_wall(fn, reps: int):
+    """(last result, best-of-reps wall).  ``serve_stream`` blocks on the
+    final carry itself, so perf_counter around the call is honest."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def _accumulators_match(a: engine.StreamResult, b: engine.StreamResult) -> bool:
+    """Bitwise equality of every on-device accumulator of two runs."""
+    return (
+        a.messages == b.messages
+        and a.completed == b.completed
+        and a.dropped == b.dropped
+        and a.count == b.count
+        and a.mean_jct == b.mean_jct
+        and a.max_jct == b.max_jct
+        and np.array_equal(a.hist, b.hist)
+        and np.array_equal(a.final_occupancy, b.final_occupancy)
+    )
+
+
+def run(quick: bool = False) -> list[dict]:
+    rows: list[dict] = []
+    reps = 2 if quick else 3
+
+    # --- pipelined throughput -----------------------------------------
+    slots = 65_536 if quick else 262_144
+    cell = _cell(slots)
+    _stream(cell, THROUGHPUT_CHUNK, 2 * THROUGHPUT_CHUNK)  # compile
+    res, wall = _best_wall(
+        lambda: _stream(cell, THROUGHPUT_CHUNK, slots), reps
+    )
+    rows.append(
+        common.row(
+            "stream/slots_per_sec",
+            wall,
+            slots,
+            common.fmt_derived(
+                slots_per_sec=slots / wall,
+                chunk=THROUGHPUT_CHUNK,
+                completed=res.completed,
+                msgs_per_slot=res.msgs_per_slot,
+            ),
+            slots_per_s=slots / wall,
+            msgs_per_slot=res.msgs_per_slot,
+        )
+    )
+
+    # --- overlap vs the synchronous no-prefetch reference -------------
+    o_slots = 16_384 if quick else 32_768
+    o_cell = _cell(o_slots)
+    best_ratio, ratios, match = 0.0, {}, True
+    for chunk in OVERLAP_CHUNKS:
+        _stream(o_cell, chunk, 2 * chunk)  # compile once per chunk size
+        piped, p_wall = _best_wall(
+            lambda c=chunk: _stream(o_cell, c, o_slots), reps
+        )
+        stepped, s_wall = _best_wall(
+            lambda c=chunk: _stepped(o_cell, c, o_slots), reps
+        )
+        match = match and _accumulators_match(piped, stepped)
+        ratios[chunk] = s_wall / p_wall
+        best_ratio = max(best_ratio, ratios[chunk])
+    rows.append(
+        common.row(
+            "stream/overlap_ratio",
+            0.0,
+            o_slots,
+            common.fmt_derived(
+                overlap_ratio=best_ratio,
+                **{f"ratio_chunk{c}": r for c, r in ratios.items()},
+                stepped_matches_streamed=match,
+                overlap_ge_1_2=bool(best_ratio >= 1.2),
+            ),
+            overlap_speedup=best_ratio,
+            stepped_matches_streamed=match,
+            overlap_ge_1_2=bool(best_ratio >= 1.2),
+        )
+    )
+
+    # --- steady-state JCT at load -> 0.98 -----------------------------
+    j_slots = 60_000 if quick else 240_000
+    j_cell = _cell(j_slots, load=0.98)
+    j_res, j_wall = _best_wall(
+        lambda: _stream(j_cell, THROUGHPUT_CHUNK, j_slots,
+                        warmup=j_slots // 5),
+        1,
+    )
+    summ = j_res.jct_summary()
+    rows.append(
+        common.row(
+            "stream/jct_load0.98",
+            j_wall,
+            j_slots,
+            common.fmt_derived(
+                mean_jct=summ["mean"],
+                p50=summ["p50"],
+                p99=summ["p99"],
+                p999=summ["p999"],
+                count=summ["count"],
+                msgs_per_completion=j_res.msgs_per_completion,
+            ),
+            mean_jct=summ["mean"],
+            p50=summ["p50"],
+            p99=summ["p99"],
+            p999=summ["p999"],
+            count=summ["count"],
+        )
+    )
+
+    # --- long-horizon soak: host memory independent of the horizon ----
+    probe = 65_536 if quick else 1_000_000
+    soak = 4 * probe if quick else 10_000_000
+    s_cell = _cell(probe)
+    chunk = 2_048 if quick else 8_192
+    _stream(s_cell, chunk, 2 * chunk)  # compile outside the traces
+    tracemalloc.start()
+    _stream(s_cell, chunk, probe)
+    peak_probe = tracemalloc.get_traced_memory()[1]
+    tracemalloc.reset_peak()
+    t0 = time.perf_counter()
+    s_res = _stream(s_cell, chunk, soak)
+    s_wall = time.perf_counter() - t0
+    peak_soak = tracemalloc.get_traced_memory()[1]
+    tracemalloc.stop()
+    # Bounded: a 4x/10x longer horizon may not grow the host peak beyond
+    # jitter (the driver holds one slab + an LRU block cache, both
+    # O(chunk)); an O(horizon) leak would show up as a ~4x/10x peak.
+    bounded = peak_soak <= 1.5 * peak_probe + 32 * 2**20
+    rows.append(
+        common.row(
+            "stream/soak",
+            s_wall,
+            soak,
+            common.fmt_derived(
+                soak_slots=soak,
+                slots_per_sec=soak / s_wall,
+                peak_probe_mb=peak_probe / 2**20,
+                peak_soak_mb=peak_soak / 2**20,
+                bounded_memory=bool(bounded),
+                completed=s_res.completed,
+            ),
+            soak_slots=soak,
+            slots_per_s=soak / s_wall,
+            bounded_memory=bool(bounded),
+        )
+    )
+    return rows

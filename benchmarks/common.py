@@ -221,6 +221,21 @@ def timed_simulate_batch(seeds: Sequence[int], cfg: slotted_sim.SimConfig):
     return results[0], walls[0]
 
 
+def timed(fn, *args, **kw):
+    """``(fn(*args), wall_s)`` with the clock stopped only after every
+    array in the returned pytree is materialised.
+
+    The single honest-wall primitive: timing a bare jitted call measures
+    dispatch, not execution (JAX is async -- on CPU too), so every
+    benchmark that hands back device values must stop the clock behind
+    ``jax.block_until_ready`` over the *returned pytree*.  Host-side
+    returns (lists, floats, numpy) pass through unchanged.
+    """
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args, **kw))
+    return out, time.perf_counter() - t0
+
+
 def row(name: str, wall_s: float, slots: int, derived: str, **extra) -> dict:
     """One CSV row; us_per_call is wall microseconds per simulated slot."""
     return {

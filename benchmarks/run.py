@@ -42,6 +42,9 @@ The mapping to paper artifacts:
   bench_heavy_tail      -> beyond-paper: ET-x under Pareto job sizes
   bench_moe_balance     -> beyond-paper: CARE balancer in MoE training
   bench_serving         -> beyond-paper: CARE dispatch in serving
+  bench_stream          -> beyond-paper: streaming segment engine
+                           (pipelined chunk throughput / overlap /
+                           steady-state JCT / bounded-memory soak)
   bench_faults          -> beyond-paper: degraded networks + server faults
   bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
 """
@@ -75,6 +78,7 @@ BENCHES = [
     "bench_heavy_tail",
     "bench_moe_balance",
     "bench_serving",
+    "bench_stream",
     "bench_route",
     "bench_faults",
     "bench_roofline",

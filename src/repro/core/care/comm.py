@@ -372,6 +372,59 @@ def net_step(
     )
 
 
+def control_plane_init(
+    k: int,
+    *,
+    network: str = "none",
+    fault: str = "none",
+    xp=jnp,
+    payload_dtype=None,
+):
+    """Initial control-plane carries for one engine instance.
+
+    The single constructor every tier's scan/stream carry goes through:
+    returns ``(comm, net, faulted)`` where ``net`` / ``faulted`` are
+    ``None`` (an empty pytree subtree) when the corresponding kind is off,
+    so the default program structure is unchanged.  The streaming serving
+    engine initialises its chunk carry here and a future live arrival feed
+    resumes from the same triple via :func:`snapshot_state` /
+    :func:`restore_state`.
+    """
+    comm = CommState.init(k, xp=xp)
+    net = (
+        NetState.init(k, xp=xp, payload_dtype=payload_dtype)
+        if network != "none"
+        else None
+    )
+    faulted = xp.zeros((k,), bool) if fault != "none" else None
+    return comm, net, faulted
+
+
+def snapshot_state(tree):
+    """Host-side numpy copy of a control-plane (or whole-engine) carry.
+
+    The persistence half of the resume seam: a carry pytree -- any nesting
+    of :class:`CommState` / :class:`NetState` / plain arrays -- becomes
+    concrete ``numpy`` arrays safe to hold across jit calls, pickle to
+    disk, or hand to a host-side dispatcher between stream segments.
+    """
+    import numpy as np
+
+    return jax.tree.map(lambda a: np.asarray(a), tree)
+
+
+def restore_state(tree, xp=jnp):
+    """Reconstitute a :func:`snapshot_state` carry on the target namespace.
+
+    ``xp=jnp`` places the arrays back on device for the jitted scans;
+    ``xp=np`` yields the numpy view the host-side ``CareDispatcher``
+    mirrors consume.  Structure (including ``None`` subtrees for disabled
+    kinds) is preserved, so the restored carry drops straight back into
+    the compiled chunk step that produced it.
+    """
+    return jax.tree.map(lambda a: xp.asarray(a), tree)
+
+
 def validate_control_plane(
     *,
     network: str = "none",

@@ -19,15 +19,21 @@ def ccdf(samples: np.ndarray, grid: np.ndarray | None = None):
 def jct_summary(jct: np.ndarray) -> dict:
     """Mean / tail percentiles of job completion times.
 
-    Zero-completion safe: an empty sample (short-horizon quick runs)
+    Zero-completion safe: an empty sample (short-horizon quick runs, a
+    streaming chunk whose warmup window swallowed every completion)
     yields all-zero statistics instead of NaN rows -- every percentile /
     mean reduction over JCTs must route through here or
     :func:`mean_jct`, never through raw ``np.mean``/``np.percentile``.
+    The ``count`` field disambiguates a legitimately-zero mean from an
+    empty window, so partial-window consumers never have to test
+    ``mean == 0`` (which a real sample cannot produce: JCTs are >= 1).
     """
     jct = np.asarray(jct)
     if jct.size == 0:
-        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p999": 0.0}
+        return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                "p99": 0.0, "p999": 0.0}
     return {
+        "count": int(jct.size),
         "mean": float(jct.mean()),
         "p50": float(np.percentile(jct, 50)),
         "p90": float(np.percentile(jct, 90)),
@@ -53,6 +59,117 @@ def relative_communication(
     """
     msgs = slotted_sim.exact_state_messages(result, policy, sqd)
     return msgs / max(result.departures, 1)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-bucket log-spaced JCT histogram: the on-device tail-quantile
+# accumulator of the streaming serving engine (serve/engine.py carries one
+# in its chunk-step state).  Buckets must be computable with exact integer
+# arithmetic on BOTH array namespaces (numpy host recomputation in tests,
+# jax inside a jitted scan), so bucketing runs on floor(log2) via count-
+# leading-zeros / float64 frexp -- never float32 log2, which can round a
+# power-of-two boundary the wrong way.
+# ---------------------------------------------------------------------------
+
+# JCTs 1..3 get exact buckets; from 4 up, every octave [2^e, 2^(e+1)) is
+# split into 4 linear sub-octaves (<= 25% relative width) through the full
+# int32 range: 3 + 4 * 29 = 119 buckets.
+HIST_BUCKETS = 119
+
+
+def _floor_log2_i32(j, xp):
+    """Exact floor(log2(j)) for positive int32 ``j`` on either namespace."""
+    if xp is np:
+        # float64 carries every int32 exactly, so frexp's exponent is exact.
+        return (np.frexp(np.asarray(j, np.float64))[1] - 1).astype(np.int32)
+    from jax import lax
+
+    return (31 - lax.clz(j.astype(xp.int32))).astype(xp.int32)
+
+
+def jct_bucket(j, xp=np):
+    """Histogram bucket index of JCT ``j`` (int, clipped into [1, 2^31-1]).
+
+    Pure integer arithmetic (shifts + masks after the exact floor-log2), so
+    the jitted streaming engine and the numpy recomputation in tests place
+    every sample in the same bucket bit for bit.
+    """
+    j = xp.clip(xp.asarray(j, xp.int32), 1, np.iinfo(np.int32).max)
+    e = _floor_log2_i32(j, xp)
+    sub = (j >> xp.maximum(e - 2, 0)) & 3
+    return xp.where(e < 2, j - 1, 4 * e + sub - 5).astype(xp.int32)
+
+
+def jct_bucket_edges() -> np.ndarray:
+    """Lower edges of every histogram bucket plus the exclusive top, int64.
+
+    ``edges[b] <= j < edges[b + 1]`` iff ``jct_bucket(j) == b``; shape
+    ``(HIST_BUCKETS + 1,)`` with ``edges[-1] == 2^31``.
+    """
+    edges = np.empty(HIST_BUCKETS + 1, np.int64)
+    edges[:3] = [1, 2, 3]
+    b = np.arange(3, HIST_BUCKETS, dtype=np.int64)
+    e, sub = (b + 5) // 4, (b + 5) % 4
+    edges[3:HIST_BUCKETS] = (4 + sub) << (e - 2)
+    edges[HIST_BUCKETS] = np.int64(2) ** 31
+    return edges
+
+
+def log_hist_quantiles(hist: np.ndarray, qs) -> np.ndarray:
+    """Quantiles of a :func:`jct_bucket` histogram, one per ``q`` in ``qs``.
+
+    Linear interpolation inside the containing bucket (exact for the
+    single-value buckets 1/2/3, <= one sub-octave of error above).
+    Zero-count safe like :func:`jct_summary`: an empty histogram -- a
+    partial window with no completions -- yields defined zeros, never a
+    divide by zero or NaN.
+    """
+    hist = np.asarray(hist, np.int64)
+    qs = np.atleast_1d(np.asarray(qs, np.float64))
+    total = int(hist.sum())
+    if total == 0:
+        return np.zeros(qs.shape)
+    edges = jct_bucket_edges()
+    cum = np.cumsum(hist)
+    ranks = qs * (total - 1)
+    out = np.empty(qs.shape)
+    for i, rank in enumerate(ranks):
+        b = int(np.searchsorted(cum, rank, side="right"))
+        prev = cum[b - 1] if b > 0 else 0
+        frac = (rank - prev + 0.5) / hist[b]
+        out[i] = edges[b] + min(max(frac, 0.0), 1.0) * (edges[b + 1] - edges[b] - 1)
+    return out
+
+
+def stream_summary(count: int, mean: float, m2: float, max_jct: int,
+                   hist: np.ndarray) -> dict:
+    """Summary dict of the streaming engine's on-device JCT accumulators.
+
+    ``count``/``mean``/``m2`` are the Welford accumulators, ``hist`` the
+    log-bucket histogram (tail quantiles come from it -- robust regardless
+    of the f32 moment precision), ``max_jct`` the exact maximum.  Partial
+    windows are NaN-safe: ``count == 0`` yields all-zero statistics, same
+    convention as :func:`jct_summary`.
+    """
+    count = int(count)
+    if count == 0:
+        return {"count": 0, "mean": 0.0, "std": 0.0, "p50": 0.0,
+                "p90": 0.0, "p99": 0.0, "p999": 0.0, "max": 0}
+    qs = log_hist_quantiles(hist, (0.5, 0.9, 0.99, 0.999))
+    # The exact max is tracked alongside the histogram; interpolating
+    # inside the top occupied bucket can overshoot it, so clamp (a
+    # quantile above the sample maximum is a contradiction).
+    p50, p90, p99, p999 = np.minimum(qs, float(max_jct))
+    return {
+        "count": count,
+        "mean": float(mean),
+        "std": float(np.sqrt(max(float(m2), 0.0) / count)),
+        "p50": float(p50),
+        "p90": float(p90),
+        "p99": float(p99),
+        "p999": float(p999),
+        "max": int(max_jct),
+    }
 
 
 def ccdf_dominates(a: np.ndarray, b: np.ndarray, tol: float = 0.02) -> bool:

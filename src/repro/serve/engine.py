@@ -81,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.care import comm as comm_lib
+from repro.core.care import metrics as metrics_lib
 from repro.core.care import routing as routing_lib
 from repro.core.care import workload as workload_lib
 from repro.kernels import ops as kernel_ops
@@ -426,6 +427,14 @@ class EngineStatic:
     deterministic_ties: bool = False
     network: str = "none"  # "none" | "net" (control-plane kind, static)
     fault: str = "none"  # "none" | "crash" | "slow" (replica fault kind)
+    # Segment-engine mode (serve_stream): ``slots`` becomes the *chunk*
+    # length, the carry is threaded across jit calls (donated in place),
+    # the rid ring carries arrival slots instead of request ids, and
+    # completions fold into the on-device StreamMetrics accumulators
+    # instead of the O(offered) comp_slot scatter.  The slot body is
+    # otherwise op-identical to the fixed-horizon scan, which is what
+    # makes any chunking bit-identical to the monolithic trace.
+    stream: bool = False
 
 
 @jax.tree_util.register_dataclass
@@ -457,6 +466,10 @@ class EngineScenario:
     crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
     recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
     slow_factor: jnp.ndarray  # () f32 service-rate scale of fault="slow"
+    # Streaming-mode warmup: completions landing before this absolute slot
+    # are discarded from the StreamMetrics accumulators (transient
+    # discard); inert in fixed-horizon mode.
+    warmup: jnp.ndarray  # () i32
 
     @staticmethod
     def create(
@@ -476,6 +489,7 @@ class EngineScenario:
         crash_rate: float = 0.0,
         recover_rate: float = 0.0,
         slow_factor: float = 1.0,
+        warmup: int = 0,
     ) -> "EngineScenario":
         if horizon is None:
             horizon = np.iinfo(np.int32).max
@@ -500,12 +514,85 @@ class EngineScenario:
             crash_rate=jnp.float32(crash_rate),
             recover_rate=jnp.float32(recover_rate),
             slow_factor=jnp.float32(slow_factor),
+            warmup=jnp.int32(warmup),
         )
 
 
 def stack_scenarios(scenarios: Sequence[EngineScenario]) -> EngineScenario:
     """Stack unbatched cells into one batched scenario (leading axis)."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *scenarios)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamMetrics:
+    """On-device streaming JCT/message accumulators (segment-engine carry).
+
+    At soak scale (1e7+ slots) completion records cannot be concatenated
+    host-side, so the chunk carry folds every completion into O(1) state
+    the moment it happens:
+
+    * ``count`` / ``mean`` / ``m2`` -- Welford running mean and sum of
+      squared deviations over post-warmup JCTs, combined per slot with
+      Chan's parallel-batch rule.  The combine happens *inside* the scan
+      for each slot's completion batch, so the accumulator trajectory is
+      independent of how the stream is chunked -- any chunking is
+      bit-identical.  f32: good to ~1e7 completions before the n/(n+b)
+      ratios lose single-precision mass; tail quantiles never rely on it.
+    * ``hist`` -- the fixed-bucket log-spaced JCT histogram of
+      :func:`repro.core.care.metrics.jct_bucket` (exact integer
+      bucketing), the robust source of tail quantiles at any scale.
+    * ``max_jct`` -- exact running maximum.
+
+    Message/drop totals live where they always did (``CommState.msgs``,
+    ``NetState.drops``) -- the carry threads them across chunks unchanged.
+    """
+
+    count: jnp.ndarray  # () i32 post-warmup completions
+    mean: jnp.ndarray  # () f32 running mean JCT
+    m2: jnp.ndarray  # () f32 running sum of squared deviations
+    max_jct: jnp.ndarray  # () i32 exact max JCT
+    hist: jnp.ndarray  # (metrics.HIST_BUCKETS,) i32 log-bucket counts
+
+    @staticmethod
+    def init() -> "StreamMetrics":
+        return StreamMetrics(
+            count=jnp.zeros((), jnp.int32),
+            mean=jnp.zeros((), jnp.float32),
+            m2=jnp.zeros((), jnp.float32),
+            max_jct=jnp.zeros((), jnp.int32),
+            hist=jnp.zeros((metrics_lib.HIST_BUCKETS,), jnp.int32),
+        )
+
+    def update(self, jct: jnp.ndarray, meas: jnp.ndarray) -> "StreamMetrics":
+        """Fold one slot's completion batch in (``meas`` masks ``jct``).
+
+        Chan's batch combine in f32 -- per slot, never per chunk, so the
+        result cannot depend on chunk boundaries.  A slot with no measured
+        completions is an exact no-op on every field.
+        """
+        n_b = jnp.sum(meas, dtype=jnp.int32)
+        has = n_b > 0
+        jf = jct.astype(jnp.float32)
+        n_bf = n_b.astype(jnp.float32)
+        mean_b = jnp.sum(jnp.where(meas, jf, 0.0)) / jnp.maximum(n_bf, 1.0)
+        m2_b = jnp.sum(jnp.where(meas, (jf - mean_b) ** 2, 0.0))
+        n_af = self.count.astype(jnp.float32)
+        tot = jnp.maximum(n_af + n_bf, 1.0)
+        delta = mean_b - self.mean
+        mean = jnp.where(has, self.mean + delta * n_bf / tot, self.mean)
+        m2 = jnp.where(
+            has, self.m2 + m2_b + delta * delta * n_af * n_bf / tot, self.m2
+        )
+        bucket = jnp.where(
+            meas, metrics_lib.jct_bucket(jct, xp=jnp), metrics_lib.HIST_BUCKETS
+        ).reshape(-1)
+        hist = self.hist.at[bucket].add(1, mode="drop")
+        max_jct = jnp.maximum(self.max_jct, jnp.max(jnp.where(meas, jct, 0)))
+        return StreamMetrics(
+            count=self.count + n_b, mean=mean, m2=m2, max_jct=max_jct,
+            hist=hist,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -1135,7 +1222,8 @@ def run_serving_sim(
 
 
 def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
-                n_cap, scn: EngineScenario, static: EngineStatic):
+                n_cap, scn: EngineScenario, static: EngineStatic,
+                carry=None, t0=None):
     """One serving run as a ``lax.scan`` over slots; traceable under vmap.
 
     Inputs are the padded per-slot workload: ``n_arr (T,)`` arrival counts,
@@ -1156,6 +1244,17 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
     ``static.policy`` picks the route step at trace time; the drain-time
     score and heterogeneous decode/drain rates consume the traced
     ``scn.decode_rates`` operand, so a rate ladder shares one program.
+
+    Segment mode (``static.stream``): ``carry`` resumes a previous chunk's
+    final state and ``t0`` offsets the slot clock so ``t`` is absolute
+    across chunks (``act = t < horizon`` then doubles as the tail-padding
+    mask of a partial last chunk, exactly like the fixed engine's padded
+    horizon).  The rid lanes are ignored -- a request's identity reduces
+    to its arrival slot, synthesised on device -- and completions fold
+    into the :class:`StreamMetrics` carry slot-by-slot instead of the
+    rid-indexed ``comp_slot`` scatter.  Every op the dynamics see (routing,
+    admission, decode, drain, trigger, delivery) is identical to the fixed
+    path, which is what makes any chunking bit-identical to it.
     Exactness notes: the reference dispatcher carries its approximation in
     float32 too, so every drain/score product is the same IEEE single op
     on both backends (dyadic or not); decode credits are integers from the
@@ -1184,9 +1283,17 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         )
 
     def slot(carry, xs):
+        # Position 9 (``comp_slot``) is the rid-indexed completion-slot
+        # scatter in fixed mode and the StreamMetrics accumulators in
+        # stream mode; position 5 (``arid``) holds request ids in fixed
+        # mode and arrival slots in stream mode.
         (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
          rr_ptr, comp_slot, total_comp, dropped, net_state, faulted) = carry
         t, n_arr_t, work_t, tie_t, rid_t, sub_t, ndu_t, nju_t, fu_t = xs
+        if static.stream:
+            # A streamed request's identity is its arrival slot: the ring
+            # stores it, completion turns it into a JCT on device.
+            rid_t = jnp.full((a_n,), t, jnp.int32)
         act = t < scn.horizon
         # Decode-slot busy count is frozen during the arrival phase -- the
         # dispatcher routes against the previous slot's replica state.
@@ -1339,11 +1446,18 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
             rem = rem - active.astype(rem.dtype)
         done = active & (rem <= 0)
         completions = done.sum(axis=1, dtype=jnp.int32)
-        comp_idx = jnp.where(done, arid, n_cap).reshape(-1)
-        comp_slot = comp_slot.at[comp_idx].max(
-            jnp.where(done, t, -1).reshape(-1).astype(jnp.int32),
-            mode="drop",
-        )
+        if static.stream:
+            # arid carries arrival slots: the JCT is available on device
+            # the slot a request completes, and folds straight into the
+            # O(1) accumulators (post-warmup completions only).
+            jct_t = t - arid + 1
+            comp_slot = comp_slot.update(jct_t, done & (t >= scn.warmup))
+        else:
+            comp_idx = jnp.where(done, arid, n_cap).reshape(-1)
+            comp_slot = comp_slot.at[comp_idx].max(
+                jnp.where(done, t, -1).reshape(-1).astype(jnp.int32),
+                mode="drop",
+            )
         arid = jnp.where(done, -1, arid)
         total_comp = total_comp + jnp.sum(completions, dtype=jnp.int32)
 
@@ -1402,28 +1516,16 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         out = true_occ.astype(jnp.int32) if static.trace_occupancy else None
         return carry, out
 
-    init = (
-        jnp.zeros((r_n,), jnp.int32),  # q_len
-        jnp.zeros((r_n,), jnp.int32),  # q_head
-        jnp.zeros((r_n, c_n), jnp.int32),  # q_work ring
-        jnp.full((r_n, c_n), -1, jnp.int32),  # q_rid ring
-        jnp.zeros((r_n, s_n), jnp.int32),  # rem (decode slots)
-        jnp.full((r_n, s_n), -1, jnp.int32),  # arid
-        jnp.zeros((r_n,), jnp.float32),  # approx
-        comm_lib.CommState.init(r_n),
-        jnp.zeros((), jnp.int32),  # rr_ptr ("rr" policy)
-        jnp.full((n_cap,), -1, jnp.int32),  # comp_slot (rid-indexed)
-        jnp.zeros((), jnp.int32),  # total completions
-        jnp.zeros((), jnp.int32),  # dropped
-        # Control-plane state: None (an empty pytree subtree) when the
-        # kind is off, so the default program structure is unchanged.
-        comm_lib.NetState.init(r_n, payload_dtype=jnp.float32)
-        if has_net else None,
-        jnp.zeros((r_n,), bool) if has_fault else None,  # faulted
-    )
-    xs = (jnp.arange(t_n, dtype=jnp.int32), n_arr, work, tie_u, rid, sub_u,
-          net_du, net_ju, fault_u)
+    init = _engine_init(static, n_cap) if carry is None else carry
+    tv = jnp.arange(t_n, dtype=jnp.int32)
+    if t0 is not None:
+        tv = tv + t0  # absolute slot clock of the segment engine
+    xs = (tv, n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u)
     final, occ_trace = jax.lax.scan(slot, init, xs)
+    if static.stream:
+        # Segment mode: the caller threads the whole carry to the next
+        # chunk; metrics/counters are read off it after the last one.
+        return final
     (q_len, _, _, _, rem, _, _, comm_state, _, comp_slot, total_comp,
      dropped, net_state, _) = final
     final_occ = q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)
@@ -1433,6 +1535,38 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
     if static.trace_occupancy:
         outs = outs + (occ_trace,)
     return outs
+
+
+def _engine_init(static: EngineStatic, n_cap: int):
+    """The scan/stream carry at slot 0 (shared by both engine modes).
+
+    Position 9 is the rid-indexed completion-slot scatter in fixed mode
+    and the :class:`StreamMetrics` accumulators in stream mode; the
+    control-plane subtrees are ``None`` when their kinds are off, so the
+    default program structure is unchanged.
+    """
+    r_n, s_n, c_n = static.replicas, static.decode_slots, static.queue_cap
+    comm0, net0, fault0 = comm_lib.control_plane_init(
+        r_n, network=static.network, fault=static.fault,
+        payload_dtype=jnp.float32,
+    )
+    return (
+        jnp.zeros((r_n,), jnp.int32),  # q_len
+        jnp.zeros((r_n,), jnp.int32),  # q_head
+        jnp.zeros((r_n, c_n), jnp.int32),  # q_work ring
+        jnp.full((r_n, c_n), -1, jnp.int32),  # q_rid / q_arr ring
+        jnp.zeros((r_n, s_n), jnp.int32),  # rem (decode slots)
+        jnp.full((r_n, s_n), -1, jnp.int32),  # arid / arrival slots
+        jnp.zeros((r_n,), jnp.float32),  # approx
+        comm0,
+        jnp.zeros((), jnp.int32),  # rr_ptr ("rr" policy)
+        StreamMetrics.init() if static.stream
+        else jnp.full((n_cap,), -1, jnp.int32),  # comp_slot (rid-indexed)
+        jnp.zeros((), jnp.int32),  # total completions
+        jnp.zeros((), jnp.int32),  # dropped
+        net0,
+        fault0,
+    )
 
 
 @functools.partial(jax.jit, static_argnums=(9, 10))
@@ -1534,12 +1668,17 @@ def _round_up(n: int, mult: int) -> int:
     return ((max(n, 1) + mult - 1) // mult) * mult
 
 
-def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0):
+def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0,
+                  with_rid: bool = True):
     """Pad one workload to the (T, A) lane grid the static program takes.
 
     ``d`` is the subset-uniform lane depth: ``sqd`` under the "sqd" policy
     (the first ``d`` ``sub_u`` columns ride along as a ``(T, A, d)``
     operand), 0 otherwise (a zero-width array -- no memory, no transfer).
+    ``with_rid=False`` (stream mode) makes the rid lanes zero-width too:
+    the segment engine synthesises a request's identity from its arrival
+    slot on device, so the rid gather/transfer would be pure overhead in
+    the per-chunk host loop.
     Fully vectorised (one fancy-indexed gather per array): this runs per
     (cell, seed) on every ``serve_grid`` invocation, including the warm
     replays benchmarks time, so a Python per-slot loop would bill host
@@ -1550,7 +1689,7 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0):
     n_arr[:t] = wl.n_arr
     work = np.zeros((t_pad, a_pad), np.int32)
     tie_u = np.zeros((t_pad, a_pad), np.float32)
-    rid = np.zeros((t_pad, a_pad), np.int32)
+    rid = np.zeros((t_pad, a_pad if with_rid else 0), np.int32)
     sub_u = np.zeros((t_pad, a_pad, d), np.float32)
     if wl.total:
         lane = np.arange(a_pad, dtype=np.int64)[None, :]
@@ -1558,7 +1697,8 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0):
         idx = np.minimum(wl.base[:, None] + lane, wl.total - 1)
         work[:t] = np.where(mask, wl.work[idx], 0)
         tie_u[:t] = np.where(mask, wl.tie_u[idx], 0.0)
-        rid[:t] = np.where(mask, idx, 0)
+        if with_rid:
+            rid[:t] = np.where(mask, idx, 0)
         if d:
             sub_u[:t] = np.where(
                 mask[..., None], wl.sub_u[idx, :d], 0.0
@@ -1674,15 +1814,24 @@ def serve_grid(
 
 
 def serve_one(seed: int, cell: ServeConfig, *,
-              trace_occupancy: bool = False) -> ServeResult:
+              trace_occupancy: bool = False,
+              workload: Optional[ServeWorkload] = None) -> ServeResult:
     """Run one serving cell on the jax engine (its own compiled program).
 
     The single-run analogue of :func:`serve_grid` -- used by the
     equivalence tests as the per-cell reference the fused grid must
     reproduce (padding the arrival lanes or the rid capacity differently
-    must not change results).
+    must not change results).  ``workload`` overrides the cached sampler
+    stream (the chunk-invariance tests feed the assembled stream-sampler
+    trace to both this fixed-horizon path and :func:`serve_stream`); it
+    must cover at most ``cell.slots`` slots.
     """
-    wl = workload_for(cell, seed)
+    wl = workload if workload is not None else workload_for(cell, seed)
+    if wl.n_arr.shape[0] > cell.slots:
+        raise ValueError(
+            f"workload covers {wl.n_arr.shape[0]} slots, cell.slots is "
+            f"{cell.slots}"
+        )
     a_need = max(int(wl.n_arr.max()), 1)
     if cell.max_arrivals:
         if cell.max_arrivals < a_need:
@@ -1705,3 +1854,426 @@ def serve_one(seed: int, cell: ServeConfig, *,
         *(jnp.asarray(p) for p in padded), cell.scenario(), n_cap, static,
     )
     return ServeResult.from_run(wl, *(np.asarray(o) for o in out))
+
+
+# ---------------------------------------------------------------------------
+# Segment engine (serve_stream): chunked unbounded-horizon serving.
+#
+# The fixed-horizon scan materialises the whole trace up front, which caps
+# runs at host memory and leaves the host idle while the device computes.
+# The segment engine runs the same slot body chunk by chunk: a jitted step
+# carries the full engine state pytree across chunks with donated buffers
+# (state updated in place), while the host samples chunk k+1's workload
+# slab during chunk k's device execution -- JAX async dispatch gives the
+# overlap for free because the driver never blocks mid-stream.  Workload
+# blocks are keyed by prefix-stable SeedSequence children, so any chunking
+# replays the identical trace bit for bit -- and so does the monolithic
+# fixed-horizon scan fed the assembled trace (the golden tests' contract).
+# This is also the seam a live arrival feed plugs into later: swap the
+# sampler for a queue drain, resume from a snapshotted carry
+# (comm.snapshot_state / comm.restore_state).
+# ---------------------------------------------------------------------------
+
+# Granularity of the prefix-stable stream sampler: every quantity of block
+# j (slots [j*B, (j+1)*B)) is drawn from its own SeedSequence child keyed
+# (stream, j), so block j's bytes never depend on how -- or whether --
+# other blocks were sampled.  Chunk boundaries need not align with blocks.
+STREAM_BLOCK = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamParams:
+    """Workload parameters of one request stream (hashable).
+
+    The stream analogue of :meth:`ServeConfig.workload_key`: everything
+    the sampler needs, nothing the router consumes.  ``diurnal_amp`` /
+    ``diurnal_period`` modulate the arrival rate sinusoidally
+    (``rate * (1 + amp * sin(2 pi t / period))``) -- the simulated-days
+    soak cycles of the steady-state claims; 0/0 keeps a flat rate.
+    """
+
+    replicas: int
+    decode_slots: int
+    load: float
+    mean_prefill: float = 4.0
+    mean_decode: float = 64.0
+    rate_scale: float = 1.0
+    with_net: bool = False
+    with_fault: bool = False
+    diurnal_amp: float = 0.0
+    diurnal_period: int = 0
+
+    @staticmethod
+    def for_cell(cell: ServeConfig, *, diurnal_amp: float = 0.0,
+                 diurnal_period: int = 0) -> "StreamParams":
+        return StreamParams(
+            replicas=cell.replicas,
+            decode_slots=cell.decode_slots,
+            load=cell.load,
+            mean_prefill=float(cell.mean_prefill),
+            mean_decode=float(cell.mean_decode),
+            rate_scale=cell.rate_scale(),
+            with_net=cell.network != "none",
+            with_fault=cell.fault != "none",
+            diurnal_amp=diurnal_amp,
+            diurnal_period=diurnal_period,
+        )
+
+
+@dataclasses.dataclass
+class _StreamBlock:
+    """One sampled block: per-slot arrivals plus per-arrival draws."""
+
+    n_arr: np.ndarray  # (B,) int64
+    cum: np.ndarray  # (B + 1,) int64 arrivals before each in-block slot
+    prefill: np.ndarray  # (total,) int64
+    decode: np.ndarray  # (total,) int64
+    work: np.ndarray  # (total,) int64
+    tie_u: np.ndarray  # (total,) float32
+    sub_u: np.ndarray  # (total, SQD_MAX) float32
+    net_drop_u: Optional[np.ndarray]  # (B, R) float32
+    net_jit_u: Optional[np.ndarray]  # (B, R) float32
+    fault_u: Optional[np.ndarray]  # (B, R) float32
+
+
+class StreamSampler:
+    """Prefix-stable chunked workload sampling (host side of the stream).
+
+    Five root ``SeedSequence`` children split the independent streams
+    exactly like :func:`sample_workload` (arrivals/sizes, tie-breaks,
+    SQ(d) subsets, network uniforms, fault uniforms); block ``j`` of each
+    stream then draws from the *j-th child of that child*, constructed
+    statelessly as ``SeedSequence(entropy, spawn_key + (j,))``.  Spawning
+    is prefix-stable, so block j's bytes are a pure function of
+    (seed, params, j): slabs of any size, sampled in any order, assemble
+    into one well-defined infinite trace.  A small LRU of decoded blocks
+    keeps sequential slab iteration O(chunk) in time and O(1) in memory.
+    """
+
+    _CACHE_BLOCKS = 8
+
+    def __init__(self, seed: int, params: StreamParams):
+        self.seed = int(seed)
+        self.params = params
+        root = np.random.SeedSequence(self.seed)
+        self._roots = root.spawn(5)  # workload, tie, subset, net, fault
+        self._cache: dict[int, _StreamBlock] = {}
+
+    def _rng(self, stream: int, j: int) -> np.random.Generator:
+        child = self._roots[stream]
+        ss = np.random.SeedSequence(
+            entropy=child.entropy, spawn_key=child.spawn_key + (j,)
+        )
+        return np.random.default_rng(ss)
+
+    def rate_at(self, t: np.ndarray) -> np.ndarray:
+        """Offered per-slot arrival rate at absolute slots ``t``."""
+        p = self.params
+        mean_work = p.mean_prefill + p.mean_decode
+        base = p.load * p.replicas * p.decode_slots * p.rate_scale / mean_work
+        if not p.diurnal_period:
+            return np.full(np.shape(t), base)
+        phase = 2.0 * np.pi * np.asarray(t, np.float64) / p.diurnal_period
+        return base * (1.0 + p.diurnal_amp * np.sin(phase))
+
+    def _block(self, j: int) -> _StreamBlock:
+        blk = self._cache.get(j)
+        if blk is not None:
+            return blk
+        p, b = self.params, STREAM_BLOCK
+        t = j * b + np.arange(b, dtype=np.int64)
+        wrng = self._rng(0, j)
+        n_arr = wrng.poisson(self.rate_at(t)).astype(np.int64)
+        total = int(n_arr.sum())
+        prefill = 1 + wrng.poisson(p.mean_prefill, size=total).astype(np.int64)
+        decode = 1 + wrng.poisson(p.mean_decode, size=total).astype(np.int64)
+        work = np.maximum(prefill + decode, 1)
+        tie_u = self._rng(1, j).random(size=total, dtype=np.float32)
+        sub_u = self._rng(2, j).random(size=(total, SQD_MAX), dtype=np.float32)
+        net_drop_u = net_jit_u = fault_u = None
+        if p.with_net:
+            nrng = self._rng(3, j)
+            net_drop_u = nrng.random(size=(b, p.replicas), dtype=np.float32)
+            net_jit_u = nrng.random(size=(b, p.replicas), dtype=np.float32)
+        if p.with_fault:
+            fault_u = self._rng(4, j).random(
+                size=(b, p.replicas), dtype=np.float32
+            )
+        blk = _StreamBlock(
+            n_arr=n_arr,
+            cum=np.concatenate([[0], np.cumsum(n_arr)]).astype(np.int64),
+            prefill=prefill, decode=decode, work=work,
+            tie_u=tie_u, sub_u=sub_u,
+            net_drop_u=net_drop_u, net_jit_u=net_jit_u, fault_u=fault_u,
+        )
+        if len(self._cache) >= self._CACHE_BLOCKS:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[j] = blk
+        return blk
+
+    def slab(self, t0: int, t1: int) -> ServeWorkload:
+        """The trace restricted to slots ``[t0, t1)`` as a ServeWorkload.
+
+        ``base`` is slab-local (rid of a slot's first arrival *within the
+        slab's arrays*); ``arrival_slot`` is absolute.  Bit-identical to
+        the same span of any other slabbing -- the chunking contract.
+        """
+        if not 0 <= t0 < t1:
+            raise ValueError(f"bad slab bounds [{t0}, {t1})")
+        b = STREAM_BLOCK
+        parts: list[tuple] = []
+        for j in range(t0 // b, (t1 - 1) // b + 1):
+            blk = self._block(j)
+            lo = max(t0 - j * b, 0)
+            hi = min(t1 - j * b, b)
+            a0, a1 = int(blk.cum[lo]), int(blk.cum[hi])
+            parts.append((blk, lo, hi, a0, a1))
+        n_arr = np.concatenate([blk.n_arr[lo:hi] for blk, lo, hi, _, _ in parts])
+        cat = lambda f: np.concatenate(  # noqa: E731 -- local glue
+            [getattr(blk, f)[a0:a1] for blk, _, _, a0, a1 in parts]
+        )
+        cat_cp = lambda f: (  # noqa: E731
+            None
+            if getattr(parts[0][0], f) is None
+            else np.concatenate(
+                [getattr(blk, f)[lo:hi] for blk, lo, hi, _, _ in parts]
+            )
+        )
+        return ServeWorkload(
+            n_arr=n_arr,
+            base=np.concatenate([[0], np.cumsum(n_arr)[:-1]]).astype(np.int64),
+            prefill=cat("prefill"), decode=cat("decode"), work=cat("work"),
+            tie_u=cat("tie_u"), sub_u=cat("sub_u"),
+            arrival_slot=np.repeat(np.arange(t0, t1, dtype=np.int64), n_arr),
+            net_drop_u=cat_cp("net_drop_u"), net_jit_u=cat_cp("net_jit_u"),
+            fault_u=cat_cp("fault_u"),
+        )
+
+    def full(self, slots: int) -> ServeWorkload:
+        """The assembled monolithic trace of the first ``slots`` slots.
+
+        Feeds the fixed-horizon reference (``serve_one(workload=...)`` /
+        ``run_serving_sim(workload=...)``) in the chunk-invariance golden
+        tests; O(slots) memory, so tests/examples only.
+        """
+        return self.slab(0, slots)
+
+
+_STREAM_PROGRAMS: list = []  # jitted chunk steps, for compile accounting
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_step_fn(static: EngineStatic):
+    """The jitted chunk step: one compiled program per static structure.
+
+    ``static.slots`` is the chunk length.  ``donate_argnums=(0,)`` donates
+    the carry -- queues, CommState, NetState, fault mask, StreamMetrics --
+    so XLA updates the state buffers in place across chunks instead of
+    allocating a fresh copy per call.  ``static.max_arrivals`` is the
+    chunk's padded lane width: a grown slab retraces once per new width
+    (widths are rounded up, so growth stabilises fast) and lane padding
+    is masked no-ops, so results never depend on it.
+    """
+
+    def step(carry, t0, n_arr, work, tie_u, rid, sub_u, net_du, net_ju,
+             fault_u, scn):
+        return _serve_core(
+            n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+            0, scn, static, carry=carry, t0=t0,
+        )
+
+    fn = jax.jit(step, donate_argnums=(0,))
+    _STREAM_PROGRAMS.append(fn)
+    return fn
+
+
+def stream_compile_count() -> int:
+    """Compiled chunk-step programs so far (same accounting as the grid)."""
+    return sum(
+        getattr(f, "_cache_size", lambda: 1)() for f in _STREAM_PROGRAMS
+    )
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Resumable segment-engine state between :func:`serve_stream` calls.
+
+    ``carry`` is the device pytree the next chunk step consumes (it is
+    *donated* on resume -- a state can be resumed once; snapshot it with
+    :func:`repro.core.care.comm.snapshot_state` first to keep a copy).
+    """
+
+    carry: tuple
+    t_next: int
+    offered: int
+    a_pad: int
+    sampler: StreamSampler
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One stream segment's outputs (host-side scalars + histogram)."""
+
+    slots: int  # slots run in this segment (cumulative if resumed)
+    offered: int
+    completed: int  # all completions, warmup included
+    dropped: int
+    messages: int
+    net_drops: int
+    count: int  # post-warmup completions measured by the accumulators
+    mean_jct: float
+    std_jct: float
+    max_jct: int
+    hist: np.ndarray  # (metrics.HIST_BUCKETS,) int64
+    final_occupancy: np.ndarray  # (R,)
+    state: StreamState
+
+    @property
+    def msgs_per_slot(self) -> float:
+        return self.messages / max(self.slots, 1)
+
+    @property
+    def msgs_per_completion(self) -> float:
+        return self.messages / max(self.completed, 1)
+
+    def jct_summary(self) -> dict:
+        """NaN-safe summary (tail quantiles from the log histogram)."""
+        return metrics_lib.stream_summary(
+            self.count, self.mean_jct,
+            self.std_jct * self.std_jct * max(self.count, 1),
+            self.max_jct, self.hist,
+        )
+
+
+def serve_stream(
+    seed: int,
+    cell: ServeConfig,
+    *,
+    chunk: int = 4096,
+    warmup: int = 0,
+    slots: Optional[int] = None,
+    sampler: Optional[StreamSampler] = None,
+    state: Optional[StreamState] = None,
+    prefetch: bool = True,
+    diurnal_amp: float = 0.0,
+    diurnal_period: int = 0,
+) -> StreamResult:
+    """Run one serving cell as a chunked stream in bounded memory.
+
+    The segment engine: ``slots`` (default ``cell.slots``) total slots run
+    as ``ceil(slots / chunk)`` jitted chunk steps threading one donated
+    carry.  The host samples chunk k+1's slab while the device executes
+    chunk k (``prefetch=True``; JAX async dispatch -- the driver never
+    blocks mid-stream), so workload generation rides inside device time.
+    ``prefetch=False`` is the synchronous no-prefetch reference the
+    overlap benchmark compares against: identical results, but each slab
+    is sampled only after the previous chunk's state is materialised.
+
+    Bit-identity contract: for any chunk size -- and for the monolithic
+    fixed-horizon engine fed ``StreamSampler.full(slots)`` -- every
+    counter and every carried state array is identical bit for bit
+    (golden-tested).  ``warmup`` discards completions landing before that
+    absolute slot from the JCT accumulators (steady-state measurement);
+    counters (messages, completions, drops) are never warmup-gated.
+
+    ``state`` resumes a previous segment (its carry is donated -- resume a
+    state at most once).  Totals (slots/offered/messages/...) are
+    cumulative across resumed segments.  ``t + slots`` must stay below
+    2^31 (the i32 slot clock).
+    """
+    if cell.route_backend == "pallas" and cell.policy != "jsaq":
+        raise ValueError("stream mode inherits the pallas jsaq-only limits")
+    slots = cell.slots if slots is None else int(slots)
+    if slots <= 0:
+        raise ValueError(f"slots must be positive, got {slots}")
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    base_static = cell.static_part()  # validates the cell
+    d = base_static.sqd if base_static.policy == "sqd" else 0
+
+    if state is not None:
+        sampler = state.sampler
+        t_start, offered = state.t_next, state.offered
+        carry, a_pad = state.carry, state.a_pad
+    else:
+        if sampler is None:
+            sampler = StreamSampler(
+                seed,
+                StreamParams.for_cell(
+                    cell, diurnal_amp=diurnal_amp,
+                    diurnal_period=diurnal_period,
+                ),
+            )
+        t_start, offered = 0, 0
+        carry, a_pad = None, 8
+    t_end = t_start + slots
+    if t_end >= np.iinfo(np.int32).max:
+        raise ValueError(
+            f"stream end {t_end} overflows the int32 slot clock"
+        )
+    scn = dataclasses.replace(
+        cell.scenario(),
+        horizon=jnp.int32(t_end),
+        warmup=jnp.int32(warmup),
+    )
+    if carry is None:
+        carry = _engine_init(
+            dataclasses.replace(base_static, stream=True), 0
+        )
+
+    n_chunks = -(-slots // chunk)
+
+    def prep(k: int):
+        """Sample + pad + stage chunk k's slab (the host half of overlap)."""
+        nonlocal a_pad, offered
+        c0 = t_start + k * chunk
+        wl = sampler.slab(c0, min(c0 + chunk, t_end))
+        offered += wl.total
+        need = int(wl.n_arr.max()) if wl.n_arr.size else 0
+        if need > a_pad:
+            a_pad = _round_up(need, 8)
+        static_k = dataclasses.replace(
+            base_static, slots=chunk, stream=True, max_arrivals=a_pad,
+            trace_occupancy=False,
+        )
+        padded = _pad_workload(wl, chunk, a_pad, d, with_rid=False)
+        return static_k, np.int32(c0), tuple(jnp.asarray(p) for p in padded)
+
+    cur = prep(0)
+    for k in range(n_chunks):
+        static_k, t0_k, arrs = cur
+        carry = _stream_step_fn(static_k)(carry, t0_k, *arrs, scn)
+        if not prefetch:
+            # Synchronous reference: drain the device before touching the
+            # next slab, so host sampling serialises behind device time.
+            carry = jax.block_until_ready(carry)
+        if k + 1 < n_chunks:
+            cur = prep(k + 1)
+    carry = jax.block_until_ready(carry)
+
+    (q_len, _, _, _, rem, _, _, comm_state, _, sm, total_comp, dropped,
+     net_state, _) = carry
+    q_len_np = np.asarray(q_len)
+    final_occ = q_len_np + (np.asarray(rem) > 0).sum(axis=1).astype(
+        q_len_np.dtype
+    )
+    return StreamResult(
+        slots=t_end,
+        offered=offered,
+        completed=int(total_comp),
+        dropped=int(dropped),
+        messages=int(comm_state.msgs),
+        net_drops=int(net_state.drops) if net_state is not None else 0,
+        count=int(sm.count),
+        mean_jct=float(sm.mean),
+        std_jct=float(
+            np.sqrt(max(float(sm.m2), 0.0) / max(int(sm.count), 1))
+        ),
+        max_jct=int(sm.max_jct),
+        hist=np.asarray(sm.hist, np.int64),
+        final_occupancy=final_occ,
+        state=StreamState(
+            carry=carry, t_next=t_end, offered=offered, a_pad=a_pad,
+            sampler=sampler,
+        ),
+    )

@@ -19,6 +19,10 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EXAMPLES = {
     "quickstart": ["examples/quickstart.py", "--slots", "2000"],
     "serve_care": ["examples/serve_care.py", "--slots", "1000"],
+    "serve_stream": [
+        "examples/serve_stream.py",
+        "--slots", "20000", "--chunk", "2048",
+    ],
     "train_moe_care": [
         "examples/train_moe_care.py",
         "--steps", "6", "--batch", "2", "--seq", "32", "--ckpt-every", "2",
@@ -32,6 +36,7 @@ EXAMPLES = {
 EXPECT = {
     "quickstart": "compiled programs",
     "serve_care": "ET dispatcher",
+    "serve_stream": "steady-state JCT",
     "train_moe_care": "[done]",
     "multipod_dryrun": "compiles cleanly",
 }

@@ -235,6 +235,38 @@ class TestServingParity:
                 assert res[i][j].net_drops == one.net_drops
 
 
+class TestStreamDegraded:
+    """Segment-engine chunk invariance under the degraded control plane.
+
+    The stream carry threads NetState (in-flight payload buffers, ages)
+    and the fault mask across chunk boundaries; any chunking must replay
+    the monolithic fixed-horizon run bit for bit on every knob combo of
+    the serving parity matrix.
+    """
+
+    @pytest.mark.parametrize("knobs", _MATRIX)
+    def test_stream_matches_fixed_horizon(self, knobs):
+        cell = engine.ServeConfig(replicas=6, decode_slots=4, slots=400,
+                                  load=0.9, queue_cap=256, **knobs)
+        sampler = engine.StreamSampler(
+            3, engine.StreamParams.for_cell(cell)
+        )
+        wl = sampler.full(cell.slots)
+        ref = engine.serve_one(3, cell, workload=wl)
+        for chunk in (64, cell.slots):
+            s = engine.StreamSampler(
+                3, engine.StreamParams.for_cell(cell)
+            )
+            res = engine.serve_stream(3, cell, chunk=chunk, sampler=s)
+            assert res.completed == ref.completed
+            assert res.messages == ref.messages
+            assert res.net_drops == ref.net_drops
+            assert res.dropped == ref.dropped
+            np.testing.assert_array_equal(
+                res.final_occupancy, ref.final_occupancy
+            )
+
+
 # ---------------------------------------------------------------------------
 # Slotted tier: degraded cells conserve jobs; grid == single run.
 # ---------------------------------------------------------------------------

@@ -19,13 +19,14 @@ def test_jct_summary_empty_is_zero_not_nan():
     with warnings.catch_warnings():
         warnings.simplefilter("error")  # np raises RuntimeWarning on empty mean
         s = metrics.jct_summary(EMPTY)
-    assert s == {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0, "p999": 0.0}
+    assert s == {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                 "p99": 0.0, "p999": 0.0}
     assert all(np.isfinite(v) for v in s.values())
 
 
 def test_jct_summary_accepts_lists():
     s = metrics.jct_summary(np.asarray([4, 4, 4]))
-    assert s["mean"] == 4.0 and s["p999"] == 4.0
+    assert s["count"] == 3 and s["mean"] == 4.0 and s["p999"] == 4.0
 
 
 def test_mean_jct_empty_and_nonempty():
@@ -63,3 +64,85 @@ def test_simulation_with_zero_completions_yields_finite_summary():
     s = metrics.jct_summary(res.jct)
     assert res.jct.size == 0
     assert all(np.isfinite(v) for v in s.values())
+
+
+# --- log-bucket JCT histogram (streaming-engine tail accumulator) ---------
+
+
+def test_jct_bucket_edges_partition_int32():
+    """Every bucket's edge range maps back to that bucket, exhaustively
+    near every boundary (and the bucket index is monotone in j)."""
+    edges = metrics.jct_bucket_edges()
+    assert edges.shape == (metrics.HIST_BUCKETS + 1,)
+    assert edges[0] == 1 and edges[-1] == 2**31
+    assert np.all(np.diff(edges) > 0)
+    # Probe each boundary from both sides plus the bucket interior.
+    for b in range(metrics.HIST_BUCKETS):
+        lo, hi = int(edges[b]), int(edges[b + 1])
+        probes = [lo, lo + (hi - lo) // 2, hi - 1]
+        got = metrics.jct_bucket(np.asarray(probes, np.int64))
+        assert np.all(got == b), (b, probes, got)
+
+
+def test_jct_bucket_matches_between_numpy_and_jax():
+    import jax.numpy as jnp
+
+    j = np.concatenate([
+        np.arange(1, 70),
+        2 ** np.arange(2, 31, dtype=np.int64),
+        2 ** np.arange(2, 31, dtype=np.int64) - 1,
+        np.asarray([np.iinfo(np.int32).max]),
+    ])
+    b_np = metrics.jct_bucket(j, xp=np)
+    b_jx = np.asarray(metrics.jct_bucket(jnp.asarray(j), xp=jnp))
+    assert np.array_equal(b_np, b_jx)
+
+
+def test_jct_bucket_clips_nonpositive():
+    assert metrics.jct_bucket(np.asarray([0, -5, 1])).tolist() == [0, 0, 0]
+
+
+def test_log_hist_quantiles_empty_is_zero():
+    hist = np.zeros(metrics.HIST_BUCKETS, np.int64)
+    q = metrics.log_hist_quantiles(hist, (0.5, 0.99))
+    assert np.all(q == 0.0) and np.all(np.isfinite(q))
+
+
+def test_log_hist_quantiles_exact_small_buckets():
+    # Samples 1/2/3 live in single-value buckets: quantiles are exact.
+    samples = np.asarray([1] * 10 + [2] * 10 + [3] * 10)
+    hist = np.bincount(metrics.jct_bucket(samples),
+                       minlength=metrics.HIST_BUCKETS)
+    p50, = metrics.log_hist_quantiles(hist, (0.5,))
+    assert p50 == 2.0
+
+
+def test_log_hist_quantiles_bounded_by_sub_octave():
+    rng = np.random.default_rng(0)
+    samples = rng.integers(1, 10_000, size=20_000)
+    hist = np.bincount(metrics.jct_bucket(samples),
+                       minlength=metrics.HIST_BUCKETS)
+    for q in (0.5, 0.9, 0.99, 0.999):
+        est, = metrics.log_hist_quantiles(hist, (q,))
+        exact = np.quantile(samples, q)
+        # A bucket spans <= 25% relative width, so the histogram estimate
+        # lands within one sub-octave of the exact sample quantile.
+        assert abs(est - exact) <= 0.25 * exact + 1.0, (q, est, exact)
+
+
+def test_stream_summary_empty_and_roundtrip():
+    empty = metrics.stream_summary(
+        0, 0.0, 0.0, 0, np.zeros(metrics.HIST_BUCKETS, np.int64)
+    )
+    assert empty["count"] == 0 and empty["p999"] == 0.0
+    assert all(np.isfinite(v) for v in empty.values())
+
+    samples = np.asarray([10, 20, 30, 40], np.int64)
+    hist = np.bincount(metrics.jct_bucket(samples),
+                       minlength=metrics.HIST_BUCKETS)
+    s = metrics.stream_summary(
+        samples.size, samples.mean(),
+        ((samples - samples.mean()) ** 2).sum(), samples.max(), hist,
+    )
+    assert s["count"] == 4 and s["mean"] == 25.0 and s["max"] == 40
+    assert abs(s["std"] - samples.std()) < 1e-6

@@ -27,6 +27,7 @@ change the physics:
 """
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -505,3 +506,200 @@ class TestSubsetMask:
         np.testing.assert_array_equal(
             np.flatnonzero(engine.subset_mask(hi, 5, 2, xp=np)), [3, 4]
         )
+
+
+# ---------------------------------------------------------------------------
+# Segment engine (serve_stream): chunk-invariance goldens.
+# ---------------------------------------------------------------------------
+
+# (policy x comm x network x fault) sample of the matrix: the satellite
+# combos exercise every static code path the chunk carry threads (the
+# exhaustive degraded matrix lives in tests/test_faults.py).
+STREAM_MATRIX = [
+    dict(policy="jsaq", comm="et"),
+    dict(policy="jsaq", comm="exact"),
+    dict(policy="sqd", sqd=3, comm="dt"),
+    dict(policy="rr", comm="rt"),
+    dict(policy="drain", comm="et_rt",
+         decode_rates=(2.0, 2.0, 1.0, 1.0, 0.5, 0.5)),
+    dict(policy="sqd", sqd=2, comm="et", network="net", net_delay=3,
+         net_drop=0.1, suspect_age=8),
+    dict(policy="jsaq", comm="et_rt", fault="crash", crash_rate=0.02,
+         recover_rate=0.2, suspect_age=10),
+]
+
+
+def stream_cell(slots=400, **knobs) -> engine.ServeConfig:
+    return engine.ServeConfig(
+        replicas=6, decode_slots=4, slots=slots, load=0.9, queue_cap=256,
+        **knobs,
+    )
+
+
+def fresh_stream(seed, cell, **kw):
+    """serve_stream on a fresh sampler (streams never share block caches)."""
+    sampler = engine.StreamSampler(seed, engine.StreamParams.for_cell(cell))
+    return engine.serve_stream(seed, cell, sampler=sampler, **kw)
+
+
+class TestStreamEngine:
+    @pytest.mark.parametrize("knobs", STREAM_MATRIX)
+    def test_chunk_invariant_and_matches_fixed_horizon(self, knobs):
+        """Every chunk size replays the monolithic fixed-horizon run bit
+        for bit -- counters, final occupancy, and the full carried state."""
+        cell = stream_cell(**knobs)
+        sampler = engine.StreamSampler(
+            3, engine.StreamParams.for_cell(cell)
+        )
+        wl = sampler.full(cell.slots)
+        ref = engine.serve_one(3, cell, workload=wl)
+
+        carries = []
+        for chunk in (1, 7, 64, cell.slots):
+            res = fresh_stream(3, cell, chunk=chunk)
+            assert res.completed == ref.completed
+            assert res.messages == ref.messages
+            assert res.dropped == ref.dropped
+            assert res.net_drops == ref.net_drops
+            np.testing.assert_array_equal(
+                res.final_occupancy, ref.final_occupancy
+            )
+            # warmup=0: the accumulators see every completion.
+            assert res.count == ref.completed
+            carries.append(jax.tree.leaves(
+                jax.tree.map(np.asarray, res.state.carry)
+            ))
+        for leaves in carries[1:]:
+            assert len(leaves) == len(carries[0])
+            for a, b in zip(carries[0], leaves):
+                np.testing.assert_array_equal(a, b)
+
+    def test_stream_metrics_match_host_recomputation(self):
+        """count / histogram / max are exact vs the fixed engine's JCT
+        sample; mean / std agree to f32 combine tolerance."""
+        cell = stream_cell()
+        sampler = engine.StreamSampler(
+            7, engine.StreamParams.for_cell(cell)
+        )
+        wl = sampler.full(cell.slots)
+        ref = engine.serve_one(7, cell, workload=wl)
+        res = fresh_stream(7, cell, chunk=64)
+        from repro.core.care import metrics
+
+        jct = ref.jct
+        assert res.count == jct.size
+        assert res.max_jct == int(jct.max())
+        host_hist = np.bincount(
+            metrics.jct_bucket(jct), minlength=metrics.HIST_BUCKETS
+        )
+        np.testing.assert_array_equal(res.hist, host_hist)
+        assert abs(res.mean_jct - jct.mean()) <= 1e-4 * max(jct.mean(), 1)
+        assert abs(res.std_jct - jct.std()) <= 1e-3 * max(jct.std(), 1)
+        s = res.jct_summary()
+        assert s["count"] == jct.size and s["max"] == int(jct.max())
+        # Histogram quantiles land within one sub-octave (<= 25%).
+        for q, key in ((0.5, "p50"), (0.99, "p99")):
+            exact = np.quantile(jct, q)
+            assert abs(s[key] - exact) <= 0.25 * exact + 1.0
+
+    def test_warmup_discards_pre_threshold_completions(self):
+        cell = stream_cell()
+        sampler = engine.StreamSampler(
+            3, engine.StreamParams.for_cell(cell)
+        )
+        wl = sampler.full(cell.slots)
+        ref = engine.serve_one(3, cell, workload=wl)
+        warm = 200
+        res = fresh_stream(3, cell, chunk=64, warmup=warm)
+        # Counters are never warmup-gated; only the JCT accumulators are.
+        assert res.completed == ref.completed
+        assert res.messages == ref.messages
+        done = ref.jct_by_rid >= 0
+        comp_t = wl.arrival_slot[done] + ref.jct_by_rid[done] - 1
+        measured = ref.jct_by_rid[done][comp_t >= warm]
+        assert res.count == measured.size
+        assert res.max_jct == int(measured.max())
+        from repro.core.care import metrics
+
+        np.testing.assert_array_equal(
+            res.hist,
+            np.bincount(metrics.jct_bucket(measured),
+                        minlength=metrics.HIST_BUCKETS),
+        )
+
+    def test_all_completions_in_warmup_is_nan_safe(self):
+        cell = stream_cell(slots=100)
+        res = fresh_stream(3, cell, chunk=32, warmup=10**6)
+        assert res.count == 0
+        assert res.mean_jct == 0.0 and np.isfinite(res.std_jct)
+        s = res.jct_summary()
+        assert s == {"count": 0, "mean": 0.0, "std": 0.0, "p50": 0.0,
+                     "p90": 0.0, "p99": 0.0, "p999": 0.0, "max": 0}
+
+    def test_resume_matches_single_segment(self):
+        cell = stream_cell()
+        one = fresh_stream(3, cell, chunk=64)
+        sampler = engine.StreamSampler(
+            3, engine.StreamParams.for_cell(cell)
+        )
+        r1 = engine.serve_stream(3, cell, chunk=64, sampler=sampler,
+                                 slots=160)
+        r2 = engine.serve_stream(3, cell, chunk=64, state=r1.state,
+                                 slots=cell.slots - 160)
+        assert r2.slots == one.slots
+        assert r2.offered == one.offered
+        assert r2.completed == one.completed
+        assert r2.messages == one.messages
+        np.testing.assert_array_equal(r2.final_occupancy,
+                                      one.final_occupancy)
+        np.testing.assert_array_equal(r2.hist, one.hist)
+
+    def test_sampler_slabs_are_prefix_stable(self):
+        """Any slabbing assembles the same trace: blocks are keyed by
+        (seed, params, block index), never by sampling order."""
+        cell = stream_cell()
+        params = engine.StreamParams.for_cell(cell)
+        a = engine.StreamSampler(3, params)
+        b = engine.StreamSampler(3, params)
+        whole = a.full(3000)  # spans multiple STREAM_BLOCKs
+        # Sample b out of order and in odd pieces.
+        pieces = [b.slab(2900, 3000), b.slab(0, 7), b.slab(7, 2900)]
+        n_arr = np.concatenate(
+            [pieces[1].n_arr, pieces[2].n_arr, pieces[0].n_arr]
+        )
+        work = np.concatenate(
+            [pieces[1].work, pieces[2].work, pieces[0].work]
+        )
+        tie = np.concatenate(
+            [pieces[1].tie_u, pieces[2].tie_u, pieces[0].tie_u]
+        )
+        np.testing.assert_array_equal(whole.n_arr, n_arr)
+        np.testing.assert_array_equal(whole.work, work)
+        np.testing.assert_array_equal(whole.tie_u, tie)
+
+    def test_diurnal_rate_modulates_arrivals(self):
+        cell = stream_cell()
+        params = engine.StreamParams.for_cell(
+            cell, diurnal_amp=0.9, diurnal_period=2048
+        )
+        s = engine.StreamSampler(3, params)
+        rates = s.rate_at(np.arange(2048))
+        assert rates.max() > 1.5 * rates.min()
+        # Arrivals track the modulation: the peak half-period offers more.
+        wl = s.slab(0, 2048)
+        peak = wl.n_arr[:1024].sum()
+        trough = wl.n_arr[1024:].sum()
+        assert peak > trough
+
+    def test_stream_validation(self):
+        cell = stream_cell()
+        with pytest.raises(ValueError, match="slots"):
+            fresh_stream(3, cell, slots=0)
+        with pytest.raises(ValueError, match="chunk"):
+            fresh_stream(3, cell, chunk=0)
+        with pytest.raises(ValueError, match="int32"):
+            fresh_stream(3, cell, slots=2**31)
+        with pytest.raises(ValueError, match="slab"):
+            engine.StreamSampler(
+                3, engine.StreamParams.for_cell(cell)
+            ).slab(5, 5)
