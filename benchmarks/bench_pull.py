@@ -1,0 +1,220 @@
+"""Pull-policy tier: JIQ / hyper-scalable JSQ vs CARE push on one frontier.
+
+The pull (server-initiated) policies route on *tokens* servers push at
+their own initiative -- JIQ on the idle transition, the hyper-scalable
+threshold policy ("hsq", van der Boor et al. 2019) on a downward crossing
+of ``x`` plus a traced-rate keepalive.  Token traffic rides the same
+trigger/message accounting (and, degraded, the same ``comm.net_step``
+delay/jitter/drop wire) as CARE's push corrections, so every row below
+sits on one honest message-rate vs JCT frontier:
+
+* ``pull/slotted/*`` -- the **clean frontier** (slotted tier, load 0.9):
+  CARE ET-3 / DT-3 / RT, query-based SQ(2) (billed 2d round-trips per
+  arrival), JIQ and hsq, all replaying the identical arrival stream.
+  ``rel_comm`` is messages per job relative to the exact-state baseline.
+
+* ``pull/slotted_net/*`` -- the **degraded frontier**: the same policies
+  under a 2-slot delay, 1-slot jitter and 10% drop.  Tokens are lost and
+  delayed like any other message; a stale JIQ token of a busy server is
+  simply spent and never refreshed (the safe-staleness property -- no
+  retransmission exists).
+
+* ``pull/serve*/*`` -- the serving tier (request dispatch over replica
+  groups), clean and degraded, via the fused ``serve_grid`` programs;
+  ``pull/parity`` asserts the jitted runs replay the numpy
+  ``CareDispatcher`` bit for bit *including the token counters*.
+
+* ``pull/frontier`` -- the headline bools: JIQ spends **<= 1 message per
+  job** on both tiers (its defining bound -- CARE RT/DT sit well below,
+  SQ(2) at 4), and hsq holds the CARE ET-3 mean-JCT envelope (<= 1.10x)
+  at load 0.9 while staying inside the same pull budget.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.care import metrics, slotted_sim
+from repro.serve import engine
+
+# Slotted-tier frontier policies (paper Section 9.1 fleet, load 0.9 --
+# high enough that tokens are scarce and the fallback paths are exercised,
+# low enough that jiq's idle transitions still happen).
+_SLOTTED_LOAD = 0.9
+_HSQ_RATE = 0.02  # hsq token-refresh (keepalive) rate, msgs/slot/server
+
+_CLEAN = [
+    ("care_et3", dict(policy="jsaq", comm="et", x=3, approx="msr")),
+    ("care_dt3", dict(policy="jsaq", comm="dt", x=3, approx="msr")),
+    ("care_rt", dict(policy="jsaq", comm="rt", rt_rate=_HSQ_RATE,
+                     approx="msr")),
+    ("sq2", dict(policy="sq2", comm="none")),
+    ("jiq", dict(policy="jiq", comm="jiq")),
+    ("hsq", dict(policy="hsq", comm="hsq", x=3, rt_rate=_HSQ_RATE)),
+]
+
+# Degraded control plane: tokens and corrections share the same wire.
+_NET = dict(network="net", net_delay=2, net_jitter=1, net_drop=0.1)
+_DEGRADED = [
+    ("care_et3", dict(policy="jsaq", comm="et", x=3, approx="msr", **_NET)),
+    # SQ(2) under a network routes on query round-trips billed in-band
+    # (the balancer push stream is throttled to a negligible trickle).
+    ("sq2", dict(policy="sq2", comm="rt", rt_rate=1e-4, **_NET)),
+    ("jiq", dict(policy="jiq", comm="jiq", **_NET)),
+    ("hsq", dict(policy="hsq", comm="hsq", x=3, rt_rate=_HSQ_RATE, **_NET)),
+]
+
+# Serving tier: the bench_serving work profile at its load-0.9 corner.
+_WORK = dict(mean_prefill=4, mean_decode=60, msr_drain=0.25)
+_SERVE_NET = dict(network="net", net_delay=2, net_drop=0.1, suspect_age=8)
+
+
+def _serve_cells(slots: int, degraded: bool) -> list[tuple[str, engine.ServeConfig]]:
+    extra = _SERVE_NET if degraded else {}
+    # Degraded CARE runs ET-3 over the hybrid et_rt trigger: the suspect
+    # timeout only works on top of a keepalive (see bench_faults).
+    care_comm = dict(comm="et_rt", rt_period=32) if degraded else dict(
+        comm="et"
+    )
+
+    def cell(**kw):
+        return engine.ServeConfig(slots=slots, load=0.9, **_WORK, **extra,
+                                  **kw)
+
+    return [
+        ("care_et3", cell(x=3, **care_comm)),
+        ("sqd", cell(policy="sqd", sqd=2, comm="et", x=3)),
+        ("jiq", cell(policy="jiq", comm="jiq")),
+        # hsq's threshold keys on replica occupancy: x = decode_slots, so
+        # a token advertises a free decode slot (x=3 would never fire --
+        # a busy replica's occupancy never drops that low at load 0.9).
+        ("hsq", cell(policy="hsq", comm="hsq", x=16, rt_period=32)),
+    ]
+
+
+def _mean(vals) -> float:
+    return float(np.mean(vals))
+
+
+def _slotted_rows(tier: str, named, seeds, slots: int, rows: list[dict]):
+    """Run one slotted frontier and append its rows; returns the summary."""
+    cfgs = [slotted_sim.SimConfig(slots=slots, load=_SLOTTED_LOAD, **kw)
+            for _, kw in named]
+    results, walls = common.timed_simulate_grid(cfgs, seeds)
+    summary: dict = {}
+    for (name, kw), cfg, per_seed, wall in zip(named, cfgs, results, walls):
+        jct = _mean([metrics.mean_jct(r.jct) for r in per_seed])
+        rel = _mean([
+            metrics.relative_communication(r, kw["policy"])
+            if cfg.network == "none" else r.msgs_per_departure
+            for r in per_seed
+        ])
+        tok = metrics.token_summary(
+            int(np.sum([r.token_sum for r in per_seed])),
+            int(np.sum([r.token_misses for r in per_seed])),
+            slots * len(seeds),
+            int(np.sum([r.arrivals for r in per_seed]))
+            if kw["policy"] in ("jiq", "hsq") else 0,
+        )
+        summary[name] = (jct, rel, tok)
+        rows.append(
+            common.row(
+                f"{tier}/{name}",
+                wall,
+                slots,
+                common.fmt_derived(
+                    mean_jct=jct,
+                    rel_comm=rel,
+                    token_miss_rate=tok["miss_rate"],
+                    seeds=len(seeds),
+                ),
+                mean_jct=jct,
+                rel_comm=rel,
+            )
+        )
+    return summary
+
+
+def run(quick: bool = False) -> list[dict]:
+    slots = common.sim_slots(quick)
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    rows: list[dict] = []
+
+    # --- slotted tier: clean + degraded frontiers ----------------------
+    clean = _slotted_rows("pull/slotted", _CLEAN, seeds, slots, rows)
+    _slotted_rows("pull/slotted_net", _DEGRADED, seeds, slots, rows)
+
+    # --- serving tier: clean + degraded, fused grids -------------------
+    s_slots = 2_000 if quick else 4_000
+    serve_summary: dict = {}
+    for tier, degraded in (("pull/serve", False), ("pull/serve_net", True)):
+        named = _serve_cells(s_slots, degraded)
+        results, walls = common.timed_serve_grid(
+            [c for _, c in named], seeds
+        )
+        for (name, _), per_seed, wall in zip(named, results, walls):
+            jct = _mean([r.mean_jct for r in per_seed])
+            mpc = _mean([r.msgs_per_completion for r in per_seed])
+            misses = int(np.sum([r.token_misses for r in per_seed]))
+            serve_summary[(tier, name)] = (jct, mpc)
+            rows.append(
+                common.row(
+                    f"{tier}/{name}",
+                    wall,
+                    s_slots,
+                    common.fmt_derived(
+                        mean_jct=jct,
+                        msgs_per_completion=mpc,
+                        token_misses=misses,
+                        seeds=len(seeds),
+                    ),
+                    mean_jct=jct,
+                    msgs_per_completion=mpc,
+                )
+            )
+
+    # --- jax <-> numpy parity on every pull cell (token counters too) --
+    parity = True
+    for degraded in (False, True):
+        for name, cell in _serve_cells(s_slots, degraded):
+            if cell.policy not in ("jiq", "hsq"):
+                continue
+            res = common.timed_serve_grid([cell], seeds[:1])[0][0][0]
+            ref = common.serve_reference(cell, seeds[0])
+            parity &= common.serve_matches_reference(res, ref)
+            parity &= res.token_misses == ref["token_misses"]
+            parity &= res.token_sum == ref["token_sum"]
+    rows.append(
+        common.row(
+            "pull/parity",
+            0.0,
+            s_slots,
+            common.fmt_derived(pull_backends_bitwise=parity, cells=4),
+            pull_backends_bitwise=parity,
+        )
+    )
+
+    # --- headline: the pull bounds on one frontier ---------------------
+    jiq_budget = (
+        clean["jiq"][1] <= 1.0
+        and serve_summary[("pull/serve", "jiq")][1] <= 1.0
+    )
+    hsq_ratio = clean["hsq"][0] / max(clean["care_et3"][0], 1e-9)
+    hsq_envelope = hsq_ratio <= 1.10 and clean["hsq"][1] <= 1.0
+    rows.append(
+        common.row(
+            "pull/frontier",
+            0.0,
+            slots,
+            common.fmt_derived(
+                jiq_at_most_one_msg_per_job=jiq_budget,
+                hsq_within_et3_envelope=hsq_envelope,
+                hsq_jct_ratio=hsq_ratio,
+                jiq_rel_comm=clean["jiq"][1],
+                sq2_rel_comm=clean["sq2"][1],
+            ),
+            jiq_at_most_one_msg_per_job=jiq_budget,
+            hsq_within_et3_envelope=hsq_envelope,
+        )
+    )
+    return rows

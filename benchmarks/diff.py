@@ -41,7 +41,14 @@ SKIP_FIELDS = {"name", "derived"}
 
 
 def _is_perf(field: str) -> bool:
-    return field in PERF_FIELDS or field.endswith("_s")
+    # Suffix matches catch derived wall-clock ratios too (e.g. the stream
+    # tier's ``overlap_speedup``) -- ``_perf_regressed`` already treats
+    # ``*speedup`` one-sidedly, so the skip set must agree with it.
+    return (
+        field in PERF_FIELDS
+        or field.endswith("_s")
+        or field.endswith("speedup")
+    )
 
 
 def _index(records: list[dict]) -> dict[str, dict]:

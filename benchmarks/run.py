@@ -46,6 +46,8 @@ The mapping to paper artifacts:
                            (pipelined chunk throughput / overlap /
                            steady-state JCT / bounded-memory soak)
   bench_faults          -> beyond-paper: degraded networks + server faults
+  bench_pull            -> beyond-paper: pull policies (JIQ / hyper-
+                           scalable JSQ) vs CARE push on one frontier
   bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -81,6 +83,7 @@ BENCHES = [
     "bench_stream",
     "bench_route",
     "bench_faults",
+    "bench_pull",
     "bench_roofline",
 ]
 

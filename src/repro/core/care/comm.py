@@ -28,6 +28,22 @@ Patterns (paper Section 2.1.2 / Section 6):
 * ``none``   -- never trigger (exact-state policies whose communication is
   accounted analytically, or pure open-loop emulation).
 
+Pull patterns (server-initiated tokens; van der Boor et al. 2019):
+
+* ``jiq``    -- Join-the-Idle-Queue: a server sends exactly when it
+  *becomes* idle (a departure leaves its queue empty), pushing an idle
+  token to the balancer.  At most one message per job, by construction.
+* ``hsq``    -- hyper-scalable JSQ: a server reports when its queue
+  *drops below* the threshold ``x`` (a downward crossing), plus a
+  periodic refresh every ``rt_period`` slots so the balancer's token
+  pool is replenished at a traced rate even in steady traffic.
+
+Both pull kinds carry the same payload as push kinds -- the sender's
+exact queue length -- so the token traffic rides :func:`net_step`
+unchanged and experiences the same delay/jitter/drop as push updates.
+The balancer-side token pool lives with the policies (the routing layer),
+not here: this module only decides *when a server speaks*.
+
 The module is pure and vectorised over the server axis.  It is written
 against the shared ``numpy``/``jax.numpy`` array API: pass ``xp=jnp``
 (default) inside jitted ``lax.scan`` bodies (the slotted simulator and
@@ -45,7 +61,12 @@ from typing import Any, Literal, Tuple
 import jax
 import jax.numpy as jnp
 
-CommKind = Literal["none", "rt", "dt", "et", "et_rt", "exact"]
+CommKind = Literal["none", "rt", "dt", "et", "et_rt", "exact", "jiq", "hsq"]
+
+# Server-initiated (pull) comm kinds.  Each pairs 1:1 with the routing
+# policy of the same name: the comm kind decides when a server pushes a
+# token, the policy decides how the balancer spends its token pool.
+PULL_KINDS = ("jiq", "hsq")
 
 # Control-plane network model kinds: "none" keeps today's instant lossless
 # delivery (bit-identical, zero overhead); "net" routes every message
@@ -118,15 +139,21 @@ def trigger(
     deps_since=None,
     slots_since=None,
     new_deps=None,
+    q=None,
     xp=jnp,
 ):
     """Pure trigger predicate on already-advanced counters.
 
-    The single place the RT/DT/ET comparisons live.  :func:`evaluate` calls
-    this after advancing its per-server counters; stateless callers (e.g.
-    the training-tier balancer's host-level ``needs_sync``) call it directly
-    with whatever scalar/vector counters they track.  Only the operands the
-    ``cfg.kind`` needs may be ``None``-free.
+    The single place the RT/DT/ET (and pull-token) comparisons live.
+    :func:`evaluate` calls this after advancing its per-server counters;
+    stateless callers (e.g. the training-tier balancer's host-level
+    ``needs_sync``) call it directly with whatever scalar/vector counters
+    they track.  Only the operands the ``cfg.kind`` needs may be
+    ``None``-free.  ``q`` is the end-of-slot queue length the pull kinds
+    key on: ``jiq`` fires on the idle transition (this slot's departures
+    emptied the queue), ``hsq`` on a downward crossing of the threshold
+    ``x`` or after ``rt_period`` silent slots (the traced token-refresh
+    period).
     """
     if cfg.kind == "rt":
         return slots_since >= cfg.rt_period
@@ -138,6 +165,12 @@ def trigger(
         return (err >= cfg.x) | (slots_since >= cfg.rt_period)
     if cfg.kind == "exact":
         return new_deps > 0
+    if cfg.kind == "jiq":
+        return (new_deps > 0) & (q == 0)
+    if cfg.kind == "hsq":
+        return ((q < cfg.x) & (q + new_deps >= cfg.x)) | (
+            slots_since >= cfg.rt_period
+        )
     if cfg.kind == "none":
         return xp.zeros(xp.shape(deps_since), bool)
     raise ValueError(f"unknown communication kind: {cfg.kind}")
@@ -152,6 +185,7 @@ def evaluate(
     *,
     can_send=None,
     force=None,
+    q=None,
     count_msgs: bool = True,
 ) -> Tuple[Any, CommState]:
     """Advance the pattern by one slot and evaluate the trigger.
@@ -176,6 +210,8 @@ def evaluate(
       force: optional ``(K,)`` bool -- servers that must send regardless of
         the trigger predicate (resync-on-recovery).  Applied before
         ``can_send``.
+      q: optional ``(K,)`` end-of-slot queue length, required by the pull
+        kinds (``jiq`` / ``hsq``) and ignored by everything else.
       count_msgs: when ``False`` the trigger *intent* is returned but
         ``msgs`` is left untouched -- the network model (:func:`net_step`)
         owns message accounting because piggyback batching makes
@@ -196,6 +232,7 @@ def evaluate(
         deps_since=deps_since,
         slots_since=slots_since,
         new_deps=new_deps,
+        q=q,
         xp=xp,
     )
     if force is not None:
@@ -436,15 +473,49 @@ def validate_control_plane(
     crash_rate: float = 0.0,
     recover_rate: float = 0.0,
     slow_factor: float = 1.0,
+    policy: str = None,
+    comm: str = None,
+    token_refresh: float = None,
 ) -> None:
-    """Reject invalid network/fault operands at config-validation time.
+    """Reject invalid network/fault/pull operands at config-validation time.
 
     Called from the host-side config entry points of both tiers
     (``SimConfig``/``Scenario.create`` and ``ServeConfig``/
     ``EngineConfig``) before anything is traced, mirroring the
     ``route_backend="pallas"`` corner-pinning style: every error names the
     offending field and the fix.
+
+    ``policy`` / ``comm`` / ``token_refresh`` are the pull-family operands:
+    when a tier passes its policy and comm kinds, the 1:1 pairing of the
+    pull policies (``jiq`` / ``hsq``) with their token channels is enforced
+    here, along with the sign of the hsq token-refresh operand (the traced
+    rate in the slotted tier, the refresh period in the serving tier).
+    Callers that do not model policies simply omit them.
     """
+    if policy is not None and comm is not None:
+        if policy in PULL_KINDS:
+            if comm == "exact":
+                raise ValueError(
+                    f"policy={policy!r} cannot run under comm='exact' --"
+                    " the exact full-state channel is push-per-departure"
+                    " and would double-bill the token traffic; set"
+                    f" comm={policy!r} (the matching pull token channel)"
+                )
+            if comm != policy:
+                raise ValueError(
+                    f"policy={policy!r} requires comm={policy!r} (its"
+                    f" server-initiated token channel), got comm={comm!r}"
+                )
+        elif comm in PULL_KINDS:
+            raise ValueError(
+                f"comm={comm!r} is the token channel of policy={comm!r};"
+                f" it cannot drive the push policy {policy!r}"
+            )
+    if token_refresh is not None and token_refresh < 0:
+        raise ValueError(
+            f"token_refresh must be >= 0 (the hsq token-refresh rate;"
+            f" 0 disables the periodic refresh), got {token_refresh}"
+        )
     if network not in ("none", "net"):
         raise ValueError(
             f"unknown network kind: {network!r} (expected 'none' or 'net')"

@@ -172,6 +172,36 @@ def stream_summary(count: int, mean: float, m2: float, max_jct: int,
     }
 
 
+def token_summary(token_sum: int, token_misses: int, slots: int,
+                  routed: int) -> dict:
+    """Summary dict of the pull-policy token counters (JIQ / hsq runs).
+
+    ``token_sum`` integrates end-of-slot token-pool occupancy over
+    ``slots`` slots; ``token_misses`` counts routed jobs that found an
+    empty pool (the uniform fallback), out of ``routed`` pull-routed jobs.
+    Same zero-count contract as :func:`jct_summary` /
+    :func:`stream_summary`: an empty window (``slots == 0``,
+    ``routed == 0``, or both -- a warmup-swallowed chunk, a zero-arrival
+    cell) yields finite all-zero statistics with a ``count`` field, never
+    NaN or a divide by zero, so partial-window consumers can always
+    aggregate rows blindly.
+    """
+    slots = int(slots)
+    routed = int(routed)
+    token_sum = int(token_sum)
+    token_misses = int(token_misses)
+    if routed == 0 and slots == 0:
+        return {"count": 0, "mean_tokens": 0.0, "miss_rate": 0.0,
+                "hit_rate": 0.0}
+    miss_rate = token_misses / routed if routed else 0.0
+    return {
+        "count": routed,
+        "mean_tokens": token_sum / slots if slots else 0.0,
+        "miss_rate": miss_rate,
+        "hit_rate": (1.0 - miss_rate) if routed else 0.0,
+    }
+
+
 def ccdf_dominates(a: np.ndarray, b: np.ndarray, tol: float = 0.02) -> bool:
     """True if JCT distribution ``a`` stochastically dominates ``b``
     (i.e. ``a`` is *better*: its CCDF is pointwise <= up to ``tol``)."""

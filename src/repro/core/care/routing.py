@@ -15,7 +15,13 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-PolicyKind = Literal["jsq", "jsaq", "sq2", "sqd", "rr", "random"]
+PolicyKind = Literal[
+    "jsq", "jsaq", "sq2", "sqd", "rr", "random", "jiq", "hsq"
+]
+
+# Pull (server-initiated) policies: route on the balancer-side token pool
+# maintained by the matching ``comm`` kind, not on a queue vector.
+PULL_POLICIES = ("jiq", "hsq")
 
 
 def expected_drain_slots(mean_size, rates):
@@ -104,14 +110,71 @@ def route_sqd(
     return sample[j].astype(jnp.int32)
 
 
-def route_rr(rr_ptr: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Round Robin: deterministic cyclic assignment.  Returns (server, ptr')."""
-    return rr_ptr % k, (rr_ptr + 1) % k
+def route_rr(
+    rr_ptr: jnp.ndarray,
+    k: int,
+    mask: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Round Robin: deterministic cyclic assignment.  Returns (server, ptr').
+
+    ``mask`` (optional) restricts the candidate set: the pointer skips
+    masked-out servers and lands on the cyclically-next eligible one (an
+    all-``False`` mask degrades to unmasked, like :func:`mask_scores`).
+    With an all-``True`` mask the choice and the pointer sequence are
+    identical to the unmasked path.
+    """
+    if mask is None:
+        return rr_ptr % k, (rr_ptr + 1) % k
+    mask = jnp.where(jnp.any(mask), mask, True)
+    # Cyclic distance from the pointer; masked-out servers pushed past the
+    # horizon so argmin picks the nearest eligible server at/after ptr.
+    off = (jnp.arange(k, dtype=jnp.int32) - rr_ptr) % k
+    off = jnp.where(mask, off, k)
+    server = jnp.argmin(off).astype(jnp.int32)
+    return server, (server + 1) % k
 
 
-def route_random(k: int, key: jax.Array) -> jnp.ndarray:
-    """Uniformly random assignment."""
-    return jax.random.randint(key, (), 0, k, jnp.int32)
+def route_random(
+    k: int,
+    key: jax.Array,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Uniformly random assignment.
+
+    ``mask`` (optional) restricts the draw to the eligible set: the r-th
+    eligible server is picked with ``r ~ U{0..n_eligible-1}`` (an
+    all-``False`` mask degrades to unmasked).  With an all-``True`` mask
+    the draw consumes the key exactly like the unmasked path, so decisions
+    are bit-identical.
+    """
+    if mask is None:
+        return jax.random.randint(key, (), 0, k, jnp.int32)
+    mask = jnp.where(jnp.any(mask), mask, True)
+    n_elig = jnp.sum(mask, dtype=jnp.int32)
+    r = jax.random.randint(key, (), 0, n_elig, jnp.int32)
+    cum = jnp.cumsum(mask.astype(jnp.int32))
+    return jnp.argmax(cum == r + 1).astype(jnp.int32)
+
+
+def route_tokens(
+    tokens: jnp.ndarray,
+    key: jax.Array,
+    deterministic: bool = False,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Pull policies (JIQ / hyper-scalable JSQ): spend a balancer token.
+
+    ``tokens`` is the balancer-side ``(K,)`` int32 token pool maintained by
+    the matching pull comm kind (1 per idle server for JIQ, the headroom
+    below the threshold for hsq).  Routing joins the server holding the
+    most tokens -- scored as ``-tokens`` through the shortest-queue
+    machinery so ties (including the empty-pool case, where every server
+    holds 0 and the policy degrades to a uniform-random fallback) resolve
+    exactly like JSAQ, and suspect/affinity masks compose via
+    :func:`mask_scores`.
+    """
+    score = (0 - tokens).astype(jnp.float32)
+    return route_shortest(score, key, deterministic, mask)
 
 
 def route(
@@ -124,15 +187,23 @@ def route(
     drain_slots: jnp.ndarray | None = None,
     deterministic: bool = False,
     mask: jnp.ndarray | None = None,
+    tokens: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Dispatch one job.  Returns ``(server, rr_ptr')``.
 
-    ``mask`` (optional, ``(K,)`` bool) marks servers *eligible* for the
-    shortest-queue family -- the suspect-server exclusion of the degraded
-    control plane (an all-``False`` mask degrades to unmasked, see
-    :func:`mask_scores`).  ``rr`` and ``random`` ignore it: they are
-    state-blind by definition and keep their deterministic / uniform
-    behaviour.
+    ``mask`` (optional, ``(K,)`` bool) marks servers *eligible* -- the
+    suspect-server exclusion of the degraded control plane and the
+    per-class affinity constraint of multi-class workloads (an
+    all-``False`` mask degrades to unmasked, see :func:`mask_scores`).
+    Every policy honours it: the shortest-queue family and the pull
+    policies lift masked scores to ``+inf``, ``rr`` skips masked servers
+    to the cyclically-next eligible one, and ``random`` samples uniformly
+    from the eligible set.  With an all-``True`` mask every policy's
+    decisions are bit-identical to the unmasked path.
+
+    ``tokens`` (``(K,)`` int32) is the balancer-side token pool the pull
+    policies (``jiq`` / ``hsq``) route on; see :func:`route_tokens`.  The
+    caller owns spending/refreshing it.
 
     ``deterministic`` (static) switches the shortest-queue family's
     tie-break from uniformly random to lowest index (the Pallas kernel
@@ -168,8 +239,10 @@ def route(
     if policy == "sqd":
         return route_sqd(scaled_true, d, key, mask), rr_ptr
     if policy == "rr":
-        server, ptr = route_rr(rr_ptr, k)
+        server, ptr = route_rr(rr_ptr, k, mask)
         return server.astype(jnp.int32), ptr
     if policy == "random":
-        return route_random(k, key), rr_ptr
+        return route_random(k, key, mask), rr_ptr
+    if policy in PULL_POLICIES:
+        return route_tokens(tokens, key, deterministic, mask), rr_ptr
     raise ValueError(f"unknown policy: {policy}")

@@ -162,6 +162,18 @@ class StaticConfig:
     # ``net_delay`` in the grid (validated at the host entry points).
     # Static because it is an array shape.
     net_delay_cap: int = 32
+    # Number of arrival classes for constrained routing (an array shape:
+    # ``Scenario.class_mix`` is (C,), ``class_affinity`` (C, K)).  With
+    # ``classes == 1`` no class stream is drawn and the program is
+    # byte-identical to the historical single-class one.
+    classes: int = 1
+    # True when the config supplied an explicit affinity mask.  A SINGLE
+    # class with a restricted server set is a legitimate constraint (e.g.
+    # a partial placement), so the mask must be applied even when no class
+    # stream is drawn -- without this bit a (1, K) affinity would silently
+    # no-op.  Unconstrained single-class programs keep constrained=False
+    # and stay byte-identical to the historical trace.
+    constrained: bool = False
 
 
 @jax.tree_util.register_dataclass
@@ -202,6 +214,9 @@ class Scenario:
     crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
     recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
     slow_factor: jnp.ndarray  # () f32 rate multiplier while slowed (fault="slow")
+    # Constrained-routing operands (neutral single-class defaults).
+    class_mix: jnp.ndarray  # (C,) f32 arrival-class weights
+    class_affinity: jnp.ndarray  # (C, K) bool per-class eligible servers
 
     @staticmethod
     def create(
@@ -228,6 +243,10 @@ class Scenario:
         crash_rate: float = 0.0,
         recover_rate: float = 0.0,
         slow_factor: float = 1.0,
+        class_mix: Optional[Sequence[float]] = None,
+        class_affinity: Optional[Sequence[Sequence[bool]]] = None,
+        policy: Optional[str] = None,  # pull-pairing validation only
+        comm: Optional[str] = None,  # pull-pairing validation only
     ) -> "Scenario":
         comm_lib.validate_control_plane(
             network=network,
@@ -239,7 +258,47 @@ class Scenario:
             crash_rate=crash_rate,
             recover_rate=recover_rate,
             slow_factor=slow_factor,
+            policy=policy,
+            comm=comm,
+            token_refresh=rt_rate if policy == "hsq" else None,
         )
+        if class_affinity is not None and class_mix is None:
+            raise ValueError(
+                "class_affinity requires class_mix (one weight per class)"
+            )
+        if class_mix is None:
+            mix = jnp.ones((1,), jnp.float32)
+            aff = jnp.ones((1, servers), bool)
+        else:
+            mix_np = np.asarray(class_mix, np.float64)
+            if mix_np.ndim != 1 or mix_np.size < 1:
+                raise ValueError(
+                    f"class_mix must be a 1-D weight vector, got shape "
+                    f"{mix_np.shape}"
+                )
+            if np.any(mix_np < 0) or mix_np.sum() <= 0:
+                raise ValueError(
+                    "class_mix weights must be >= 0 with a positive sum, "
+                    f"got {class_mix}"
+                )
+            aff_np = (
+                np.ones((mix_np.size, servers), bool)
+                if class_affinity is None
+                else np.asarray(class_affinity, bool)
+            )
+            if aff_np.shape != (mix_np.size, servers):
+                raise ValueError(
+                    f"class_affinity must have shape (classes, servers) = "
+                    f"({mix_np.size}, {servers}), got {aff_np.shape}"
+                )
+            if not aff_np.any(axis=1).all():
+                empty = int(np.argmin(aff_np.any(axis=1)))
+                raise ValueError(
+                    f"class_affinity row {empty} has no eligible server; "
+                    "every class needs at least one"
+                )
+            mix = jnp.asarray(mix_np, jnp.float32)
+            aff = jnp.asarray(aff_np)
         lam_hi = min(burst_intensity * load, 1.0)
         lam_lo = max(2.0 * load - lam_hi, 0.0)
         period = max(int(round(1.0 / max(rt_rate, 1e-9))), 1)
@@ -291,6 +350,8 @@ class Scenario:
             crash_rate=jnp.float32(crash_rate),
             recover_rate=jnp.float32(recover_rate),
             slow_factor=jnp.float32(slow_factor),
+            class_mix=mix,
+            class_affinity=aff,
         )
 
 
@@ -366,6 +427,11 @@ class SimConfig:
     recover_rate: float = 0.0
     slow_factor: float = 1.0
     net_delay_cap: int = 32  # stale-view ring capacity (static shape)
+    # Constrained routing: per-class arrival weights and per-class server
+    # affinity masks (rows must each keep >= 1 eligible server).  The mix
+    # is a traced operand; only the class count C is structural.
+    class_mix: Optional[Tuple[float, ...]] = None
+    class_affinity: Optional[Tuple[Tuple[bool, ...], ...]] = None
 
     def static_part(self) -> StaticConfig:
         if self.max_slots is not None and self.max_slots < self.slots:
@@ -396,6 +462,10 @@ class SimConfig:
             network=self.network,
             fault=self.fault,
             net_delay_cap=self.net_delay_cap,
+            classes=(
+                len(self.class_mix) if self.class_mix is not None else 1
+            ),
+            constrained=self.class_affinity is not None,
         )
 
     def scenario(self) -> Scenario:
@@ -423,6 +493,10 @@ class SimConfig:
             crash_rate=self.crash_rate,
             recover_rate=self.recover_rate,
             slow_factor=self.slow_factor,
+            class_mix=self.class_mix,
+            class_affinity=self.class_affinity,
+            policy=self.policy,
+            comm=self.comm,
         )
 
 
@@ -444,6 +518,9 @@ class SimResult:
     queue_gap_sup: int = 0  # sup_t max_ij |Q_i - Q_j| (for SSC experiments)
     dropped: int = 0  # arrivals rejected because the FIFO was full
     net_drops: int = 0  # messages lost in flight (network="net")
+    # Pull-policy counters (jiq / hsq; zero otherwise).
+    token_misses: int = 0  # arrivals routed with an empty token pool
+    token_sum: int = 0  # sum over active slots of end-of-slot pool size
 
 
 @dataclasses.dataclass
@@ -468,6 +545,11 @@ class _Carry:
     fault_state: Optional[jnp.ndarray] = None  # (K,) bool servers faulted
     net: Optional[comm_lib.NetState] = None  # in-flight message buffer
     q_hist: Optional[jnp.ndarray] = None  # (cap, K) stale true-state ring
+    # Pull-policy state (None unless policy is jiq/hsq): the balancer-side
+    # token pool plus its counters.
+    tokens: Optional[jnp.ndarray] = None  # (K,) i32 balancer token pool
+    token_miss: Optional[jnp.ndarray] = None  # () i32 empty-pool routings
+    token_sum: Optional[jnp.ndarray] = None  # () i32 summed pool occupancy
 
 
 jax.tree_util.register_dataclass(
@@ -503,9 +585,15 @@ def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
     sizes = workload_lib.service_sizes(k_size, t, scn.service)
     slot_keys = jax.random.split(k_scan, t)
     out = (arrive, sizes, slot_keys, active)
-    # Control-plane randomness comes from fold_in-derived side streams so
-    # the three historical children of `key` -- and therefore the whole
-    # "none"-kind sample path -- stay byte-stable.
+    # Class / control-plane randomness comes from fold_in-derived side
+    # streams so the three historical children of `key` -- and therefore
+    # the whole single-class "none"-kind sample path -- stay byte-stable.
+    if static.classes > 1:
+        out += (
+            workload_lib.arrival_classes(
+                jax.random.fold_in(key, 13), t, scn.class_mix
+            ),
+        )
     if static.network != "none":
         out += (jax.random.split(jax.random.fold_in(key, 7), t),)
     if static.fault != "none":
@@ -515,7 +603,7 @@ def _prep(key: jax.Array, static: StaticConfig, scn: Scenario):
 
 def _sim_core(
     arrive, sizes, slot_keys, active, static: StaticConfig, scn: Scenario,
-    net_keys=None, fault_keys=None,
+    net_keys=None, fault_keys=None, classes=None,
 ):
     """One full slotted run as a lax.scan; traceable (also under vmap).
 
@@ -541,6 +629,18 @@ def _sim_core(
     )
     has_net = static.network != "none"
     has_fault = static.fault != "none"
+    has_cls = static.classes > 1
+    has_pull = static.policy in routing_lib.PULL_POLICIES
+    if has_pull and static.comm != static.policy:
+        raise ValueError(
+            f"policy={static.policy!r} requires comm={static.policy!r} "
+            f"(its token channel), got comm={static.comm!r}"
+        )
+    if static.comm in comm_lib.PULL_KINDS and not has_pull:
+        raise ValueError(
+            f"comm={static.comm!r} is the token channel of "
+            f"policy={static.comm!r}, got policy={static.policy!r}"
+        )
     if has_net and static.comm == "exact":
         raise ValueError(
             "comm='exact' cannot run through the network model: its "
@@ -582,7 +682,13 @@ def _sim_core(
     def slot(c: _Carry, xs):
         arr, size, jid, skey, act = xs[:5]
         rest = xs[5:]
-        nkey = rest[0] if has_net else None
+        ri = 0
+        if has_cls:
+            cls_t = rest[ri]
+            ri += 1
+        else:
+            cls_t = None
+        nkey = rest[ri] if has_net else None
         fkey = rest[-1] if has_fault else None
 
         # --- 0. fault transitions -------------------------------------
@@ -616,17 +722,46 @@ def _sim_core(
             healthy = (scn.suspect_age <= 0) | (age <= scn.suspect_age)
         else:
             healthy = None
+        if has_cls or static.constrained:
+            # Per-class affinity constrains the candidate set; composed
+            # with the suspect mask, an empty intersection falls back to
+            # the affinity set alone (the SLA constraint is hard, the
+            # staleness heuristic is soft) -- mirroring the SQ(d)-subset
+            # fallback of the serving tier.  With a single constrained
+            # class there is no class stream: every arrival reads row 0.
+            aff = scn.class_affinity[cls_t if has_cls else 0]
+            if healthy is not None:
+                both = aff & healthy
+                mask = jnp.where(jnp.any(both), both, aff)
+            else:
+                mask = aff
+        else:
+            mask = healthy
         server, rr_ptr = routing_lib.route(
             static.policy, q_route, c.emu.q_app, c.rr_ptr, skey,
             d=static.sqd, drain_slots=drain_slots,
             deterministic=static.deterministic_ties,
-            mask=healthy,
+            mask=mask, tokens=c.tokens,
         )
         # Dense one-hot arithmetic instead of scalar gathers / scatters /
         # conds: under vmap those lower to serial per-batch-element loops
         # (or both-branch selects), which destroys the batched-scan
         # throughput; elementwise (K,) ops stay fully vectorised.
         onehot = jnp.arange(k, dtype=jnp.int32) == server
+        if has_pull:
+            # The balancer spends one token on every routed arrival (it
+            # cannot see FIFO drops); an empty selected pool is a token
+            # miss -- the uniform-random fallback path.
+            tok_sel = jnp.sum(jnp.where(onehot, c.tokens, 0))
+            token_miss = c.token_miss + (arr & (tok_sel == 0)).astype(
+                jnp.int32
+            )
+            tokens = jnp.maximum(
+                c.tokens - (onehot & arr).astype(jnp.int32), 0
+            )
+        else:
+            token_miss = c.token_miss
+            tokens = c.tokens
         q_sel = jnp.sum(jnp.where(onehot, c.q_true, 0))
         # A full FIFO drops the arrival (counted) rather than letting the
         # tail wrap onto the live head entry.
@@ -703,7 +838,8 @@ def _sim_core(
             can_send = force = None
         triggered, comm_adv = comm_lib.evaluate(
             c.comm, ccfg, err, dep.astype(jnp.int32),
-            can_send=can_send, force=force, count_msgs=not has_net,
+            can_send=can_send, force=force, q=q_true,
+            count_msgs=not has_net,
         )
         triggered = triggered & act
         if has_net:
@@ -746,6 +882,24 @@ def _sim_core(
             lambda adv, old: jnp.where(act, adv, old), comm_adv, c.comm
         )
         emu = approx_lib.emu_message_reset(emu, snap_payload, snap_mask, acfg)
+        if has_pull:
+            # A delivered token message overwrites that server's pool
+            # entry from the queue snapshot it carried: 1 iff idle for
+            # JIQ, the headroom below the threshold for hsq.  Stale
+            # tokens of a crashed server are spent and never refreshed,
+            # which is what bounds its misroutes.
+            if static.comm == "jiq":
+                fresh = (snap_payload == 0).astype(jnp.int32)
+            else:  # hsq
+                fresh = jnp.maximum(scn.x - snap_payload, 0).astype(
+                    jnp.int32
+                )
+            tokens = jnp.where(snap_mask, fresh, tokens)
+            token_sum = c.token_sum + jnp.where(
+                act, jnp.sum(tokens), 0
+            ).astype(jnp.int32)
+        else:
+            token_sum = c.token_sum
 
         # --- 6. metrics ---------------------------------------------------
         if stale_ring:
@@ -774,6 +928,9 @@ def _sim_core(
             fault_state=faulted,
             net=net_state,
             q_hist=q_hist,
+            tokens=tokens,
+            token_miss=token_miss,
+            token_sum=token_sum,
         )
         return carry, departed_jid
 
@@ -796,8 +953,13 @@ def _sim_core(
         fault_state=jnp.zeros((k,), bool) if has_fault else None,
         net=comm_lib.NetState.init(k) if has_net else None,
         q_hist=jnp.zeros((cap, k), jnp.int32) if stale_ring else None,
+        tokens=jnp.zeros((k,), jnp.int32) if has_pull else None,
+        token_miss=jnp.zeros((), jnp.int32) if has_pull else None,
+        token_sum=jnp.zeros((), jnp.int32) if has_pull else None,
     )
     xs = (arrive, sizes, jnp.arange(t, dtype=jnp.int32), slot_keys, active)
+    if has_cls:
+        xs += (classes,)
     if has_net:
         xs += (net_keys,)
     if has_fault:
@@ -825,6 +987,8 @@ def _sim_core(
         final.dropped,
         final.gap_sup,
         final.net.drops if has_net else jnp.zeros((), jnp.int32),
+        final.token_miss if has_pull else jnp.zeros((), jnp.int32),
+        final.token_sum if has_pull else jnp.zeros((), jnp.int32),
     )
 
 
@@ -832,12 +996,13 @@ def _run_one(key, scn: Scenario, static: StaticConfig):
     """Workload draw + scan for one (key, scenario) pair; vmap-able."""
     prep = _prep(key, static, scn)
     arrive, sizes, slot_keys, act = prep[:4]
-    rest = prep[4:]
-    net_keys = rest[0] if static.network != "none" else None
-    fault_keys = rest[-1] if static.fault != "none" else None
+    rest = list(prep[4:])
+    classes = rest.pop(0) if static.classes > 1 else None
+    net_keys = rest.pop(0) if static.network != "none" else None
+    fault_keys = rest.pop(0) if static.fault != "none" else None
     return (arrive,) + _sim_core(
         arrive, sizes, slot_keys, act, static, scn,
-        net_keys=net_keys, fault_keys=fault_keys,
+        net_keys=net_keys, fault_keys=fault_keys, classes=classes,
     )
 
 
@@ -931,6 +1096,13 @@ def _check_pallas_static(static: StaticConfig) -> None:
             f"compute instant-delivery, fault-free results -- use "
             f"route_backend='dense'"
         )
+    if static.classes > 1 or static.constrained:
+        raise NotImplementedError(
+            f"route_backend='pallas' does not implement constrained "
+            f"routing (classes={static.classes}, "
+            f"constrained={static.constrained}): the kernel carries no "
+            f"per-class affinity masks -- use route_backend='dense'"
+        )
 
 
 @functools.lru_cache(maxsize=None)
@@ -985,6 +1157,8 @@ def _pallas_grid_fn(static: StaticConfig):
             stats[:, 3],  # dropped
             stats[:, 6],  # gap_sup
             jnp.zeros((n,), jnp.int32),  # net_drops (no network model)
+            jnp.zeros((n,), jnp.int32),  # token_misses (no pull policies)
+            jnp.zeros((n,), jnp.int32),  # token_sum
         )
 
     fn = jax.jit(run)
@@ -1046,6 +1220,31 @@ def _check_control_plane(static: StaticConfig, scn: Scenario) -> None:
     crash = np.asarray(scn.crash_rate)
     recover = np.asarray(scn.recover_rate)
     slow = np.asarray(scn.slow_factor)
+    if (
+        static.policy in routing_lib.PULL_POLICIES
+        or static.comm in comm_lib.PULL_KINDS
+    ):
+        if static.comm != static.policy:
+            raise ValueError(
+                f"pull policies pair 1:1 with their token channel: "
+                f"policy={static.policy!r} with comm={static.comm!r}"
+            )
+        if static.policy == "hsq" and np.any(np.asarray(scn.rt_rate) < 0):
+            raise ValueError(
+                "rt_rate (the hsq token-refresh rate) must be >= 0"
+            )
+    mix = np.asarray(scn.class_mix)
+    if mix.shape[-1] != static.classes:
+        raise ValueError(
+            f"Scenario.class_mix has {mix.shape[-1]} classes but "
+            f"StaticConfig.classes is {static.classes}"
+        )
+    aff = np.asarray(scn.class_affinity)
+    if aff.shape[-2:] != (static.classes, static.servers):
+        raise ValueError(
+            f"Scenario.class_affinity must end in shape (classes, servers)"
+            f" = ({static.classes}, {static.servers}), got {aff.shape}"
+        )
     if static.network == "none":
         for name, arr, neutral in (
             ("net_delay", delay, 0),
@@ -1110,7 +1309,7 @@ def _check_control_plane(static: StaticConfig, scn: Scenario) -> None:
 def _finalize(arrive_np: np.ndarray, out) -> SimResult:
     """Convert one run's device outputs into a host-side SimResult."""
     (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
-     gap_sup, net_drops) = (np.asarray(o) for o in out)
+     gap_sup, net_drops, token_miss, token_sum) = (np.asarray(o) for o in out)
 
     arrival_slots = np.nonzero(arrive_np)[0]
     comp = comp_slot[arrival_slots]
@@ -1133,6 +1332,8 @@ def _finalize(arrive_np: np.ndarray, out) -> SimResult:
         queue_gap_sup=int(gap_sup),
         dropped=int(dropped),
         net_drops=int(net_drops),
+        token_misses=int(token_miss),
+        token_sum=int(token_sum),
     )
 
 

@@ -265,6 +265,23 @@ def mmpp_arrivals_from_rates(
     return arrive
 
 
+def arrival_classes(key: jax.Array, slots: int, mix) -> jnp.ndarray:
+    """Per-slot arrival class ids from a traced class-mix simplex.
+
+    ``mix`` is a ``(C,)`` f32 vector of class weights (normalised here, so
+    any positive scaling works).  Each potential arrival independently
+    draws its class via inverse-CDF on the cumulative mix -- a traced
+    operand, so grids sweeping the mix share one compiled program; only
+    ``C`` (the shape) is structural.  The constrained-routing tier pairs
+    the returned ids with a ``(C, K)`` per-class affinity mask (Fox et
+    al. 2025-style class SLAs) fed to the policies' candidate mask.
+    """
+    u = jax.random.uniform(key, (slots,), jnp.float32)
+    cum = jnp.cumsum(mix) / jnp.sum(mix)
+    cls = jnp.searchsorted(cum, u, side="right")
+    return jnp.clip(cls, 0, mix.shape[0] - 1).astype(jnp.int32)
+
+
 def service_units(slot_idx, rates, xp=jnp):
     """Work units each server completes in slot ``slot_idx`` (credit schedule).
 

@@ -100,7 +100,20 @@ from repro.kernels import ops as kernel_ops
 #   heterogeneous per-replica ``decode_rates``; reduces to JSAQ when the
 #   rates are uniform (scaling by one positive constant is
 #   argmin-invariant, with an identical f32 tie set).
-ServePolicy = Literal["jsaq", "sqd", "rr", "drain"]
+# * ``jiq`` / ``hsq`` -- the *pull* (server-initiated) family: replicas
+#   push tokens through the matching comm kind (``comm`` must equal the
+#   policy -- the token channel is the policy's other half) and the
+#   dispatcher routes to the replica holding the most tokens, degrading
+#   to a uniform tie-broken fallback when the pool is empty.  JIQ tokens
+#   mark idle replicas; hyper-scalable-JSQ tokens carry the headroom
+#   below the threshold ``x``, refreshed at least every ``rt_period``
+#   slots.  Token traffic is billed on the same wire as push updates
+#   (evaluate -> net_step), so the message-rate axis stays honest.
+ServePolicy = Literal["jsaq", "sqd", "rr", "drain", "jiq", "hsq"]
+
+# Pull policies: route on the dispatcher-side token pool, not a queue
+# vector (mirrors routing.PULL_POLICIES for the slotted tier).
+PULL_POLICIES = routing_lib.PULL_POLICIES
 
 # Pre-drawn subset-uniform lane width of ServeWorkload.sub_u: SQ(d) cells
 # need d <= SQD_MAX.  Fixed so cells differing only in policy / d share
@@ -136,7 +149,7 @@ class EngineConfig:
     num_replicas: int = 8
     decode_slots: int = 16  # concurrent sequences per replica
     et_x: int = 4  # ET threshold on queue-occupancy error
-    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact"
+    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact" | "jiq" | "hsq"
     dt_x: int = 4
     rt_period: int = 16
     msr_drain: float = 1.0  # emulated completions per slot per busy replica
@@ -180,6 +193,14 @@ class EngineConfig:
             )
         if self.comm == "exact":
             return comm_lib.CommConfig(kind="exact")
+        if self.comm == "jiq":
+            return comm_lib.CommConfig(kind="jiq")
+        if self.comm == "hsq":
+            # hsq reuses the ET threshold as the queue threshold and the
+            # RT period as the token-refresh period (both traced knobs).
+            return comm_lib.CommConfig(
+                kind="hsq", x=self.et_x, rt_period=self.rt_period
+            )
         raise ValueError(f"unknown comm mode: {self.comm}")
 
 
@@ -205,7 +226,7 @@ class ServeConfig:
     decode_slots: int = 16
     slots: int = 20_000
     load: float = 0.9
-    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact"
+    comm: str = "et"  # "et" | "dt" | "rt" | "et_rt" | "exact" | "jiq" | "hsq"
     x: float = 4.0  # ET/DT threshold (traced)
     rt_period: int = 16
     msr_drain: float = 1.0
@@ -302,6 +323,11 @@ class ServeConfig:
             crash_rate=self.crash_rate,
             recover_rate=self.recover_rate,
             slow_factor=self.slow_factor,
+            policy=self.policy,
+            comm=self.comm,
+            token_refresh=(
+                float(self.rt_period) if self.policy == "hsq" else None
+            ),
         )
         if self.network != "none" and self.comm == "exact":
             raise ValueError(
@@ -832,6 +858,11 @@ class CareDispatcher:
             crash_rate=cfg.crash_rate,
             recover_rate=cfg.recover_rate,
             slow_factor=cfg.slow_factor,
+            policy=cfg.policy,
+            comm=cfg.comm,
+            token_refresh=(
+                float(cfg.rt_period) if cfg.policy == "hsq" else None
+            ),
         )
         if cfg.network != "none" and cfg.comm == "exact":
             raise ValueError(
@@ -871,6 +902,17 @@ class CareDispatcher:
         self.rng = rng if rng is not None else np.random.default_rng(seed)
         self._rr_ptr = 0  # round-robin pointer ("rr" policy)
         self.last_subset: Optional[np.ndarray] = None  # "sqd" diagnostics
+        # Pull-policy token pool: one slot per replica, refreshed on
+        # token-message *delivery* (so stale pools under a degraded
+        # network mirror the traced engine exactly).  token_misses counts
+        # routed arrivals that found an empty pool (the uniform fallback);
+        # token_sum integrates end-of-slot pool occupancy over slots.
+        if cfg.policy in PULL_POLICIES:
+            self._tokens: Optional[np.ndarray] = np.zeros(r, np.int32)
+        else:
+            self._tokens = None
+        self.token_misses = 0
+        self.token_sum = 0
         # Heterogeneous decode rates: None = unit rates (the historical
         # integer fast path).  The f32 vectors mirror the traced operands
         # exactly -- same IEEE products in the MSR drain and drain score.
@@ -944,8 +986,21 @@ class CareDispatcher:
             if not healthy.any():
                 healthy = np.ones_like(healthy)
         if cfg.policy == "rr":
-            j = self._rr_ptr % cfg.num_replicas
-            self._rr_ptr += 1
+            if healthy is None:
+                j = self._rr_ptr % cfg.num_replicas
+                self._rr_ptr += 1
+            else:
+                # Masked round robin: skip suspect replicas to the
+                # cyclically-next healthy one (same derivation as the
+                # traced lane and routing.route_rr -- with an all-True
+                # mask the choice equals the unmasked path).
+                off = (
+                    np.arange(cfg.num_replicas, dtype=np.int64)
+                    - self._rr_ptr
+                ) % cfg.num_replicas
+                off = np.where(healthy, off, cfg.num_replicas)
+                j = int(np.argmin(off))
+                self._rr_ptr = j + 1
         else:
             if u is None:
                 u = self.rng.random(dtype=np.float32)
@@ -964,6 +1019,18 @@ class CareDispatcher:
                     occ * self._drain_slots, u, mask=healthy,
                     deterministic=det,
                 )
+            elif cfg.policy in PULL_POLICIES:
+                # Spend a token: join the replica holding the most (scored
+                # as -tokens through the shared tie machinery, so an empty
+                # pool is an all-tie -- the uniform fallback -- and the
+                # suspect mask composes like every other policy).
+                j = pick_min_tied(
+                    (0 - self._tokens).astype(np.float32), u,
+                    mask=healthy, deterministic=det,
+                )
+                if self._tokens[j] == 0:
+                    self.token_misses += 1
+                self._tokens[j] = max(int(self._tokens[j]) - 1, 0)
             else:  # jsaq
                 j = pick_min_tied(occ, u, mask=healthy, deterministic=det)
         if cfg.policy == "sqd" and self.net is not None:
@@ -1085,7 +1152,7 @@ class CareDispatcher:
             force = recovered
         trig, self.comm = comm_lib.evaluate(
             self.comm, self._ccfg, err, completions, xp=np,
-            can_send=can_send, force=force,
+            can_send=can_send, force=force, q=true_occ,
             count_msgs=self.net is None,
         )
         # 5. network: triggered sends traverse the in-flight buffer (delay
@@ -1109,6 +1176,31 @@ class CareDispatcher:
             self.approx = np.where(delivered, payload, self.approx)
         else:
             self.approx = np.where(trig, true_occ, self.approx)
+        # 6. pull-token refresh: a delivered token message *overwrites* the
+        # sender's pool slot from the send-time queue snapshot (1 if idle
+        # for JIQ, the headroom below the threshold for hsq -- f32
+        # arithmetic truncated to int32, matching the traced engine).  A
+        # crashed replica stops sending, so its stale tokens drain to zero
+        # and are never replenished -- the safe-staleness property the
+        # pull frontier measures.
+        if self._tokens is not None:
+            if cfg.comm == "jiq":
+                def _fresh(p):
+                    return (p == np.float32(0.0)).astype(np.int32)
+            else:  # hsq
+                def _fresh(p):
+                    return np.maximum(
+                        np.float32(self._ccfg.x) - p, np.float32(0.0)
+                    ).astype(np.int32)
+            if self.net is not None:
+                self._tokens = np.where(
+                    delivered, _fresh(payload), self._tokens
+                )
+            else:
+                self._tokens = np.where(
+                    trig, _fresh(true_occ), self._tokens
+                )
+            self.token_sum += int(self._tokens.sum())
         return finished
 
 
@@ -1213,6 +1305,8 @@ def run_serving_sim(
         "occupancy": occupancy,
         "requests": finished,
         "net_drops": int(disp.net.drops) if disp.net is not None else 0,
+        "token_misses": int(disp.token_misses),
+        "token_sum": int(disp.token_sum),
     }
 
 
@@ -1281,6 +1375,11 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         drain_slots = routing_lib.expected_drain_slots(
             scn.mean_prefill + scn.mean_decode, scn.decode_rates
         )
+    # Pull family: the carry grows a (tokens, token_miss, token_sum)
+    # triple (None otherwise -- the default program structure is
+    # unchanged).  ServeConfig.static_part / CareDispatcher validated the
+    # 1:1 policy<->comm pairing already.
+    has_pull = static.policy in PULL_POLICIES
 
     def slot(carry, xs):
         # Position 9 (``comp_slot``) is the rid-indexed completion-slot
@@ -1288,7 +1387,8 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         # stream mode; position 5 (``arid``) holds request ids in fixed
         # mode and arrival slots in stream mode.
         (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-         rr_ptr, comp_slot, total_comp, dropped, net_state, faulted) = carry
+         rr_ptr, comp_slot, total_comp, dropped, net_state, faulted,
+         pull_state) = carry
         t, n_arr_t, work_t, tie_t, rid_t, sub_t, ndu_t, nju_t, fu_t = xs
         if static.stream:
             # A streamed request's identity is its arrival slot: the ring
@@ -1319,7 +1419,7 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         # same replica take successive tails) and masked lanes are routed
         # out of bounds and dropped.
         def lane(lc, lx):
-            q_len, approx, rr_ptr, dropped = lc
+            q_len, approx, rr_ptr, dropped, lpull = lc
             u, sub_l, lane_i = lx
             live = act & (lane_i < n_arr_t)
             if static.comm == "exact":
@@ -1327,11 +1427,48 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
             else:
                 occ = approx
             if static.policy == "rr":
-                # Deterministic cyclic assignment; the pointer advances
-                # only on live lanes (the reference routes only actual
-                # arrivals).
-                j = (rr_ptr % r_n).astype(jnp.int32)
-                rr_ptr = rr_ptr + live.astype(jnp.int32)
+                if healthy is None:
+                    # Deterministic cyclic assignment; the pointer
+                    # advances only on live lanes (the reference routes
+                    # only actual arrivals).
+                    j = (rr_ptr % r_n).astype(jnp.int32)
+                    rr_ptr = rr_ptr + live.astype(jnp.int32)
+                else:
+                    # Masked round robin: skip suspect replicas to the
+                    # cyclically-next healthy one (routing.route_rr's
+                    # derivation; all-True mask == unmasked decisions,
+                    # with the pointer held in its bounded form).
+                    off = (
+                        jnp.arange(r_n, dtype=jnp.int32) - rr_ptr
+                    ) % r_n
+                    off = jnp.where(healthy, off, r_n)
+                    j = jnp.argmin(off).astype(jnp.int32)
+                    rr_ptr = jnp.where(live, j + 1, rr_ptr)
+            elif static.policy in PULL_POLICIES:
+                tokens, token_miss = lpull
+                score = (0 - tokens).astype(jnp.float32)
+                if healthy is not None:
+                    score = jnp.where(healthy, score, jnp.inf)
+                is_min = score == jnp.min(score)
+                if static.deterministic_ties:
+                    rank = jnp.zeros((), jnp.int32)
+                else:
+                    n_ties = jnp.sum(is_min, dtype=jnp.int32)
+                    rank = jnp.minimum(
+                        (u * n_ties.astype(jnp.float32)).astype(jnp.int32),
+                        n_ties - 1,
+                    )
+                cum = jnp.cumsum(is_min.astype(jnp.int32))
+                j = jnp.argmax(cum == rank + 1).astype(jnp.int32)
+                # Spend the routed replica's token (empty pool counts a
+                # miss -- the uniform fallback the frontier reports).
+                sel_t = (rep_idx == j) & live
+                tok_j = jnp.sum(jnp.where(rep_idx == j, tokens, 0))
+                token_miss = token_miss + (
+                    live & (tok_j == 0)
+                ).astype(jnp.int32)
+                tokens = jnp.maximum(tokens - sel_t.astype(jnp.int32), 0)
+                lpull = (tokens, token_miss)
             else:
                 if static.policy == "drain":
                     score = occ * drain_slots
@@ -1372,7 +1509,7 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
             q_len = q_len + sel.astype(jnp.int32)
             approx = approx + sel.astype(jnp.float32)
             dropped = dropped + (live & ~admit).astype(jnp.int32)
-            return (q_len, approx, rr_ptr, dropped), (j, tail, admit)
+            return (q_len, approx, rr_ptr, dropped, lpull), (j, tail, admit)
 
         if static.route_backend == "pallas":
             # Fused arrival-lane routing: the kernel's fori_loop over lanes
@@ -1385,10 +1522,13 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
             )
             dropped = dropped + d_drop
         else:
+            lpull = (
+                (pull_state[0], pull_state[1]) if has_pull else None
+            )
             lane_xs = (tie_t, sub_t, jnp.arange(a_n, dtype=jnp.int32))
-            (q_len, approx, rr_ptr, dropped), (jv, tailv, admitv) = (
+            (q_len, approx, rr_ptr, dropped, lpull), (jv, tailv, admitv) = (
                 jax.lax.scan(
-                    lane, (q_len, approx, rr_ptr, dropped), lane_xs
+                    lane, (q_len, approx, rr_ptr, dropped, lpull), lane_xs
                 )
             )
         jv = jnp.where(admitv, jv, r_n)  # out of bounds -> dropped scatter
@@ -1483,7 +1623,8 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
             force = recovered
         trig, comm_adv = comm_lib.evaluate(
             comm_state, ccfg, err, completions,
-            can_send=can_send, force=force, count_msgs=not has_net,
+            can_send=can_send, force=force, q=true_occ,
+            count_msgs=not has_net,
         )
         trig = trig & act
         if has_net:
@@ -1510,9 +1651,32 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         comm_state = jax.tree.map(
             lambda adv, old: jnp.where(act, adv, old), comm_adv, comm_state
         )
+        if has_pull:
+            # --- 7. pull-token refresh: a delivered token message
+            # *overwrites* the sender's pool slot from the send-time queue
+            # snapshot (1 if idle for JIQ, the threshold headroom for hsq
+            # -- f32 truncated to int32, exactly like the reference).  A
+            # crashed replica stops sending, so its stale tokens drain to
+            # zero and are never replenished.
+            tokens, token_miss = lpull
+            if static.comm == "jiq":
+                def _fresh(p):
+                    return (p == 0.0).astype(jnp.int32)
+            else:  # hsq
+                def _fresh(p):
+                    return jnp.maximum(scn.x - p, 0.0).astype(jnp.int32)
+            if has_net:
+                tokens = jnp.where(delivered, _fresh(payload), tokens)
+            else:
+                tokens = jnp.where(trig, _fresh(true_occ), tokens)
+            token_sum = pull_state[2] + jnp.where(
+                act, jnp.sum(tokens, dtype=jnp.int32), 0
+            )
+            pull_state = (tokens, token_miss, token_sum)
 
         carry = (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
-                 rr_ptr, comp_slot, total_comp, dropped, net_state, faulted)
+                 rr_ptr, comp_slot, total_comp, dropped, net_state, faulted,
+                 pull_state)
         out = true_occ.astype(jnp.int32) if static.trace_occupancy else None
         return carry, out
 
@@ -1527,11 +1691,17 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         # chunk; metrics/counters are read off it after the last one.
         return final
     (q_len, _, _, _, rem, _, _, comm_state, _, comp_slot, total_comp,
-     dropped, net_state, _) = final
+     dropped, net_state, _, pull_state) = final
     final_occ = q_len + (rem > 0).sum(axis=1, dtype=jnp.int32)
     net_drops = net_state.drops if has_net else jnp.zeros((), jnp.int32)
+    token_miss = (
+        pull_state[1] if has_pull else jnp.zeros((), jnp.int32)
+    )
+    token_sum = (
+        pull_state[2] if has_pull else jnp.zeros((), jnp.int32)
+    )
     outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ,
-            net_drops)
+            net_drops, token_miss, token_sum)
     if static.trace_occupancy:
         outs = outs + (occ_trace,)
     return outs
@@ -1566,6 +1736,14 @@ def _engine_init(static: EngineStatic, n_cap: int):
         jnp.zeros((), jnp.int32),  # dropped
         net0,
         fault0,
+        # Pull-token pool + counters (None keeps the default structure).
+        (
+            jnp.zeros((r_n,), jnp.int32),  # tokens
+            jnp.zeros((), jnp.int32),  # token_miss (empty-pool routes)
+            jnp.zeros((), jnp.int32),  # token_sum (pool-occupancy integral)
+        )
+        if static.policy in PULL_POLICIES
+        else None,
     )
 
 
@@ -1637,11 +1815,14 @@ class ServeResult:
     p99_jct: float
     msgs_per_completion: float
     net_drops: int = 0  # messages lost in flight (network="net" only)
+    token_misses: int = 0  # pull routes that found an empty token pool
+    token_sum: int = 0  # end-of-slot token-pool occupancy, summed over slots
     occupancy: Optional[np.ndarray] = None  # (T, R) when trace_occupancy
 
     @staticmethod
     def from_run(wl: ServeWorkload, comp_slot, msgs, total_comp, dropped,
-                 final_occ, net_drops=0, occ_trace=None) -> "ServeResult":
+                 final_occ, net_drops=0, token_misses=0, token_sum=0,
+                 occ_trace=None) -> "ServeResult":
         comp_slot = np.asarray(comp_slot)[: wl.total].astype(np.int64)
         done = comp_slot >= 0
         jct_by_rid = np.where(done, comp_slot - wl.arrival_slot + 1, -1)
@@ -1660,6 +1841,8 @@ class ServeResult:
             p99_jct=float(np.percentile(jct, 99)) if jct.size else 0.0,
             msgs_per_completion=msgs / max(int(total_comp), 1),
             net_drops=int(net_drops),
+            token_misses=int(token_misses),
+            token_sum=int(token_sum),
             occupancy=None if occ_trace is None else np.asarray(occ_trace),
         )
 
@@ -2127,6 +2310,8 @@ class StreamResult:
     hist: np.ndarray  # (metrics.HIST_BUCKETS,) int64
     final_occupancy: np.ndarray  # (R,)
     state: StreamState
+    token_misses: int = 0  # pull routes that found an empty token pool
+    token_sum: int = 0  # end-of-slot token-pool occupancy over slots
 
     @property
     def msgs_per_slot(self) -> float:
@@ -2252,7 +2437,7 @@ def serve_stream(
     carry = jax.block_until_ready(carry)
 
     (q_len, _, _, _, rem, _, _, comm_state, _, sm, total_comp, dropped,
-     net_state, _) = carry
+     net_state, _, pull_state) = carry
     q_len_np = np.asarray(q_len)
     final_occ = q_len_np + (np.asarray(rem) > 0).sum(axis=1).astype(
         q_len_np.dtype
@@ -2276,4 +2461,6 @@ def serve_stream(
             carry=carry, t_next=t_end, offered=offered, a_pad=a_pad,
             sampler=sampler,
         ),
+        token_misses=int(pull_state[1]) if pull_state is not None else 0,
+        token_sum=int(pull_state[2]) if pull_state is not None else 0,
     )

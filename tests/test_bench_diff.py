@@ -45,6 +45,20 @@ class TestDiffRecords:
         regs, _ = diff_records(base, new)
         assert regs == []
 
+    def test_suffix_speedup_is_a_perf_field(self):
+        # Derived wall-clock ratios (stream tier's ``overlap_speedup``) are
+        # machine-dependent: skipped by default, one-sided (lower is worse)
+        # under --perf-rtol -- matching _perf_regressed's suffix rule.
+        base = [_row("a", overlap_speedup=1.42)]
+        new = [_row("a", overlap_speedup=1.51)]
+        regs, _ = diff_records(base, new)
+        assert regs == []
+        regs, _ = diff_records(base, new, perf_rtol=0.25)
+        assert regs == []  # an improvement never fails
+        new = [_row("a", overlap_speedup=0.9)]
+        regs, _ = diff_records(base, new, perf_rtol=0.25)
+        assert len(regs) == 1 and "overlap_speedup" in regs[0]
+
     def test_perf_one_sided_when_enabled(self):
         base = [_row("a", us_per_call=1.0, speedup=4.0)]
         # Faster + higher speedup: improvements never fail.

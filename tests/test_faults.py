@@ -27,10 +27,12 @@ Covers the tentpole contracts of the robustness layer:
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.care import comm as comm_lib
+from repro.core.care import routing as routing_lib
 from repro.core.care import slotted_sim as sim
 from repro.serve import engine
 
@@ -197,6 +199,17 @@ _MATRIX = [
     dict(policy="rr", network="net", net_delay=4),
     dict(comm="rt", network="net", net_delay=1, fault="crash",
          crash_rate=0.01, recover_rate=0.3),
+    dict(policy="rr", network="net", net_delay=4, suspect_age=8),
+    # Pull family: comm must equal the policy (the token channel).
+    dict(policy="jiq", comm="jiq"),
+    dict(policy="jiq", comm="jiq", network="net", net_delay=2,
+         net_jitter=1, net_drop=0.1, suspect_age=8),
+    dict(policy="jiq", comm="jiq", network="net", net_delay=1,
+         fault="crash", crash_rate=0.02, recover_rate=0.2, suspect_age=6),
+    dict(policy="hsq", comm="hsq", x=3.0),
+    dict(policy="hsq", comm="hsq", x=3.0, rt_period=32, network="net",
+         net_delay=3, net_drop=0.1, fault="crash", crash_rate=0.02,
+         recover_rate=0.2, suspect_age=10),
 ]
 
 
@@ -216,6 +229,8 @@ class TestServingParity:
         assert ref["messages"] == res.messages
         assert np.array_equal(ref["final_occupancy"], res.final_occupancy)
         assert ref["net_drops"] == res.net_drops
+        assert ref["token_misses"] == res.token_misses
+        assert ref["token_sum"] == res.token_sum
 
     @pytest.mark.slow
     def test_grid_matches_single_runs(self):
@@ -262,6 +277,8 @@ class TestStreamDegraded:
             assert res.messages == ref.messages
             assert res.net_drops == ref.net_drops
             assert res.dropped == ref.dropped
+            assert res.token_misses == ref.token_misses
+            assert res.token_sum == ref.token_sum
             np.testing.assert_array_equal(
                 res.final_occupancy, ref.final_occupancy
             )
@@ -385,6 +402,57 @@ class TestDegradedInvariants:
         # While replica 2 was down and suspect, traffic went elsewhere.
         assert hits and 2 not in hits[cfg.suspect_age + 1:]
 
+    # Every routing policy must honour the suspect mask -- including the
+    # fixed rr path (which used to ignore it) and the pull family (whose
+    # token pool composes with the mask like any other score).  SQ(d) is
+    # the one deliberate exception: an all-suspect sampled subset falls
+    # back to the raw sample, so its property is conditioned on the
+    # subset containing a healthy candidate.
+    _POLICY_SUSPECT = [
+        ("jsaq", "et", {}),
+        ("drain", "et",
+         dict(decode_rates=(1.0, 0.5, 1.0, 2.0, 1.0, 0.5))),
+        ("rr", "et", {}),
+        ("sqd", "et", dict(sqd=3)),
+        ("jiq", "jiq", {}),
+        ("hsq", "hsq", dict(rt_period=8)),
+    ]
+
+    @pytest.mark.parametrize("policy,comm,extra", _POLICY_SUSPECT)
+    def test_no_policy_routes_to_suspect_dead_server(
+        self, policy, comm, extra
+    ):
+        cfg = engine.EngineConfig(
+            num_replicas=6, decode_slots=3, comm=comm, et_x=2,
+            policy=policy, fault="crash", crash_rate=0.5,
+            recover_rate=0.5, suspect_age=4, **extra,
+        )
+        wl = _engineered_crash_workload(cfg, 200, 40, 160, target=2)
+        exercised = []
+
+        def per_route(disp, j):
+            suspect = disp.comm.slots_since_msg > cfg.suspect_age
+            if suspect.any() and not suspect.all():
+                exercised.append(j)
+                if cfg.policy == "sqd":
+                    sub = disp.last_subset
+                    if (sub & ~suspect).any():
+                        assert not suspect[j], (
+                            f"sqd routed to suspect {j} with healthy "
+                            f"candidates in the subset {sub}"
+                        )
+                else:
+                    assert not suspect[j], (
+                        f"{cfg.policy} routed to suspect replica {j}"
+                    )
+
+        _replay(cfg, wl, 200, per_route=per_route)
+        if policy != "jiq":
+            # jiq has no keepalive, so windows where *some but not all*
+            # replicas look fresh are not guaranteed; every push/RT-backed
+            # policy must have exercised the masked path.
+            assert exercised
+
     def test_resync_on_recovery_restores_approximation(self):
         # The recovery slot forces a resync send (RT keepalive retry
         # path): with instant delivery the dispatcher's view of the
@@ -406,6 +474,74 @@ class TestDegradedInvariants:
         assert errs[recover_at] == 0.0
         # And the ET bound holds again from the resync slot onwards.
         assert max(errs[t] for t in range(recover_at, 200)) < cfg.et_x
+
+
+# ---------------------------------------------------------------------------
+# Slotted routing layer: the candidate mask is honoured by every policy,
+# including the fixed rr and random paths (they used to ignore it).
+# ---------------------------------------------------------------------------
+
+
+class TestRoutingMasks:
+    def test_rr_skips_masked_servers_cyclically(self):
+        mask = jnp.array([True, False, False, True, True])
+        ptr = jnp.int32(1)
+        seq = []
+        for _ in range(6):
+            j, ptr = routing_lib.route_rr(ptr, 5, mask)
+            seq.append(int(j))
+        assert seq == [3, 4, 0, 3, 4, 0]
+
+    def test_rr_all_true_mask_matches_unmasked(self):
+        ptr_m = ptr_u = jnp.int32(0)
+        for _ in range(7):
+            jm, ptr_m = routing_lib.route_rr(ptr_m, 3, jnp.ones(3, bool))
+            ju, ptr_u = routing_lib.route_rr(ptr_u, 3, None)
+            assert int(jm) == int(ju)
+
+    def test_rr_all_false_mask_degrades_to_unmasked(self):
+        j, ptr = routing_lib.route_rr(jnp.int32(2), 4, jnp.zeros(4, bool))
+        assert (int(j), int(ptr)) == (2, 3)
+
+    def test_random_samples_only_eligible(self):
+        mask = jnp.array([False, True, False, True, False])
+        picks = {
+            int(routing_lib.route_random(5, jax.random.key(s), mask))
+            for s in range(40)
+        }
+        assert picks == {1, 3}
+
+    def test_random_all_true_mask_bit_identical_to_unmasked(self):
+        for s in range(20):
+            key = jax.random.key(s)
+            assert int(
+                routing_lib.route_random(6, key, jnp.ones(6, bool))
+            ) == int(routing_lib.route_random(6, key, None))
+
+    def test_random_all_false_mask_degrades_to_unmasked(self):
+        for s in range(10):
+            key = jax.random.key(s)
+            assert int(
+                routing_lib.route_random(4, key, jnp.zeros(4, bool))
+            ) == int(routing_lib.route_random(4, key, None))
+
+    def test_route_dispatch_threads_mask_for_every_policy(self):
+        q = jnp.array([3, 1, 2, 5], jnp.int32)
+        mask = jnp.array([False, False, True, True])
+        key = jax.random.key(0)
+        tokens = jnp.array([2, 9, 4, 1], jnp.int32)
+        for policy in ("jsq", "jsaq", "sq2", "sqd", "rr", "random",
+                       "jiq", "hsq"):
+            j, _ = routing_lib.route(
+                policy, q, q, jnp.int32(0), key, mask=mask, tokens=tokens,
+            )
+            assert int(j) in (2, 3), policy
+        # Pull routing joins the most-token server; the mask excludes the
+        # global maximum (server 1), so server 2 wins.
+        j, _ = routing_lib.route(
+            "jiq", q, q, jnp.int32(0), key, mask=mask, tokens=tokens,
+        )
+        assert int(j) == 2
 
 
 # ---------------------------------------------------------------------------
@@ -444,6 +580,30 @@ class TestValidation:
     def test_slotted_rejects_named_field(self, knobs, field):
         cfg = sim.SimConfig(servers=4, slots=100, **knobs)
         with pytest.raises(ValueError, match=field):
+            sim.simulate(jax.random.PRNGKey(0), cfg)
+
+    @pytest.mark.parametrize("knobs,match", [
+        (dict(policy="jiq", comm="et"), "requires comm='jiq'"),
+        (dict(policy="jiq", comm="exact"), "comm='exact'"),
+        (dict(policy="hsq", comm="et_rt"), "requires comm='hsq'"),
+        (dict(comm="hsq"), "token channel"),  # default push policy
+        (dict(policy="hsq", comm="hsq", rt_period=-4), "token_refresh"),
+    ])
+    def test_serving_rejects_invalid_pull_pairing(self, knobs, match):
+        cell = engine.ServeConfig(replicas=4, decode_slots=2, slots=50,
+                                  **knobs)
+        with pytest.raises(ValueError, match=match):
+            cell.static_part()
+
+    @pytest.mark.parametrize("knobs,match", [
+        (dict(policy="jiq", comm="et"), "requires comm='jiq'"),
+        (dict(policy="hsq", comm="exact"), "comm='exact'"),
+        (dict(comm="jiq"), "token channel"),
+        (dict(policy="hsq", comm="hsq", rt_rate=-0.5), "token_refresh"),
+    ])
+    def test_slotted_rejects_invalid_pull_pairing(self, knobs, match):
+        cfg = sim.SimConfig(servers=4, slots=100, **knobs)
+        with pytest.raises(ValueError, match=match):
             sim.simulate(jax.random.PRNGKey(0), cfg)
 
     def test_exact_comm_cannot_compose_with_network(self):

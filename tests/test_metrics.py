@@ -146,3 +146,56 @@ def test_stream_summary_empty_and_roundtrip():
     )
     assert s["count"] == 4 and s["mean"] == 25.0 and s["max"] == 40
     assert abs(s["std"] - samples.std()) < 1e-6
+
+
+def test_stream_summary_single_bucket_clamps_to_max():
+    # Every sample in one bucket: interpolation inside the bucket would
+    # overshoot the sample maximum, so the clamp must pin every quantile
+    # at (or below) the tracked exact max -- never above it.
+    samples = np.full(50, 17, np.int64)
+    hist = np.bincount(metrics.jct_bucket(samples),
+                       minlength=metrics.HIST_BUCKETS)
+    s = metrics.stream_summary(
+        samples.size, 17.0, 0.0, 17, hist,
+    )
+    for k in ("p50", "p90", "p99", "p999"):
+        assert 16.0 <= s[k] <= 17.0, (k, s[k])
+    assert s["max"] == 17 and s["std"] == 0.0
+
+
+def test_stream_summary_single_sample_is_finite():
+    hist = np.bincount(metrics.jct_bucket(np.asarray([5])),
+                       minlength=metrics.HIST_BUCKETS)
+    s = metrics.stream_summary(1, 5.0, 0.0, 5, hist)
+    assert s["count"] == 1
+    assert all(np.isfinite(v) for v in s.values())
+    assert s["p999"] <= 5.0
+
+
+def test_token_summary_empty_window_is_finite_zeros():
+    # The pull-token counters' analogue of the jct_summary contract: an
+    # empty window (no slots run, no jobs routed) yields finite zeros
+    # with a count field, so aggregation never divides by zero.
+    s = metrics.token_summary(0, 0, 0, 0)
+    assert s == {"count": 0, "mean_tokens": 0.0, "miss_rate": 0.0,
+                 "hit_rate": 0.0}
+    assert all(np.isfinite(v) for v in s.values())
+
+
+def test_token_summary_partial_windows():
+    # Slots ran but nothing was routed (zero-arrival window): pool
+    # occupancy is defined, the rate fields stay finite zeros.
+    s = metrics.token_summary(30, 0, 10, 0)
+    assert s["count"] == 0 and s["mean_tokens"] == 3.0
+    assert s["miss_rate"] == 0.0 and s["hit_rate"] == 0.0
+    # Routed jobs but a zero-slot window (degenerate caller) stays finite.
+    s = metrics.token_summary(0, 2, 0, 8)
+    assert s["count"] == 8 and s["mean_tokens"] == 0.0
+    assert s["miss_rate"] == 0.25 and s["hit_rate"] == 0.75
+
+
+def test_token_summary_rates():
+    s = metrics.token_summary(120, 25, 60, 100)
+    assert s["count"] == 100
+    assert s["mean_tokens"] == 2.0
+    assert s["miss_rate"] == 0.25 and s["hit_rate"] == 0.75

@@ -508,6 +508,149 @@ class TestSubsetMask:
         )
 
 
+class TestSqdSuspectFallback:
+    """SQ(d) x suspect masking: the sampled subset intersected with the
+    healthy set can be empty (every sampled replica is suspect) -- the
+    router must then fall back to the *raw sampled subset*, never to the
+    full replica set (which would silently change the d-choices physics)
+    and never produce the -1 empty-mask sentinel."""
+
+    def _dispatcher(self, suspect: np.ndarray) -> engine.CareDispatcher:
+        cfg = engine.EngineConfig(
+            num_replicas=6, decode_slots=2, policy="sqd", sqd=2,
+            comm="et", suspect_age=4, fault="crash", crash_rate=0.01,
+            recover_rate=0.1,
+        )
+        disp = engine.CareDispatcher(cfg)
+        # Age the suspect replicas past the staleness bound through the
+        # trigger clock (the no-network staleness source in route()).
+        disp.comm = dataclasses.replace(
+            disp.comm,
+            slots_since_msg=np.where(suspect, 9, 0).astype(np.int32),
+        )
+        return disp
+
+    def test_all_suspect_subset_falls_back_to_raw_sample(self):
+        # sub_u = 0 samples the subset {0, 1} (see test_boundary_uniforms);
+        # both are suspect, so mask & healthy is all-False and the route
+        # must still land inside {0, 1}.
+        disp = self._dispatcher(
+            np.array([True, True, False, False, False, False])
+        )
+        lo = np.zeros(engine.SQD_MAX, np.float32)
+        j = disp.route(
+            engine.Request(rid=0, arrival=0, prefill_cost=1, decode_len=1),
+            now=0, u=np.float32(0.0), sub_u=lo,
+        )
+        assert j in (0, 1)
+        np.testing.assert_array_equal(
+            disp.last_subset,
+            [True, True, False, False, False, False],
+        )
+
+    def test_partial_overlap_excludes_suspect_member(self):
+        # Subset {0, 1} with only replica 0 suspect: the intersection is
+        # {1}, so every tie-break uniform must pick 1.
+        for u in (0.0, 0.5, 0.999):
+            disp = self._dispatcher(
+                np.array([True, False, False, False, False, False])
+            )
+            lo = np.zeros(engine.SQD_MAX, np.float32)
+            j = disp.route(
+                engine.Request(
+                    rid=0, arrival=0, prefill_cost=1, decode_len=1
+                ),
+                now=0, u=np.float32(u), sub_u=lo,
+            )
+            assert j == 1
+
+    def test_traced_engine_matches_under_aggressive_suspicion(self):
+        # suspect_age=1 under a delayed network keeps most replicas
+        # suspect most slots, so the all-suspect-subset fallback fires
+        # constantly -- the jax lane must still replay the numpy
+        # reference bit for bit.
+        cell = small_cell(
+            "et", policy="sqd", sqd=2, slots=600, network="net",
+            net_delay=3, suspect_age=1,
+        )
+        ref = run_reference(cell, 7)
+        res = engine.serve_one(7, cell)
+        assert res.messages == ref["messages"]
+        assert res.completed == ref["completed"]
+        np.testing.assert_array_equal(res.jct_by_rid, ref["jct_by_rid"])
+        np.testing.assert_array_equal(
+            res.final_occupancy, ref["final_occupancy"]
+        )
+
+
+# Fingerprints of the pull family at seed 7 on small_cell: (offered,
+# completed, messages, jct_sum, final_occupancy_sum, token_misses,
+# token_sum).  At load 0.9 replicas are almost never idle, so JIQ sends
+# nearly no tokens (5 messages over 2000 slots) and degrades to the
+# uniform fallback -- exactly the regime van der Boor et al. describe;
+# hsq's threshold crossings + rt_period keepalive restore a usable pool.
+PULL_GOLDEN = {
+    "jiq": (3247, 3109, 5, 185837, 138, 3242, 7),
+    "hsq": (3247, 3130, 570, 155311, 117, 3127, 164),
+}
+
+
+class TestPullPolicies:
+    """JIQ / hyper-scalable JSQ on the serving tier: numpy goldens, jax
+    bit-identity (token counters included), and the <= 1 message/job
+    communication bound that motivates the pull family."""
+
+    @pytest.mark.parametrize("policy", ["jiq", "hsq"])
+    def test_numpy_golden(self, policy):
+        extra = dict(x=3) if policy == "hsq" else {}
+        ref = run_reference(small_cell(policy, policy=policy, **extra), 7)
+        (offered, completed, msgs, jct_sum, occ_sum, misses,
+         tok_sum) = PULL_GOLDEN[policy]
+        assert ref["offered"] == offered
+        assert ref["completed"] == completed
+        assert ref["messages"] == msgs
+        assert int(ref["jct"].sum()) == jct_sum
+        assert int(ref["final_occupancy"].sum()) == occ_sum
+        assert ref["token_misses"] == misses
+        assert ref["token_sum"] == tok_sum
+
+    @pytest.mark.parametrize("policy", ["jiq", "hsq"])
+    def test_jax_matches_numpy_bitwise(self, policy):
+        extra = dict(x=3) if policy == "hsq" else {}
+        cell = small_cell(policy, policy=policy, **extra)
+        ref = run_reference(cell, 7, checkpoints=(600, 1999))
+        res = engine.serve_one(7, cell, trace_occupancy=True)
+        assert res.messages == ref["messages"]
+        assert res.completed == ref["completed"]
+        assert res.token_misses == ref["token_misses"]
+        assert res.token_sum == ref["token_sum"]
+        np.testing.assert_array_equal(res.jct_by_rid, ref["jct_by_rid"])
+        np.testing.assert_array_equal(
+            res.final_occupancy, ref["final_occupancy"]
+        )
+        for slot, occ in ref["occupancy"].items():
+            np.testing.assert_array_equal(res.occupancy[slot], occ)
+
+    @pytest.mark.parametrize("policy", ["jiq", "hsq"])
+    def test_pull_messages_at_most_one_per_job(self, policy):
+        # The pull family's defining bound: a token is only ever sent on
+        # an idleness/threshold transition, at most one per completed job
+        # (plus the rt_period keepalive for hsq, still within the bound
+        # at these horizons).
+        extra = dict(x=3) if policy == "hsq" else {}
+        ref = run_reference(small_cell(policy, policy=policy, **extra), 7)
+        assert ref["messages"] <= ref["completed"]
+
+    def test_workload_shared_with_push_policies(self):
+        # The pull cells replay the identical arrival/work stream the push
+        # matrix uses -- the controlled-comparison invariant extends to
+        # the new policy kinds.
+        wa = engine.workload_for(small_cell("et"), 3)
+        wb = engine.workload_for(small_cell("jiq", policy="jiq"), 3)
+        np.testing.assert_array_equal(wa.n_arr, wb.n_arr)
+        np.testing.assert_array_equal(wa.tie_u, wb.tie_u)
+
+
 # ---------------------------------------------------------------------------
 # Segment engine (serve_stream): chunk-invariance goldens.
 # ---------------------------------------------------------------------------
