@@ -48,6 +48,8 @@ The mapping to paper artifacts:
   bench_faults          -> beyond-paper: degraded networks + server faults
   bench_pull            -> beyond-paper: pull policies (JIQ / hyper-
                            scalable JSQ) vs CARE push on one frontier
+  bench_retrans         -> beyond-paper: reliable (ack'd) control-plane
+                           transport vs fire-and-forget under loss
   bench_roofline        -> Sec Roofline deliverable  (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -84,6 +86,7 @@ BENCHES = [
     "bench_route",
     "bench_faults",
     "bench_pull",
+    "bench_retrans",
     "bench_roofline",
 ]
 

@@ -73,6 +73,15 @@ PULL_KINDS = ("jiq", "hsq")
 # through the traced delay/jitter/drop model of :func:`net_step`.
 NetworkKind = Literal["none", "net"]
 
+# Control-plane transport kinds under ``network="net"``: "fire_forget" is
+# the historical one-shot wire (a dropped message is gone; recovery relies
+# on the trigger re-firing), "ack" is the reliable transport of
+# :func:`net_step_ack` (per-send timeout window, exponential backoff,
+# fresh-snapshot retransmit, abandonment after ``max_retries``).  A static
+# kind: it selects the step function and the carry dataclass at trace
+# time, so "fire_forget" programs carry no ack state at all.
+TransportKind = Literal["fire_forget", "ack"]
+
 
 @dataclasses.dataclass(frozen=True)
 class CommConfig:
@@ -269,18 +278,35 @@ class NetworkConfig:
     * ``jitter`` -- additional uniform integer delay in ``[0, jitter]``,
       sampled i.i.d. per message.
     * ``drop`` -- i.i.d. probability a sent message is lost in flight.  A
-      lost message still costs one message on the wire; no ack exists, so
-      recovery relies on the trigger re-firing (ET re-arms as error keeps
-      growing; RT/et_rt re-fires after ``rt_period`` slots).
+      lost message still costs one message on the wire; under
+      ``transport="fire_forget"`` no ack exists, so recovery relies on the
+      trigger re-firing (ET re-arms as error keeps growing; RT/et_rt
+      re-fires after ``rt_period`` slots).
 
-    All three may be Python numbers or traced scalars, so a delay x drop
-    ladder shares one compiled program.
+    ``transport`` selects the wire semantics (a *static* kind, like
+    ``kind``): ``"fire_forget"`` is the historical one-shot path above;
+    ``"ack"`` runs :func:`net_step_ack`, where every data send opens a
+    timeout window of ``ack_timeout`` slots (growing by ``backoff_base``
+    per retry), an unacked message retransmits a *fresh* snapshot at
+    expiry, and after ``max_retries`` retransmits the update is abandoned
+    and the server marks itself suspect (``AckNetState.gave_up``).  Acks
+    and the optional server keepalives (every ``ka_period`` slots) ride
+    the same delay/jitter/drop wire and are billed as real messages.
+
+    All numeric operands may be Python numbers or traced scalars, so a
+    delay x drop x timeout ladder shares one compiled program.
     """
 
     kind: NetworkKind = "none"
     delay: Any = 0
     jitter: Any = 0
     drop: Any = 0.0
+    transport: TransportKind = "fire_forget"
+    # Reliable-transport operands (traced; neutral under "fire_forget").
+    ack_timeout: Any = 0  # slots a sender waits for an ack (>= 1 under "ack")
+    backoff_base: Any = 1.0  # timeout multiplier per retransmit (>= 1)
+    max_retries: Any = 0  # retransmits before the update is abandoned
+    ka_period: Any = 0  # server keepalive period in slots (0 = none)
 
 
 @jax.tree_util.register_dataclass
@@ -326,6 +352,7 @@ def net_step(
     drop_u,
     jit_u,
     xp=jnp,
+    can_send=None,
 ) -> Tuple[Any, Any, Any, NetState]:
     """Advance the network by one slot: send, fly, drop, deliver, piggyback.
 
@@ -357,6 +384,12 @@ def net_step(
       drop_u: ``(K,)`` f32 i.i.d. uniforms for the drop draw.
       jit_u: ``(K,)`` f32 i.i.d. uniforms for the jitter draw.
       xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.
+      can_send: optional ``(K,)`` bool -- servers able to put a message on
+        the wire this slot (crash-fault callers pass ``~faulted``).  A
+        ``False`` server neither sends nor *keeps* a queued piggyback: its
+        pre-crash ``pending`` snapshot intent is wiped, because the state
+        it described died with the crash -- the forced recovery resync
+        (a fresh snapshot) is the only correct re-entry message.
 
     Returns:
       ``(delivered, out_payload, sent, state')``: ``delivered`` is the
@@ -370,9 +403,16 @@ def net_step(
     free = ~in_flight | due
 
     send = (triggered | state.pending) & free
+    if can_send is not None:
+        send = send & can_send
     # Triggers arriving while the channel is busy queue up for piggybacking;
     # a send clears the queue (the fresh snapshot covers everything queued).
     pending = (state.pending | triggered) & ~send
+    if can_send is not None:
+        # A crashed server's queued piggyback describes pre-crash state;
+        # it must not fire at the next free slot ahead of the recovery
+        # resync, so the crash wipes it.
+        pending = pending & can_send
 
     lost = send & (drop_u < cfg.drop)
     # f32 jitter draw: u in [0,1) so floor(u * (jitter+1)) <= jitter.
@@ -409,11 +449,294 @@ def net_step(
     )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AckNetState:
+    """Reliable-transport wire state, shape ``(K,)`` (+ scalar totals).
+
+    The ``transport="ack"`` counterpart of :class:`NetState` -- a separate
+    dataclass so fire-and-forget programs carry none of this structure.
+    Three single-slot channels exist per server (supersede semantics: a
+    newer message on a channel replaces an older one still in flight --
+    under the retransmit protocol the newer snapshot strictly dominates):
+
+    * data (server -> balancer): ``timer`` / ``payload`` / ``pending``
+      exactly as in :class:`NetState`;
+    * ack (balancer -> server): ``ack_timer``, one ack per data delivery;
+    * keepalive (server -> balancer): ``ka_timer``, fired every
+      ``ka_period`` slots (``ka_since`` is the sender-side clock).
+
+    ``awaiting`` counts down the open timeout window of the latest data
+    transmission (``-1`` = nothing awaited), ``backoff`` is the current
+    window length on the exponential ladder (f32 so the traced base
+    multiplies exactly the same way under numpy and jax -- no ``pow``,
+    whose libm/XLA implementations could disagree bit-wise), ``retries``
+    the retransmits spent on the awaited update, and ``gave_up`` marks a
+    server that abandoned after ``max_retries`` -- a *self-suspect* that
+    stays masked until some later transmission is acked.  ``ka_age`` is
+    the balancer's last-heard clock (reset by any data *or* keepalive
+    delivery) that keepalive-driven suspect masking reads; ``age`` remains
+    the data-staleness clock.  ``drops`` totals losses across all three
+    channels; ``retrans`` totals retransmitted data messages.
+    """
+
+    timer: Any  # (K,) int32 data in flight, -1 = idle
+    payload: Any  # (K,) snapshot in flight (payload dtype is tier-specific)
+    pending: Any  # (K,) bool, queued trigger to piggyback
+    awaiting: Any  # (K,) int32 slots left in the timeout window, -1 = none
+    backoff: Any  # (K,) f32 current timeout-window length (slots)
+    retries: Any  # (K,) int32 retransmits spent on the awaited update
+    ack_timer: Any  # (K,) int32 ack in flight, -1 = idle
+    gave_up: Any  # (K,) bool abandoned after max_retries (self-suspect)
+    ka_timer: Any  # (K,) int32 keepalive in flight, -1 = idle
+    ka_since: Any  # (K,) int32 slots since last keepalive send
+    ka_age: Any  # (K,) int32 balancer slots since last heard (data or ka)
+    age: Any  # (K,) int32 slots since last delivered data update
+    drops: Any  # () int32 total messages lost (data + ack + keepalive)
+    retrans: Any  # () int32 total data retransmits
+
+    @staticmethod
+    def init(k: int, xp=jnp, payload_dtype=None) -> "AckNetState":
+        dtype = payload_dtype if payload_dtype is not None else xp.int32
+        return AckNetState(
+            timer=xp.full((k,), -1, xp.int32),
+            payload=xp.zeros((k,), dtype),
+            pending=xp.zeros((k,), bool),
+            awaiting=xp.full((k,), -1, xp.int32),
+            backoff=xp.zeros((k,), xp.float32),
+            retries=xp.zeros((k,), xp.int32),
+            ack_timer=xp.full((k,), -1, xp.int32),
+            gave_up=xp.zeros((k,), bool),
+            ka_timer=xp.full((k,), -1, xp.int32),
+            ka_since=xp.zeros((k,), xp.int32),
+            ka_age=xp.zeros((k,), xp.int32),
+            age=xp.zeros((k,), xp.int32),
+            drops=xp.zeros((), xp.int32),
+            retrans=xp.zeros((), xp.int32),
+        )
+
+
+def net_step_ack(
+    state: AckNetState,
+    cfg: NetworkConfig,
+    triggered,
+    payload_now,
+    drop_u,
+    jit_u,
+    ack_u,
+    xp=jnp,
+    can_send=None,
+) -> Tuple[Any, Any, Any, AckNetState]:
+    """Advance the reliable (ack'd) transport by one slot.
+
+    The ``transport="ack"`` counterpart of :func:`net_step`, written
+    against the same shared numpy/jax namespace so both engine backends
+    share one delivery semantics bit-for-bit.  Per-slot order:
+
+    1. due traffic arrives: data at the balancer, acks and keepalives at
+       their receivers;
+    2. an arriving ack closes the sender's timeout window; a window that
+       expires *un*-acked either retransmits -- a **fresh**
+       ``payload_now`` snapshot, never the stale in-flight payload; by
+       then the state it described is history -- or, once ``retries``
+       reaches ``max_retries``, abandons the update and marks the server
+       ``gave_up`` (self-suspect, cleared by the next successful ack);
+    3. a free server (no open window, or one just closed) sends on a
+       trigger or queued piggyback; every send (re- or new) opens a
+       timeout window of ``backoff`` slots -- ``ack_timeout`` on a new
+       send, multiplied by ``backoff_base`` (clamped at ``2^30``) per
+       retransmit;
+    4. data rides the wire exactly as in :func:`net_step` (drop, then
+       ``delay + U{0..jitter}``; zero total delay delivers this slot);
+    5. the balancer acks every delivery; acks ride the *same* wire with
+       their own drop/jitter draws and are billed as messages -- the
+       protocol's overhead must show on the message axis it is meant to
+       protect;
+    6. every ``ka_period`` slots a server fires a keepalive (same wire,
+       also billed); any data or keepalive delivery resets the balancer's
+       ``ka_age`` clock for that server.
+
+    Args:
+      state: current :class:`AckNetState`.
+      cfg: :class:`NetworkConfig` with ``kind="net"``,
+        ``transport="ack"``.
+      triggered: ``(K,)`` bool trigger intents from :func:`evaluate`.
+      payload_now: ``(K,)`` current true state to snapshot on send.
+      drop_u / jit_u: ``(K,)`` f32 uniforms for the data-channel draws.
+      ack_u: ``(4, K)`` f32 uniforms for the ack and keepalive channels,
+        rows ``(ack drop, ack jitter, ka drop, ka jitter)``.
+      xp: array namespace -- ``jax.numpy`` (default) or ``numpy``.
+      can_send: optional ``(K,)`` bool; as in :func:`net_step`, a
+        ``False`` server sends nothing (no new send, no retransmit, no
+        keepalive), its queued ``pending`` is wiped, and an expired
+        timeout window holds at zero until the server can act again.
+
+    Returns:
+      ``(delivered, out_payload, sent, state')`` exactly as
+      :func:`net_step`; ``sent`` bills data sends, acks and keepalives.
+    """
+    # 1. due arrivals on the three channels.
+    in_flight = state.timer >= 0
+    due = in_flight & (state.timer == 0)
+    ack_arr = (state.ack_timer >= 0) & (state.ack_timer == 0)
+    ka_due = (state.ka_timer >= 0) & (state.ka_timer == 0)
+
+    # 2. timeout bookkeeping: expiry -> retransmit or abandon.
+    awaiting = state.awaiting >= 0
+    expired = awaiting & ~ack_arr & (state.awaiting == 0)
+    if can_send is not None:
+        expired = expired & can_send
+    abandon = expired & (state.retries >= xp.asarray(cfg.max_retries, xp.int32))
+    retrans_now = expired & ~abandon
+
+    # 3. sends: new triggers need a free window; retransmits reuse theirs.
+    free = ~awaiting | ack_arr | abandon
+    trig_all = triggered | state.pending
+    if can_send is not None:
+        trig_all = trig_all & can_send
+    send_new = trig_all & free
+    send = send_new | retrans_now
+    pending = (state.pending | triggered) & ~send
+    if can_send is not None:
+        pending = pending & can_send
+
+    # 4. data wire (identical draws and instant-delivery rule to net_step;
+    # a send while an older message is still flying supersedes it).
+    lost = send & (drop_u < cfg.drop)
+    extra = (jit_u * xp.asarray(cfg.jitter + 1, xp.float32)).astype(xp.int32)
+    total_delay = xp.asarray(cfg.delay, xp.int32) + extra
+    enq = send & ~lost
+    instant = enq & (total_delay == 0)
+    flying = enq & (total_delay > 0)
+    delivered = due | instant
+    out_payload = xp.where(instant, payload_now, state.payload)
+    stored = xp.where(flying | instant, payload_now, state.payload)
+    timer = xp.where(
+        flying,
+        total_delay - 1,
+        xp.where(
+            send, -1, xp.where(in_flight & ~due, state.timer - 1, -1)
+        ),
+    ).astype(xp.int32)
+
+    # 5. ack wire: one ack per delivery, own drop/jitter draws.
+    ack_lost = delivered & (ack_u[0] < cfg.drop)
+    ack_extra = (
+        ack_u[1] * xp.asarray(cfg.jitter + 1, xp.float32)
+    ).astype(xp.int32)
+    ack_delay = xp.asarray(cfg.delay, xp.int32) + ack_extra
+    ack_enq = delivered & ~ack_lost
+    ack_instant = ack_enq & (ack_delay == 0)
+    ack_flying = ack_enq & (ack_delay > 0)
+    ack_timer = xp.where(
+        ack_flying,
+        ack_delay - 1,
+        xp.where(
+            delivered,
+            -1,
+            xp.where(
+                (state.ack_timer >= 0) & ~ack_arr, state.ack_timer - 1, -1
+            ),
+        ),
+    ).astype(xp.int32)
+    acked = ack_arr | ack_instant
+
+    # Timeout window for this slot's sends: the backoff ladder multiplies
+    # (f32-exact under both namespaces); the i32 window is >= 1 slot.
+    grown = xp.minimum(
+        state.backoff * xp.asarray(cfg.backoff_base, xp.float32),
+        xp.asarray(2.0**30, xp.float32),
+    )
+    backoff = xp.where(
+        send_new,
+        xp.asarray(cfg.ack_timeout, xp.float32),
+        xp.where(retrans_now, grown, state.backoff),
+    ).astype(xp.float32)
+    window = xp.maximum(backoff.astype(xp.int32), 1)
+    # A send whose data *and* ack both arrive this slot (the zero-delay
+    # wire) completes its round trip immediately: no window stays open.
+    rt_done = send & instant & ack_instant
+    await_t = xp.where(
+        send,
+        xp.where(rt_done, -1, window - 1),
+        xp.where(
+            awaiting & ~acked & ~abandon,
+            # maximum() holds an expired-but-unactionable window (crashed
+            # sender) at zero so it fires on the first healthy slot.
+            xp.maximum(state.awaiting - 1, 0),
+            -1,
+        ),
+    ).astype(xp.int32)
+    retries = xp.where(
+        send_new,
+        0,
+        xp.where(
+            retrans_now,
+            state.retries + 1,
+            xp.where(acked, 0, state.retries),
+        ),
+    ).astype(xp.int32)
+    gave_up = (state.gave_up | abandon) & ~acked
+
+    # 6. keepalives: fired by the server clock, same wire, billed.
+    ka_p = xp.asarray(cfg.ka_period, xp.int32)
+    ka_since = state.ka_since + 1
+    ka_fire = (ka_p > 0) & (ka_since >= ka_p)
+    if can_send is not None:
+        ka_fire = ka_fire & can_send
+    ka_lost = ka_fire & (ack_u[2] < cfg.drop)
+    ka_extra = (
+        ack_u[3] * xp.asarray(cfg.jitter + 1, xp.float32)
+    ).astype(xp.int32)
+    ka_delay = xp.asarray(cfg.delay, xp.int32) + ka_extra
+    ka_enq = ka_fire & ~ka_lost
+    ka_instant = ka_enq & (ka_delay == 0)
+    ka_flying = ka_enq & (ka_delay > 0)
+    ka_deliv = ka_due | ka_instant
+    ka_timer = xp.where(
+        ka_flying,
+        ka_delay - 1,
+        xp.where(
+            ka_fire,
+            -1,
+            xp.where((state.ka_timer >= 0) & ~ka_due, state.ka_timer - 1, -1),
+        ),
+    ).astype(xp.int32)
+
+    sent = (
+        xp.sum(send, dtype=xp.int32)
+        + xp.sum(delivered, dtype=xp.int32)  # acks: one per delivery
+        + xp.sum(ka_fire, dtype=xp.int32)
+    )
+    return delivered, out_payload, sent, AckNetState(
+        timer=timer,
+        payload=stored,
+        pending=pending,
+        awaiting=await_t,
+        backoff=backoff,
+        retries=retries,
+        ack_timer=ack_timer,
+        gave_up=gave_up,
+        ka_timer=ka_timer,
+        ka_since=xp.where(ka_fire, 0, ka_since).astype(xp.int32),
+        ka_age=xp.where(delivered | ka_deliv, 0, state.ka_age + 1).astype(
+            xp.int32
+        ),
+        age=xp.where(delivered, 0, state.age + 1).astype(xp.int32),
+        drops=state.drops
+        + xp.sum(lost, dtype=xp.int32)
+        + xp.sum(ack_lost, dtype=xp.int32)
+        + xp.sum(ka_lost, dtype=xp.int32),
+        retrans=state.retrans + xp.sum(retrans_now, dtype=xp.int32),
+    )
+
+
 def control_plane_init(
     k: int,
     *,
     network: str = "none",
     fault: str = "none",
+    transport: str = "fire_forget",
     xp=jnp,
     payload_dtype=None,
 ):
@@ -422,17 +745,20 @@ def control_plane_init(
     The single constructor every tier's scan/stream carry goes through:
     returns ``(comm, net, faulted)`` where ``net`` / ``faulted`` are
     ``None`` (an empty pytree subtree) when the corresponding kind is off,
-    so the default program structure is unchanged.  The streaming serving
-    engine initialises its chunk carry here and a future live arrival feed
-    resumes from the same triple via :func:`snapshot_state` /
-    :func:`restore_state`.
+    so the default program structure is unchanged.  Under
+    ``transport="ack"`` the wire state is an :class:`AckNetState`; the
+    default "fire_forget" keeps the historical :class:`NetState`
+    structure.  The streaming serving engine initialises its chunk carry
+    here and a future live arrival feed resumes from the same triple via
+    :func:`snapshot_state` / :func:`restore_state`.
     """
     comm = CommState.init(k, xp=xp)
-    net = (
-        NetState.init(k, xp=xp, payload_dtype=payload_dtype)
-        if network != "none"
-        else None
-    )
+    if network == "none":
+        net = None
+    elif transport == "ack":
+        net = AckNetState.init(k, xp=xp, payload_dtype=payload_dtype)
+    else:
+        net = NetState.init(k, xp=xp, payload_dtype=payload_dtype)
     faulted = xp.zeros((k,), bool) if fault != "none" else None
     return comm, net, faulted
 
@@ -441,13 +767,28 @@ def snapshot_state(tree):
     """Host-side numpy copy of a control-plane (or whole-engine) carry.
 
     The persistence half of the resume seam: a carry pytree -- any nesting
-    of :class:`CommState` / :class:`NetState` / plain arrays -- becomes
-    concrete ``numpy`` arrays safe to hold across jit calls, pickle to
-    disk, or hand to a host-side dispatcher between stream segments.
+    of :class:`CommState` / :class:`NetState` / :class:`AckNetState` /
+    plain arrays -- becomes concrete ``numpy`` arrays safe to hold across
+    jit calls, pickle to disk, or hand to a host-side dispatcher between
+    stream segments.
+
+    Scalar int32 counters (``CommState.msgs``, ``NetState.drops``,
+    ``AckNetState.retrans``, the engine's completion totals, ...) are
+    promoted to **int64** on the way out: a multi-segment soak aggregates
+    host-side from these snapshots, and at 1e7-slot horizons with
+    several messages per slot an int32 total wraps.  The promotion is
+    reversed by :func:`restore_state`, so the on-device carry structure
+    is untouched.
     """
     import numpy as np
 
-    return jax.tree.map(lambda a: np.asarray(a), tree)
+    def cvt(a):
+        a = np.asarray(a)
+        if a.ndim == 0 and a.dtype == np.int32:
+            return a.astype(np.int64)
+        return a
+
+    return jax.tree.map(cvt, tree)
 
 
 def restore_state(tree, xp=jnp):
@@ -456,10 +797,21 @@ def restore_state(tree, xp=jnp):
     ``xp=jnp`` places the arrays back on device for the jitted scans;
     ``xp=np`` yields the numpy view the host-side ``CareDispatcher``
     mirrors consume.  Structure (including ``None`` subtrees for disabled
-    kinds) is preserved, so the restored carry drops straight back into
-    the compiled chunk step that produced it.
+    kinds) is preserved -- scalar int64 counters are narrowed back to the
+    int32 the compiled carries declare (values above int32 range saturate
+    rather than wrap, keeping the on-device counter monotone) -- so the
+    restored carry drops straight back into the compiled chunk step that
+    produced it.
     """
-    return jax.tree.map(lambda a: xp.asarray(a), tree)
+    import numpy as np
+
+    def cvt(a):
+        a = np.asarray(a)
+        if a.ndim == 0 and a.dtype == np.int64:
+            a = np.int32(min(int(a), np.iinfo(np.int32).max))
+        return xp.asarray(a)
+
+    return jax.tree.map(cvt, tree)
 
 
 def validate_control_plane(
@@ -473,6 +825,11 @@ def validate_control_plane(
     crash_rate: float = 0.0,
     recover_rate: float = 0.0,
     slow_factor: float = 1.0,
+    transport: str = "fire_forget",
+    ack_timeout: float = 0,
+    backoff_base: float = 1.0,
+    max_retries: float = 0,
+    ka_period: float = 0,
     policy: str = None,
     comm: str = None,
     token_refresh: float = None,
@@ -553,6 +910,53 @@ def validate_control_plane(
                 raise ValueError(
                     f"{field}={val} has no effect with network='none';"
                     " set network='net' to model the control plane"
+                )
+    if transport not in ("fire_forget", "ack"):
+        raise ValueError(
+            f"unknown transport kind: {transport!r} (expected"
+            " 'fire_forget' or 'ack')"
+        )
+    if transport == "ack":
+        if network == "none":
+            raise ValueError(
+                "transport='ack' needs network='net' -- with"
+                " network='none' delivery is instant and lossless, so"
+                " there is nothing to acknowledge"
+            )
+        if ack_timeout < 1:
+            raise ValueError(
+                f"ack_timeout must be >= 1 slot under transport='ack'"
+                f" (a sender must wait at least one slot for its ack;"
+                f" 0 would retransmit every slot forever), got"
+                f" {ack_timeout}"
+            )
+        if backoff_base < 1:
+            raise ValueError(
+                f"backoff_base must be >= 1 (the timeout window may only"
+                f" grow across retries), got {backoff_base}"
+            )
+        if max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0 (0 abandons after the first"
+                f" unacked window), got {max_retries}"
+            )
+        if ka_period < 0:
+            raise ValueError(
+                f"ka_period must be >= 0 slots (0 disables keepalives),"
+                f" got {ka_period}"
+            )
+    else:
+        for field, val, neutral in (
+            ("ack_timeout", ack_timeout, 0),
+            ("backoff_base", backoff_base, 1.0),
+            ("max_retries", max_retries, 0),
+            ("ka_period", ka_period, 0),
+        ):
+            if val != neutral:
+                raise ValueError(
+                    f"{field}={val} has no effect with"
+                    " transport='fire_forget'; set transport='ack' for"
+                    " the reliable transport"
                 )
     if not 0.0 <= crash_rate <= 1.0:
         raise ValueError(

@@ -152,9 +152,18 @@ def stream_summary(count: int, mean: float, m2: float, max_jct: int,
     convention as :func:`jct_summary`.
     """
     count = int(count)
-    if count == 0:
+    hist = np.asarray(hist, np.int64)
+    if count == 0 or int(hist.sum()) == 0:
+        # Zero-count disambiguated path.  A warmup window can discard
+        # every completion from the quantile histogram while the exact
+        # ``max`` was tracked pre-discard (mode="drop" outliers likewise
+        # count without histogram mass): clamping the empty histogram's
+        # zero "quantiles" into [0, max] would fabricate a plausible
+        # value that describes no sample.  Report count=0 -- the
+        # unambiguous no-measured-quantiles marker -- with the tracked
+        # max preserved for inspection.
         return {"count": 0, "mean": 0.0, "std": 0.0, "p50": 0.0,
-                "p90": 0.0, "p99": 0.0, "p999": 0.0, "max": 0}
+                "p90": 0.0, "p99": 0.0, "p999": 0.0, "max": int(max_jct)}
     qs = log_hist_quantiles(hist, (0.5, 0.9, 0.99, 0.999))
     # The exact max is tracked alongside the histogram; interpolating
     # inside the top occupied bucket can overshoot it, so clamp (a

@@ -156,6 +156,12 @@ class StaticConfig:
     # "none"/"none" is bit-identical to the historical instant, fault-free
     # program.
     network: str = "none"  # "none" | "net"
+    # Wire semantics under network="net": "fire_forget" is the historical
+    # one-shot path (structurally unchanged), "ack" runs the reliable
+    # transport of comm.net_step_ack (timeout/retransmit/backoff windows,
+    # acks and keepalives billed on the same wire).  Static because it
+    # selects the carry structure (NetState vs AckNetState).
+    transport: str = "fire_forget"  # "fire_forget" | "ack"
     fault: str = "none"  # "none" | "crash" | "slow"
     # Ring capacity for the stale true-state views the query policies
     # (jsq / sq2 / sqd) route on under network="net"; must exceed every
@@ -211,6 +217,11 @@ class Scenario:
     net_jitter: jnp.ndarray  # () i32 max extra uniform delay (slots)
     net_drop: jnp.ndarray  # () f32 i.i.d. message-drop probability
     suspect_age: jnp.ndarray  # () i32 staleness bound (0 = no suspect masking)
+    # Reliable-transport operands (neutral under transport="fire_forget").
+    ack_timeout: jnp.ndarray  # () i32 base ack-wait window in slots
+    backoff_base: jnp.ndarray  # () f32 timeout multiplier per retransmit
+    max_retries: jnp.ndarray  # () i32 retransmits before abandoning
+    ka_period: jnp.ndarray  # () i32 server keepalive period (0 = none)
     crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
     recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
     slow_factor: jnp.ndarray  # () f32 rate multiplier while slowed (fault="slow")
@@ -239,6 +250,11 @@ class Scenario:
         net_jitter: int = 0,
         net_drop: float = 0.0,
         suspect_age: int = 0,
+        transport: str = "fire_forget",  # operand validation only
+        ack_timeout: int = 0,
+        backoff_base: float = 1.0,
+        max_retries: int = 0,
+        ka_period: int = 0,
         fault: str = "none",  # control-plane operand validation only
         crash_rate: float = 0.0,
         recover_rate: float = 0.0,
@@ -254,6 +270,11 @@ class Scenario:
             net_jitter=net_jitter,
             net_drop=net_drop,
             suspect_age=suspect_age,
+            transport=transport,
+            ack_timeout=ack_timeout,
+            backoff_base=backoff_base,
+            max_retries=max_retries,
+            ka_period=ka_period,
             fault=fault,
             crash_rate=crash_rate,
             recover_rate=recover_rate,
@@ -347,6 +368,10 @@ class Scenario:
             net_jitter=jnp.int32(net_jitter),
             net_drop=jnp.float32(net_drop),
             suspect_age=jnp.int32(suspect_age),
+            ack_timeout=jnp.int32(ack_timeout),
+            backoff_base=jnp.float32(backoff_base),
+            max_retries=jnp.int32(max_retries),
+            ka_period=jnp.int32(ka_period),
             crash_rate=jnp.float32(crash_rate),
             recover_rate=jnp.float32(recover_rate),
             slow_factor=jnp.float32(slow_factor),
@@ -422,6 +447,15 @@ class SimConfig:
     net_jitter: int = 0
     net_drop: float = 0.0
     suspect_age: int = 0  # staleness bound in slots (0 = no suspect masking)
+    # Reliable transport (see comm.NetworkConfig): transport="ack" turns
+    # every data send into an ack'd transmission with a timeout/retransmit
+    # window; the four operands below are traced (one compiled program per
+    # delay x drop x timeout ladder).
+    transport: str = "fire_forget"  # "fire_forget" | "ack"
+    ack_timeout: int = 0  # base ack-wait window in slots (>= 1 under ack)
+    backoff_base: float = 1.0  # timeout multiplier per retransmit (>= 1)
+    max_retries: int = 0  # retransmits before abandoning the update
+    ka_period: int = 0  # server keepalive period in slots (0 = none)
     fault: str = "none"  # "none" | "crash" | "slow"
     crash_rate: float = 0.0
     recover_rate: float = 0.0
@@ -460,6 +494,7 @@ class SimConfig:
             route_backend=self.route_backend,
             deterministic_ties=self.deterministic_ties,
             network=self.network,
+            transport=self.transport,
             fault=self.fault,
             net_delay_cap=self.net_delay_cap,
             classes=(
@@ -489,6 +524,11 @@ class SimConfig:
             net_jitter=self.net_jitter,
             net_drop=self.net_drop,
             suspect_age=self.suspect_age,
+            transport=self.transport,
+            ack_timeout=self.ack_timeout,
+            backoff_base=self.backoff_base,
+            max_retries=self.max_retries,
+            ka_period=self.ka_period,
             fault=self.fault,
             crash_rate=self.crash_rate,
             recover_rate=self.recover_rate,
@@ -518,6 +558,7 @@ class SimResult:
     queue_gap_sup: int = 0  # sup_t max_ij |Q_i - Q_j| (for SSC experiments)
     dropped: int = 0  # arrivals rejected because the FIFO was full
     net_drops: int = 0  # messages lost in flight (network="net")
+    retrans: int = 0  # data retransmits (transport="ack"; zero otherwise)
     # Pull-policy counters (jiq / hsq; zero otherwise).
     token_misses: int = 0  # arrivals routed with an empty token pool
     token_sum: int = 0  # sum over active slots of end-of-slot pool size
@@ -543,7 +584,9 @@ class _Carry:
     # corresponding static kind is off, so the "none" carry structure --
     # and therefore the compiled program -- is unchanged.
     fault_state: Optional[jnp.ndarray] = None  # (K,) bool servers faulted
-    net: Optional[comm_lib.NetState] = None  # in-flight message buffer
+    # In-flight message buffer: NetState under transport="fire_forget",
+    # AckNetState under "ack" (the static transport kind picks the subtree).
+    net: Optional[object] = None
     q_hist: Optional[jnp.ndarray] = None  # (cap, K) stale true-state ring
     # Pull-policy state (None unless policy is jiq/hsq): the balancer-side
     # token pool plus its counters.
@@ -628,6 +671,7 @@ def _sim_core(
         kind=static.comm, x=scn.x, rt_period=scn.rt_period
     )
     has_net = static.network != "none"
+    has_ack = has_net and static.transport == "ack"
     has_fault = static.fault != "none"
     has_cls = static.classes > 1
     has_pull = static.policy in routing_lib.PULL_POLICIES
@@ -647,16 +691,27 @@ def _sim_core(
             "per-departure message accounting (Prop 6.1) assumes instant "
             "delivery -- use comm='dt' with x=1 under network='net'"
         )
-    ncfg = (
-        comm_lib.NetworkConfig(
+    if has_ack:
+        ncfg = comm_lib.NetworkConfig(
+            kind=static.network,
+            delay=scn.net_delay,
+            jitter=scn.net_jitter,
+            drop=scn.net_drop,
+            transport="ack",
+            ack_timeout=scn.ack_timeout,
+            backoff_base=scn.backoff_base,
+            max_retries=scn.max_retries,
+            ka_period=scn.ka_period,
+        )
+    elif has_net:
+        ncfg = comm_lib.NetworkConfig(
             kind=static.network,
             delay=scn.net_delay,
             jitter=scn.net_jitter,
             drop=scn.net_drop,
         )
-        if has_net
-        else None
-    )
+    else:
+        ncfg = None
     # Under a modeled network the query policies route on *stale* true
     # state: the 2d SQ(d) probes (and JSQ's state feed) suffer the same
     # delivery delay as push messages, read from a ring of end-of-slot
@@ -711,7 +766,18 @@ def _sim_core(
             q_route = jnp.where(hist_idx >= 0, c.q_hist[hist_idx % cap], 0)
         else:
             q_route = c.q_true
-        if has_net or has_fault:
+        if has_ack:
+            # Under the ack transport suspect masking is keepalive-driven:
+            # the balancer reads its last-heard clock (reset by any data
+            # *or* keepalive delivery), and a server that abandoned an
+            # update after max_retries is a self-suspect regardless of
+            # age.  An all-suspect fleet falls back to all-healthy -- the
+            # balancer must route somewhere.
+            h = (
+                (scn.suspect_age <= 0) | (c.net.ka_age <= scn.suspect_age)
+            ) & ((scn.suspect_age <= 0) | ~c.net.gave_up)
+            healthy = jnp.where(jnp.any(h), h, True)
+        elif has_net or has_fault:
             # Staleness timeout: a server whose last delivered update is
             # older than suspect_age is suspect and excluded from the
             # shortest-queue candidate set (suspect_age 0 disables -- the
@@ -842,13 +908,30 @@ def _sim_core(
             count_msgs=not has_net,
         )
         triggered = triggered & act
-        if has_net:
+        if has_ack:
+            # The ack/keepalive channels draw from a third child of the
+            # per-slot net key, so the fire_forget two-way split -- and
+            # with it every pre-existing sample path -- stays byte-stable.
+            kd, kj, ka = jax.random.split(nkey, 3)
+            delivered, payload, sent, net_adv = comm_lib.net_step_ack(
+                c.net, ncfg, triggered, q_true,
+                jax.random.uniform(kd, (k,), jnp.float32),
+                jax.random.uniform(kj, (k,), jnp.float32),
+                jax.random.uniform(ka, (4, k), jnp.float32),
+                can_send=can_send,
+            )
+        elif has_net:
+            # can_send wipes a crashed server's queued piggyback so it
+            # cannot send its pre-crash snapshot at the next free slot --
+            # the recovery resync (force) is the re-announcement path.
             kd, kj = jax.random.split(nkey)
             delivered, payload, sent, net_adv = comm_lib.net_step(
                 c.net, ncfg, triggered, q_true,
                 jax.random.uniform(kd, (k,), jnp.float32),
                 jax.random.uniform(kj, (k,), jnp.float32),
+                can_send=can_send,
             )
+        if has_net:
             delivered = delivered & act
             net_state = jax.tree.map(
                 lambda adv, old: jnp.where(act, adv, old), net_adv, c.net
@@ -951,7 +1034,11 @@ def _sim_core(
         max_q=jnp.zeros((), jnp.int32),
         gap_sup=jnp.zeros((), jnp.int32),
         fault_state=jnp.zeros((k,), bool) if has_fault else None,
-        net=comm_lib.NetState.init(k) if has_net else None,
+        net=(
+            (comm_lib.AckNetState.init(k) if has_ack else comm_lib.NetState.init(k))
+            if has_net
+            else None
+        ),
         q_hist=jnp.zeros((cap, k), jnp.int32) if stale_ring else None,
         tokens=jnp.zeros((k,), jnp.int32) if has_pull else None,
         token_miss=jnp.zeros((), jnp.int32) if has_pull else None,
@@ -975,7 +1062,7 @@ def _sim_core(
     comp_slot = comp_slot.at[jnp.where(valid, departed, 0)].max(
         jnp.where(valid, slot_idx, -1)
     )
-    return (
+    out = (
         comp_slot,
         final.comm.msgs,
         final.deps,
@@ -990,6 +1077,11 @@ def _sim_core(
         final.token_miss if has_pull else jnp.zeros((), jnp.int32),
         final.token_sum if has_pull else jnp.zeros((), jnp.int32),
     )
+    if has_ack:
+        # Appended only under transport="ack" so every fire_forget
+        # program keeps its historical output arity (byte-identical).
+        out = out + (final.net.retrans,)
+    return out
 
 
 def _run_one(key, scn: Scenario, static: StaticConfig):
@@ -1277,6 +1369,41 @@ def _check_control_plane(static: StaticConfig, scn: Scenario) -> None:
                 f"state ring, got max {int(np.max(delay))}; raise "
                 f"StaticConfig.net_delay_cap"
             )
+    timeout = np.asarray(scn.ack_timeout)
+    base = np.asarray(scn.backoff_base)
+    retries = np.asarray(scn.max_retries)
+    ka = np.asarray(scn.ka_period)
+    if static.transport == "ack":
+        if static.network == "none":
+            raise ValueError(
+                "transport='ack' needs network='net' (instant lossless "
+                "delivery has nothing to acknowledge)"
+            )
+        if np.any(timeout < 1):
+            raise ValueError(
+                f"ack_timeout must be >= 1 slot under transport='ack' "
+                f"for {int(np.sum(timeout < 1))} cell(s)"
+            )
+        if np.any(base < 1):
+            raise ValueError(
+                "backoff_base must be >= 1 (the timeout window may only "
+                "grow across retries)"
+            )
+        if np.any(retries < 0) or np.any(ka < 0):
+            raise ValueError("max_retries / ka_period must be >= 0")
+    else:
+        for name, arr, neutral in (
+            ("ack_timeout", timeout, 0),
+            ("backoff_base", base, 1.0),
+            ("max_retries", retries, 0),
+            ("ka_period", ka, 0),
+        ):
+            if np.any(arr != neutral):
+                raise ValueError(
+                    f"{name} is non-neutral for "
+                    f"{int(np.sum(arr != neutral))} cell(s) but "
+                    f"transport='fire_forget'; set transport='ack'"
+                )
     if static.fault == "none":
         for name, arr, neutral in (
             ("crash_rate", crash, 0.0),
@@ -1308,8 +1435,14 @@ def _check_control_plane(static: StaticConfig, scn: Scenario) -> None:
 
 def _finalize(arrive_np: np.ndarray, out) -> SimResult:
     """Convert one run's device outputs into a host-side SimResult."""
+    out = tuple(out)
+    # transport="ack" programs append a retransmit counter; fire_forget
+    # keeps the historical 13-output tuple.
+    retrans = np.asarray(out[13]) if len(out) > 13 else np.int32(0)
     (comp_slot, msgs, deps, arrs, max_aq, max_q, per_srv, final_q, dropped,
-     gap_sup, net_drops, token_miss, token_sum) = (np.asarray(o) for o in out)
+     gap_sup, net_drops, token_miss, token_sum) = (
+        np.asarray(o) for o in out[:13]
+    )
 
     arrival_slots = np.nonzero(arrive_np)[0]
     comp = comp_slot[arrival_slots]
@@ -1332,6 +1465,7 @@ def _finalize(arrive_np: np.ndarray, out) -> SimResult:
         queue_gap_sup=int(gap_sup),
         dropped=int(dropped),
         net_drops=int(net_drops),
+        retrans=int(retrans),
         token_misses=int(token_miss),
         token_sum=int(token_sum),
     )

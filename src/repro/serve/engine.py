@@ -174,6 +174,14 @@ class EngineConfig:
     net_jitter: int = 0
     net_drop: float = 0.0
     suspect_age: int = 0  # staleness bound in slots (0 = no suspect masking)
+    # Wire transport (network="net" only): "fire_forget" is the historical
+    # one-shot path; "ack" runs the reliable transport of
+    # comm.net_step_ack (timeout/retransmit/backoff + keepalives).
+    transport: str = "fire_forget"  # "fire_forget" | "ack"
+    ack_timeout: int = 0  # slots a sender waits for an ack (>= 1 under ack)
+    backoff_base: float = 1.0  # timeout multiplier per retransmit (>= 1)
+    max_retries: int = 0  # retransmits before an update is abandoned
+    ka_period: int = 0  # server keepalive period in slots (0 = none)
     fault: str = "none"  # "none" | "crash" | "slow"
     crash_rate: float = 0.0
     recover_rate: float = 0.0
@@ -260,6 +268,16 @@ class ServeConfig:
     net_jitter: int = 0
     net_drop: float = 0.0
     suspect_age: int = 0
+    # Wire transport: the *kind* is static ("fire_forget" keeps the
+    # historical one-shot wire, structurally absent ack state; "ack" runs
+    # comm.net_step_ack) while ack_timeout / backoff_base / max_retries /
+    # ka_period are traced EngineScenario operands -- a timeout ladder
+    # shares one compiled program with its siblings.
+    transport: str = "fire_forget"  # "fire_forget" | "ack"
+    ack_timeout: int = 0
+    backoff_base: float = 1.0
+    max_retries: int = 0
+    ka_period: int = 0
     fault: str = "none"  # "none" | "crash" | "slow"
     crash_rate: float = 0.0
     recover_rate: float = 0.0
@@ -328,6 +346,11 @@ class ServeConfig:
             token_refresh=(
                 float(self.rt_period) if self.policy == "hsq" else None
             ),
+            transport=self.transport,
+            ack_timeout=self.ack_timeout,
+            backoff_base=self.backoff_base,
+            max_retries=self.max_retries,
+            ka_period=self.ka_period,
         )
         if self.network != "none" and self.comm == "exact":
             raise ValueError(
@@ -351,6 +374,7 @@ class ServeConfig:
             route_backend=self.route_backend,
             deterministic_ties=self.deterministic_ties,
             network=self.network,
+            transport=self.transport,
             fault=self.fault,
         )
 
@@ -369,6 +393,10 @@ class ServeConfig:
             net_jitter=self.net_jitter,
             net_drop=self.net_drop,
             suspect_age=self.suspect_age,
+            ack_timeout=self.ack_timeout,
+            backoff_base=self.backoff_base,
+            max_retries=self.max_retries,
+            ka_period=self.ka_period,
             crash_rate=self.crash_rate,
             recover_rate=self.recover_rate,
             slow_factor=self.slow_factor,
@@ -395,6 +423,11 @@ class ServeConfig:
             net_jitter=self.net_jitter,
             net_drop=self.net_drop,
             suspect_age=self.suspect_age,
+            transport=self.transport,
+            ack_timeout=self.ack_timeout,
+            backoff_base=self.backoff_base,
+            max_retries=self.max_retries,
+            ka_period=self.ka_period,
             fault=self.fault,
             crash_rate=self.crash_rate,
             recover_rate=self.recover_rate,
@@ -418,6 +451,10 @@ class ServeConfig:
             # with both kinds off replay the historical stream byte for
             # byte (only the *presence* of each stream keys the cache).
             self.network != "none", self.fault != "none",
+            # The ack/keepalive uniform stream rides a sixth prefix-stable
+            # child: its presence keys the cache, fire_forget cells keep
+            # the historical 9-tuple stream bytes untouched.
+            self.transport == "ack",
         )
 
 
@@ -452,6 +489,10 @@ class EngineStatic:
     route_backend: str = "dense"  # "dense" | "pallas" (see ServeConfig)
     deterministic_ties: bool = False
     network: str = "none"  # "none" | "net" (control-plane kind, static)
+    # Wire transport kind (static, like network): "ack" swaps the carry's
+    # NetState for an AckNetState and the delivery step for net_step_ack;
+    # "fire_forget" keeps the historical program structure untouched.
+    transport: str = "fire_forget"  # "fire_forget" | "ack"
     fault: str = "none"  # "none" | "crash" | "slow" (replica fault kind)
     # Segment-engine mode (serve_stream): ``slots`` becomes the *chunk*
     # length, the carry is threaded across jit calls (donated in place),
@@ -489,6 +530,12 @@ class EngineScenario:
     net_jitter: jnp.ndarray  # () i32 extra uniform delay in [0, jitter]
     net_drop: jnp.ndarray  # () f32 i.i.d. message-drop probability
     suspect_age: jnp.ndarray  # () i32 staleness bound (0 = no masking)
+    # Reliable-transport operands (neutral under transport="fire_forget";
+    # a timeout x backoff ladder shares one compiled program):
+    ack_timeout: jnp.ndarray  # () i32 timeout window of a new send (slots)
+    backoff_base: jnp.ndarray  # () f32 window multiplier per retransmit
+    max_retries: jnp.ndarray  # () i32 retransmits before abandoning
+    ka_period: jnp.ndarray  # () i32 server keepalive period (0 = none)
     crash_rate: jnp.ndarray  # () f32 per-slot fault-entry probability
     recover_rate: jnp.ndarray  # () f32 per-slot fault-exit probability
     slow_factor: jnp.ndarray  # () f32 service-rate scale of fault="slow"
@@ -512,6 +559,10 @@ class EngineScenario:
         net_jitter: int = 0,
         net_drop: float = 0.0,
         suspect_age: int = 0,
+        ack_timeout: int = 0,
+        backoff_base: float = 1.0,
+        max_retries: int = 0,
+        ka_period: int = 0,
         crash_rate: float = 0.0,
         recover_rate: float = 0.0,
         slow_factor: float = 1.0,
@@ -537,6 +588,10 @@ class EngineScenario:
             net_jitter=jnp.int32(net_jitter),
             net_drop=jnp.float32(net_drop),
             suspect_age=jnp.int32(suspect_age),
+            ack_timeout=jnp.int32(ack_timeout),
+            backoff_base=jnp.float32(backoff_base),
+            max_retries=jnp.int32(max_retries),
+            ka_period=jnp.int32(ka_period),
             crash_rate=jnp.float32(crash_rate),
             recover_rate=jnp.float32(recover_rate),
             slow_factor=jnp.float32(slow_factor),
@@ -655,6 +710,9 @@ class ServeWorkload:
     net_drop_u: Optional[np.ndarray] = None  # (T, R) float32
     net_jit_u: Optional[np.ndarray] = None  # (T, R) float32
     fault_u: Optional[np.ndarray] = None  # (T, R) float32
+    # Ack/keepalive-channel uniforms (transport="ack" only): rows are
+    # (ack drop, ack jitter, ka drop, ka jitter) per net_step_ack.
+    ack_u: Optional[np.ndarray] = None  # (T, 4, R) float32
 
     @property
     def total(self) -> int:
@@ -673,6 +731,7 @@ def sample_workload(
     rate_scale: float = 1.0,
     with_net: bool = False,
     with_fault: bool = False,
+    with_ack: bool = False,
 ) -> ServeWorkload:
     """Draw the replayable serving workload for one (parameters, seed).
 
@@ -686,9 +745,14 @@ def sample_workload(
     degraded-control-plane uniforms from two further children (3 and 4);
     ``SeedSequence`` spawning is prefix-stable, so turning them on cannot
     move the first three streams -- a fault ladder replays the exact
-    arrival/tie-break bytes of its fault-free control.
+    arrival/tie-break bytes of its fault-free control.  ``with_ack``
+    (``transport="ack"``) draws the ack/keepalive-channel uniforms from a
+    sixth child -- again prefix-stable, so an ack cell replays its
+    fire-and-forget control's bytes on every other stream.
     """
-    w_ss, r_ss, s_ss, n_ss, f_ss = np.random.SeedSequence(int(seed)).spawn(5)
+    w_ss, r_ss, s_ss, n_ss, f_ss, a_ss = (
+        np.random.SeedSequence(int(seed)).spawn(6)
+    )
     wrng = np.random.default_rng(w_ss)
     rrng = np.random.default_rng(r_ss)
     srng = np.random.default_rng(s_ss)
@@ -703,7 +767,7 @@ def sample_workload(
     sub_u = srng.random(size=(total, SQD_MAX), dtype=np.float32)
     base = np.concatenate([[0], np.cumsum(n_arr)[:-1]]).astype(np.int64)
     arrival_slot = np.repeat(np.arange(slots, dtype=np.int64), n_arr)
-    net_drop_u = net_jit_u = fault_u = None
+    net_drop_u = net_jit_u = fault_u = ack_u = None
     if with_net:
         nrng = np.random.default_rng(n_ss)
         net_drop_u = nrng.random(size=(slots, replicas), dtype=np.float32)
@@ -711,21 +775,26 @@ def sample_workload(
     if with_fault:
         frng = np.random.default_rng(f_ss)
         fault_u = frng.random(size=(slots, replicas), dtype=np.float32)
+    if with_ack:
+        arng = np.random.default_rng(a_ss)
+        ack_u = arng.random(size=(slots, 4, replicas), dtype=np.float32)
     return ServeWorkload(
         n_arr=n_arr, base=base, prefill=prefill, decode=decode,
         work=work, tie_u=tie_u, sub_u=sub_u, arrival_slot=arrival_slot,
         net_drop_u=net_drop_u, net_jit_u=net_jit_u, fault_u=fault_u,
+        ack_u=ack_u,
     )
 
 
 @functools.lru_cache(maxsize=512)
 def _cached_workload(key: tuple, seed: int) -> ServeWorkload:
     (replicas, decode_slots, slots, load, mean_prefill, mean_decode,
-     rate_scale, with_net, with_fault) = key
+     rate_scale, with_net, with_fault, with_ack) = key
     return sample_workload(
         seed, replicas=replicas, decode_slots=decode_slots, slots=slots,
         load=load, mean_prefill=mean_prefill, mean_decode=mean_decode,
         rate_scale=rate_scale, with_net=with_net, with_fault=with_fault,
+        with_ack=with_ack,
     )
 
 
@@ -874,15 +943,27 @@ class CareDispatcher:
         self._ccfg = cfg.comm_config()
         # Degraded control plane: per-replica in-flight message buffer
         # (network="net") and the fault mask of the crash/slow process.
+        # transport="ack" swaps the wire state for an AckNetState and the
+        # delivery step for net_step_ack (timeout/retransmit/backoff).
         if cfg.network != "none":
-            self.net = comm_lib.NetState.init(
-                r, xp=np, payload_dtype=np.float32
-            )
+            if cfg.transport == "ack":
+                self.net = comm_lib.AckNetState.init(
+                    r, xp=np, payload_dtype=np.float32
+                )
+            else:
+                self.net = comm_lib.NetState.init(
+                    r, xp=np, payload_dtype=np.float32
+                )
             self._ncfg = comm_lib.NetworkConfig(
                 kind=cfg.network,
                 delay=np.int32(cfg.net_delay),
                 jitter=np.int32(cfg.net_jitter),
                 drop=np.float32(cfg.net_drop),
+                transport=cfg.transport,
+                ack_timeout=np.int32(cfg.ack_timeout),
+                backoff_base=np.float32(cfg.backoff_base),
+                max_retries=np.int32(cfg.max_retries),
+                ka_period=np.int32(cfg.ka_period),
             )
         else:
             self.net = None
@@ -978,11 +1059,20 @@ class CareDispatcher:
         # reset either one, doubling as failure detection.
         healthy = None
         if cfg.suspect_age > 0:
-            age = (
-                self.net.age if self.net is not None
-                else self.comm.slots_since_msg
-            )
-            healthy = age <= cfg.suspect_age
+            if self.net is not None and cfg.transport == "ack":
+                # Keepalive-driven masking: the last-heard clock counts
+                # any delivery (data or keepalive), and a server that
+                # abandoned an update after max_retries is a self-suspect
+                # until some later transmission is acked.
+                healthy = (
+                    self.net.ka_age <= cfg.suspect_age
+                ) & ~self.net.gave_up
+            else:
+                age = (
+                    self.net.age if self.net is not None
+                    else self.comm.slots_since_msg
+                )
+                healthy = age <= cfg.suspect_age
             if not healthy.any():
                 healthy = np.ones_like(healthy)
         if cfg.policy == "rr":
@@ -1063,6 +1153,7 @@ class CareDispatcher:
         drop_u: Optional[np.ndarray] = None,
         jit_u: Optional[np.ndarray] = None,
         fault_u: Optional[np.ndarray] = None,
+        ack_u: Optional[np.ndarray] = None,
     ) -> list[Request]:
         cfg = self.cfg
         rows = np.arange(cfg.num_replicas)[:, None]
@@ -1165,11 +1256,26 @@ class CareDispatcher:
                     f"network={cfg.network!r} (sample_workload "
                     "with_net=True)"
                 )
-            delivered, payload, sent, self.net = comm_lib.net_step(
-                self.net, self._ncfg, trig, true_occ,
-                np.asarray(drop_u, np.float32),
-                np.asarray(jit_u, np.float32), xp=np,
-            )
+            if cfg.transport == "ack":
+                if ack_u is None:
+                    raise ValueError(
+                        "step() needs this slot's ack_u rows when "
+                        "transport='ack' (sample_workload with_ack=True)"
+                    )
+                delivered, payload, sent, self.net = comm_lib.net_step_ack(
+                    self.net, self._ncfg, trig, true_occ,
+                    np.asarray(drop_u, np.float32),
+                    np.asarray(jit_u, np.float32),
+                    np.asarray(ack_u, np.float32), xp=np,
+                    can_send=can_send,
+                )
+            else:
+                delivered, payload, sent, self.net = comm_lib.net_step(
+                    self.net, self._ncfg, trig, true_occ,
+                    np.asarray(drop_u, np.float32),
+                    np.asarray(jit_u, np.float32), xp=np,
+                    can_send=can_send,
+                )
             self.comm = dataclasses.replace(
                 self.comm, msgs=self.comm.msgs + sent
             )
@@ -1228,13 +1334,14 @@ def run_serving_sim(
     """
     with_net = cfg.network != "none"
     with_fault = cfg.fault != "none"
+    with_ack = with_net and cfg.transport == "ack"
     if workload is None:
         rate_scale = mean_decode_rate(cfg.decode_rates)
         workload = sample_workload(
             seed, replicas=cfg.num_replicas, decode_slots=cfg.decode_slots,
             slots=slots, load=load, mean_prefill=mean_prefill,
             mean_decode=mean_decode, rate_scale=rate_scale,
-            with_net=with_net, with_fault=with_fault,
+            with_net=with_net, with_fault=with_fault, with_ack=with_ack,
         )
     if with_net and workload.net_drop_u is None:
         raise ValueError(
@@ -1245,6 +1352,11 @@ def run_serving_sim(
         raise ValueError(
             "workload lacks the fault uniform stream; sample it with "
             "with_fault=True"
+        )
+    if with_ack and workload.ack_u is None:
+        raise ValueError(
+            "workload lacks the ack/keepalive uniform stream; sample it "
+            "with with_ack=True"
         )
     # One source of truth for E[S]: the drain policy's score must use the
     # same mean work the workload was sampled with, or the two backends
@@ -1278,6 +1390,7 @@ def run_serving_sim(
             drop_u=workload.net_drop_u[now] if with_net else None,
             jit_u=workload.net_jit_u[now] if with_net else None,
             fault_u=workload.fault_u[now] if with_fault else None,
+            ack_u=workload.ack_u[now] if with_ack else None,
         ))
         if now in want_ckpt:
             occupancy[now] = disp.true_occupancy().copy()
@@ -1305,6 +1418,11 @@ def run_serving_sim(
         "occupancy": occupancy,
         "requests": finished,
         "net_drops": int(disp.net.drops) if disp.net is not None else 0,
+        "retrans": (
+            int(disp.net.retrans)
+            if disp.net is not None and cfg.transport == "ack"
+            else 0
+        ),
         "token_misses": int(disp.token_misses),
         "token_sum": int(disp.token_sum),
     }
@@ -1316,7 +1434,7 @@ def run_serving_sim(
 
 
 def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
-                n_cap, scn: EngineScenario, static: EngineStatic,
+                ack_u, n_cap, scn: EngineScenario, static: EngineStatic,
                 carry=None, t0=None):
     """One serving run as a ``lax.scan`` over slots; traceable under vmap.
 
@@ -1334,7 +1452,9 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
     shared-core trigger -> network delivery.  ``net_du`` / ``net_ju`` /
     ``fault_u`` are the pre-drawn ``(T, R)`` control-plane uniforms
     (zero-width ``(T, 0)`` when the corresponding kind is off, so the
-    grid sharding specs are shape-stable).
+    grid sharding specs are shape-stable); ``ack_u`` is the ``(T, 4, R)``
+    ack/keepalive-channel stream of ``transport="ack"`` (``(T, 0, 0)``
+    otherwise).
     ``static.policy`` picks the route step at trace time; the drain-time
     score and heterogeneous decode/drain rates consume the traced
     ``scn.decode_rates`` operand, so a rate ladder shares one program.
@@ -1362,7 +1482,16 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
                                rt_period=scn.rt_period)
     has_net = static.network != "none"
     has_fault = static.fault != "none"
-    if has_net:
+    has_ack = has_net and static.transport == "ack"
+    if has_ack:
+        ncfg = comm_lib.NetworkConfig(
+            kind=static.network, delay=scn.net_delay,
+            jitter=scn.net_jitter, drop=scn.net_drop,
+            transport="ack", ack_timeout=scn.ack_timeout,
+            backoff_base=scn.backoff_base, max_retries=scn.max_retries,
+            ka_period=scn.ka_period,
+        )
+    elif has_net:
         ncfg = comm_lib.NetworkConfig(
             kind=static.network, delay=scn.net_delay,
             jitter=scn.net_jitter, drop=scn.net_drop,
@@ -1389,7 +1518,8 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         (q_len, q_head, q_work, q_rid, rem, arid, approx, comm_state,
          rr_ptr, comp_slot, total_comp, dropped, net_state, faulted,
          pull_state) = carry
-        t, n_arr_t, work_t, tie_t, rid_t, sub_t, ndu_t, nju_t, fu_t = xs
+        (t, n_arr_t, work_t, tie_t, rid_t, sub_t, ndu_t, nju_t, fu_t,
+         aku_t) = xs
         if static.stream:
             # A streamed request's identity is its arrival slot: the ring
             # stores it, completion turns it into a JCT on device.
@@ -1406,7 +1536,17 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         # suspect_age is a traced operand; 0 yields an all-True mask,
         # which is decision-identical to no masking on both backends.
         healthy = None
-        if has_net or has_fault:
+        if has_ack:
+            # Keepalive-driven masking (transport="ack"): the last-heard
+            # clock counts data *and* keepalive deliveries, and a server
+            # that abandoned an update after max_retries (gave_up) is a
+            # self-suspect until a later transmission is acked.
+            h = (
+                (scn.suspect_age <= 0)
+                | (net_state.ka_age <= scn.suspect_age)
+            ) & ((scn.suspect_age <= 0) | ~net_state.gave_up)
+            healthy = jnp.where(jnp.any(h), h, True)
+        elif has_net or has_fault:
             age = net_state.age if has_net else comm_state.slots_since_msg
             h = (scn.suspect_age <= 0) | (age <= scn.suspect_age)
             healthy = jnp.where(jnp.any(h), h, True)
@@ -1629,9 +1769,16 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
         trig = trig & act
         if has_net:
             # --- 6. network delivery (delay/jitter/drop + piggyback) ----
-            delivered, payload, sent, net_adv = comm_lib.net_step(
-                net_state, ncfg, trig, true_occ, ndu_t, nju_t
-            )
+            if has_ack:
+                delivered, payload, sent, net_adv = comm_lib.net_step_ack(
+                    net_state, ncfg, trig, true_occ, ndu_t, nju_t, aku_t,
+                    can_send=can_send,
+                )
+            else:
+                delivered, payload, sent, net_adv = comm_lib.net_step(
+                    net_state, ncfg, trig, true_occ, ndu_t, nju_t,
+                    can_send=can_send,
+                )
             delivered = delivered & act
             extra = jnp.where(act, sent, 0)
             if static.policy == "sqd":
@@ -1684,7 +1831,8 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
     tv = jnp.arange(t_n, dtype=jnp.int32)
     if t0 is not None:
         tv = tv + t0  # absolute slot clock of the segment engine
-    xs = (tv, n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u)
+    xs = (tv, n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+          ack_u)
     final, occ_trace = jax.lax.scan(slot, init, xs)
     if static.stream:
         # Segment mode: the caller threads the whole carry to the next
@@ -1702,6 +1850,10 @@ def _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
     )
     outs = (comp_slot, comm_state.msgs, total_comp, dropped, final_occ,
             net_drops, token_miss, token_sum)
+    if has_net and static.transport == "ack":
+        # Retransmit total (ack cells only -- the fire_forget output
+        # tuple, and hence its compiled program, is untouched).
+        outs = outs + (net_state.retrans,)
     if static.trace_occupancy:
         outs = outs + (occ_trace,)
     return outs
@@ -1718,7 +1870,7 @@ def _engine_init(static: EngineStatic, n_cap: int):
     r_n, s_n, c_n = static.replicas, static.decode_slots, static.queue_cap
     comm0, net0, fault0 = comm_lib.control_plane_init(
         r_n, network=static.network, fault=static.fault,
-        payload_dtype=jnp.float32,
+        transport=static.transport, payload_dtype=jnp.float32,
     )
     return (
         jnp.zeros((r_n,), jnp.int32),  # q_len
@@ -1747,11 +1899,11 @@ def _engine_init(static: EngineStatic, n_cap: int):
     )
 
 
-@functools.partial(jax.jit, static_argnums=(9, 10))
+@functools.partial(jax.jit, static_argnums=(10, 11))
 def _serve_one_jit(n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
-                   scn, n_cap, static):
+                   ack_u, scn, n_cap, static):
     return _serve_core(n_arr, work, tie_u, rid, sub_u, net_du, net_ju,
-                       fault_u, n_cap, scn, static)
+                       fault_u, ack_u, n_cap, scn, static)
 
 
 _SERVE_GRID_PROGRAMS: list = []  # jitted grid wrappers, one per (static, n_dev)
@@ -1767,10 +1919,11 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
     :func:`serve_compile_count`.
     """
     batched = jax.vmap(
-        lambda n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u, scn:
+        lambda n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
+        ack_u, scn:
         _serve_core(
             n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
-            n_cap, scn, static
+            ack_u, n_cap, scn, static
         )
     )
     if n_dev <= 1:
@@ -1780,7 +1933,7 @@ def _serve_grid_fn(static: EngineStatic, n_cap: int, n_dev: int):
         from jax.sharding import Mesh, PartitionSpec as P
 
         mesh = Mesh(np.asarray(jax.local_devices()[:n_dev]), ("runs",))
-        spec = (P("runs"),) * 9
+        spec = (P("runs"),) * 10
         fn = jax.jit(
             shard_map(batched, mesh=mesh, in_specs=spec, out_specs=P("runs"))
         )
@@ -1817,12 +1970,13 @@ class ServeResult:
     net_drops: int = 0  # messages lost in flight (network="net" only)
     token_misses: int = 0  # pull routes that found an empty token pool
     token_sum: int = 0  # end-of-slot token-pool occupancy, summed over slots
+    retrans: int = 0  # data retransmits (transport="ack" only)
     occupancy: Optional[np.ndarray] = None  # (T, R) when trace_occupancy
 
     @staticmethod
     def from_run(wl: ServeWorkload, comp_slot, msgs, total_comp, dropped,
                  final_occ, net_drops=0, token_misses=0, token_sum=0,
-                 occ_trace=None) -> "ServeResult":
+                 retrans=0, occ_trace=None) -> "ServeResult":
         comp_slot = np.asarray(comp_slot)[: wl.total].astype(np.int64)
         done = comp_slot >= 0
         jct_by_rid = np.where(done, comp_slot - wl.arrival_slot + 1, -1)
@@ -1843,12 +1997,29 @@ class ServeResult:
             net_drops=int(net_drops),
             token_misses=int(token_misses),
             token_sum=int(token_sum),
+            retrans=int(retrans),
             occupancy=None if occ_trace is None else np.asarray(occ_trace),
         )
 
 
 def _round_up(n: int, mult: int) -> int:
     return ((max(n, 1) + mult - 1) // mult) * mult
+
+
+def _split_extra_outs(out_np, static: EngineStatic):
+    """Split ``_serve_core``'s variable output tail by the static flags.
+
+    The first 8 outputs are fixed; ``retrans`` rides along only under
+    ``transport="ack"`` and the occupancy trace only under
+    ``trace_occupancy`` (keeping the default output tuple -- and hence
+    the compiled fire-and-forget program -- byte-identical).
+    """
+    base, rest = list(out_np[:8]), list(out_np[8:])
+    retrans = 0
+    if static.network != "none" and static.transport == "ack":
+        retrans, rest = rest[0], rest[1:]
+    occ = rest[0] if rest else None
+    return base, retrans, occ
 
 
 def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0,
@@ -1896,8 +2067,17 @@ def _pad_workload(wl: ServeWorkload, t_pad: int, a_pad: int, d: int = 0,
         out[: arr.shape[0]] = arr
         return out
 
+    def pad_ack(arr):
+        # Ack/keepalive uniforms: (T, 4, R) slabs, zero-width when the
+        # transport is fire_forget (no memory, no transfer).
+        if arr is None:
+            return np.zeros((t_pad, 0, 0), np.float32)
+        out = np.zeros((t_pad,) + arr.shape[1:], np.float32)
+        out[: arr.shape[0]] = arr
+        return out
+
     return (n_arr, work, tie_u, rid, sub_u, pad_cp(wl.net_drop_u),
-            pad_cp(wl.net_jit_u), pad_cp(wl.fault_u))
+            pad_cp(wl.net_jit_u), pad_cp(wl.fault_u), pad_ack(wl.ack_u))
 
 
 def serve_grid(
@@ -1939,12 +2119,12 @@ def serve_grid(
         if (
             cs.replicas, cs.decode_slots, cs.queue_cap, cs.comm,
             cs.policy, cs.sqd, cs.use_rates, cs.route_backend,
-            cs.deterministic_ties, cs.network, cs.fault,
+            cs.deterministic_ties, cs.network, cs.transport, cs.fault,
         ) != (
             static.replicas, static.decode_slots, static.queue_cap,
             static.comm, static.policy, static.sqd, static.use_rates,
             static.route_backend, static.deterministic_ties,
-            static.network, static.fault,
+            static.network, static.transport, static.fault,
         ):
             raise ValueError(
                 f"cell static part {cs} does not match grid static {static}"
@@ -1970,7 +2150,7 @@ def serve_grid(
     d = static.sqd if static.policy == "sqd" else 0
 
     padded = [_pad_workload(w, static.slots, a_pad, d) for w in flat_wls]
-    arrs = [jnp.asarray(np.stack([p[i] for p in padded])) for i in range(8)]
+    arrs = [jnp.asarray(np.stack([p[i] for p in padded])) for i in range(9)]
     scn_flat = stack_scenarios(
         [cell.scenario() for cell in cells for _ in seeds]
     )
@@ -1984,11 +2164,15 @@ def serve_grid(
 
     out = _serve_grid_fn(static, n_cap, n_dev)(*arrs, scn_flat)
     out_np = [np.asarray(o)[:n] for o in out]
+    base, retrans, occ = _split_extra_outs(out_np, static)
     s = len(seeds)
     return [
         [
             ServeResult.from_run(
-                wls[c][j], *(o[c * s + j] for o in out_np)
+                wls[c][j], *(o[c * s + j] for o in base),
+                retrans=0 if isinstance(retrans, int)
+                else retrans[c * s + j],
+                occ_trace=None if occ is None else occ[c * s + j],
             )
             for j in range(s)
         ]
@@ -2036,7 +2220,10 @@ def serve_one(seed: int, cell: ServeConfig, *,
     out = _serve_one_jit(
         *(jnp.asarray(p) for p in padded), cell.scenario(), n_cap, static,
     )
-    return ServeResult.from_run(wl, *(np.asarray(o) for o in out))
+    base, retrans, occ = _split_extra_outs(
+        [np.asarray(o) for o in out], static
+    )
+    return ServeResult.from_run(wl, *base, retrans=retrans, occ_trace=occ)
 
 
 # ---------------------------------------------------------------------------
@@ -2083,6 +2270,7 @@ class StreamParams:
     rate_scale: float = 1.0
     with_net: bool = False
     with_fault: bool = False
+    with_ack: bool = False
     diurnal_amp: float = 0.0
     diurnal_period: int = 0
 
@@ -2098,6 +2286,7 @@ class StreamParams:
             rate_scale=cell.rate_scale(),
             with_net=cell.network != "none",
             with_fault=cell.fault != "none",
+            with_ack=cell.network != "none" and cell.transport == "ack",
             diurnal_amp=diurnal_amp,
             diurnal_period=diurnal_period,
         )
@@ -2117,6 +2306,7 @@ class _StreamBlock:
     net_drop_u: Optional[np.ndarray]  # (B, R) float32
     net_jit_u: Optional[np.ndarray]  # (B, R) float32
     fault_u: Optional[np.ndarray]  # (B, R) float32
+    ack_u: Optional[np.ndarray]  # (B, 4, R) float32
 
 
 class StreamSampler:
@@ -2139,7 +2329,10 @@ class StreamSampler:
         self.seed = int(seed)
         self.params = params
         root = np.random.SeedSequence(self.seed)
-        self._roots = root.spawn(5)  # workload, tie, subset, net, fault
+        # workload, tie, subset, net, fault, ack -- spawning is
+        # prefix-stable, so the sixth (ack) child cannot move the first
+        # five streams' bytes.
+        self._roots = root.spawn(6)
         self._cache: dict[int, _StreamBlock] = {}
 
     def _rng(self, stream: int, j: int) -> np.random.Generator:
@@ -2173,7 +2366,7 @@ class StreamSampler:
         work = np.maximum(prefill + decode, 1)
         tie_u = self._rng(1, j).random(size=total, dtype=np.float32)
         sub_u = self._rng(2, j).random(size=(total, SQD_MAX), dtype=np.float32)
-        net_drop_u = net_jit_u = fault_u = None
+        net_drop_u = net_jit_u = fault_u = ack_u = None
         if p.with_net:
             nrng = self._rng(3, j)
             net_drop_u = nrng.random(size=(b, p.replicas), dtype=np.float32)
@@ -2182,12 +2375,17 @@ class StreamSampler:
             fault_u = self._rng(4, j).random(
                 size=(b, p.replicas), dtype=np.float32
             )
+        if p.with_ack:
+            ack_u = self._rng(5, j).random(
+                size=(b, 4, p.replicas), dtype=np.float32
+            )
         blk = _StreamBlock(
             n_arr=n_arr,
             cum=np.concatenate([[0], np.cumsum(n_arr)]).astype(np.int64),
             prefill=prefill, decode=decode, work=work,
             tie_u=tie_u, sub_u=sub_u,
             net_drop_u=net_drop_u, net_jit_u=net_jit_u, fault_u=fault_u,
+            ack_u=ack_u,
         )
         if len(self._cache) >= self._CACHE_BLOCKS:
             self._cache.pop(next(iter(self._cache)))
@@ -2229,7 +2427,7 @@ class StreamSampler:
             tie_u=cat("tie_u"), sub_u=cat("sub_u"),
             arrival_slot=np.repeat(np.arange(t0, t1, dtype=np.int64), n_arr),
             net_drop_u=cat_cp("net_drop_u"), net_jit_u=cat_cp("net_jit_u"),
-            fault_u=cat_cp("fault_u"),
+            fault_u=cat_cp("fault_u"), ack_u=cat_cp("ack_u"),
         )
 
     def full(self, slots: int) -> ServeWorkload:
@@ -2259,10 +2457,10 @@ def _stream_step_fn(static: EngineStatic):
     """
 
     def step(carry, t0, n_arr, work, tie_u, rid, sub_u, net_du, net_ju,
-             fault_u, scn):
+             fault_u, ack_u, scn):
         return _serve_core(
             n_arr, work, tie_u, rid, sub_u, net_du, net_ju, fault_u,
-            0, scn, static, carry=carry, t0=t0,
+            ack_u, 0, scn, static, carry=carry, t0=t0,
         )
 
     fn = jax.jit(step, donate_argnums=(0,))
@@ -2312,6 +2510,7 @@ class StreamResult:
     state: StreamState
     token_misses: int = 0  # pull routes that found an empty token pool
     token_sum: int = 0  # end-of-slot token-pool occupancy over slots
+    retrans: int = 0  # data retransmits (transport="ack" only)
 
     @property
     def msgs_per_slot(self) -> float:
@@ -2463,4 +2662,9 @@ def serve_stream(
         ),
         token_misses=int(pull_state[1]) if pull_state is not None else 0,
         token_sum=int(pull_state[2]) if pull_state is not None else 0,
+        retrans=(
+            int(net_state.retrans)
+            if net_state is not None and hasattr(net_state, "retrans")
+            else 0
+        ),
     )

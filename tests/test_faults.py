@@ -23,6 +23,11 @@ Covers the tentpole contracts of the robustness layer:
   instant-delivery results.
 * **SQ(d) message accounting**: under the network model the 2d query
   round-trips are counted as real wire traffic (not analytically).
+* **Reliable transport** (``transport="ack"``): ack'd sends with
+  timeout/retransmit/backoff windows, fresh-snapshot retransmits,
+  abandon-after-max_retries self-suspects, keepalive-driven suspect
+  masking, eventual delivery under drop < 1, and jax <-> numpy parity
+  for ack cells across the matrix (pull-token retransmits included).
 """
 import dataclasses
 
@@ -142,6 +147,281 @@ class TestNetStep:
         assert [o[0] for o in out] == [False, False, True, False, False]
         assert int(state.age[0]) == 2
 
+    def test_crash_wipes_queued_piggyback(self):
+        # Regression: a trigger queued behind an in-flight message
+        # (pending=True) describes *pre-crash* state; a crash (can_send
+        # False) must wipe it, or the stale snapshot fires at the next
+        # free slot ahead of the recovery resync.
+        cfg = _ncfg(delay=3)
+        state = comm_lib.NetState.init(1, xp=np, payload_dtype=np.float32)
+        du = np.full(1, 0.99, np.float32)
+        ju = np.zeros(1, np.float32)
+
+        def step(trig, payload, can_send=None):
+            return comm_lib.net_step(
+                state, cfg, np.array([trig]),
+                np.full(1, payload, np.float32), du, ju, xp=np,
+                can_send=None if can_send is None else np.array([can_send]),
+            )
+
+        _, _, s0, state = step(True, 5.0)  # t=0: in flight 3 slots
+        _, _, _, state = step(True, 6.0)  # t=1: queued behind it
+        assert bool(state.pending[0])
+        # t=2: the server crashes mid-flight; the queued intent dies too.
+        _, _, _, state = step(False, 7.0, can_send=False)
+        assert not bool(state.pending[0])
+        # The channel frees (t=3 delivery) but nothing new is ever sent.
+        sent_after = 0
+        for _ in range(5):
+            _, _, sent, state = step(False, 8.0, can_send=False)
+            sent_after += int(sent)
+        assert int(s0) == 1 and sent_after == 0
+
+
+# ---------------------------------------------------------------------------
+# Reliable transport (transport="ack") unit semantics, numpy.
+# ---------------------------------------------------------------------------
+
+
+def _ack_cfg(delay=0, jitter=0, drop=0.0, timeout=4, base=2.0, retries=8,
+             ka=0):
+    return comm_lib.NetworkConfig(
+        kind="net", delay=np.int32(delay), jitter=np.int32(jitter),
+        drop=np.float32(drop), transport="ack",
+        ack_timeout=np.int32(timeout), backoff_base=np.float32(base),
+        max_retries=np.int32(retries), ka_period=np.int32(ka),
+    )
+
+
+def _ack_step(state, cfg, trig, payload, drop_u=0.99, can_send=None):
+    """One single-server ack-transport slot with lossless ack/ka legs."""
+    ack_u = np.stack([
+        np.full(1, 0.99, np.float32),  # ack drop draw (never lost)
+        np.zeros(1, np.float32),  # ack jitter (minimum)
+        np.full(1, 0.99, np.float32),  # keepalive drop draw
+        np.zeros(1, np.float32),  # keepalive jitter
+    ])
+    return comm_lib.net_step_ack(
+        state, cfg, np.array([trig]), np.full(1, payload, np.float32),
+        np.full(1, drop_u, np.float32), np.zeros(1, np.float32), ack_u,
+        xp=np,
+        can_send=None if can_send is None else np.array([can_send]),
+    )
+
+
+class TestAckTransport:
+    def test_round_trip_closes_window_and_bills_the_ack(self):
+        cfg = _ack_cfg(delay=2, timeout=10)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        log = []
+        for t in range(6):
+            delivered, payload, sent, state = _ack_step(
+                state, cfg, t == 0, float(t + 5)
+            )
+            log.append((bool(delivered[0]), float(payload[0]), int(sent)))
+        # Data lands at t=2 with the t=0 snapshot; its ack (same 2-slot
+        # wire) lands at t=4 and closes the window -- no retransmit.
+        assert [d for d, _, _ in log] == [
+            False, False, True, False, False, False
+        ]
+        assert log[2][1] == 5.0
+        # 1 data message + 1 ack, both billed on the wire.
+        assert sum(s for _, _, s in log) == 2
+        assert int(state.retrans) == 0 and int(state.awaiting[0]) == -1
+        assert not bool(state.gave_up[0])
+
+    def test_dropped_data_retransmits_fresh_snapshot(self):
+        # Instant wire, timeout 2: the t=0 send is lost; the window
+        # expires at t=2 and the retransmit snapshots the *current*
+        # payload (7.0), never the stale t=0 one.
+        cfg = _ack_cfg(delay=0, drop=0.5, timeout=2)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        out = []
+        for t, du in enumerate([0.1, 0.99, 0.99]):  # 0.1 < 0.5 -> lost
+            delivered, payload, sent, state = _ack_step(
+                state, cfg, t == 0, float(t + 5), drop_u=du
+            )
+            out.append((bool(delivered[0]), float(payload[0])))
+        assert out[0] == (False, 0.0) and out[1][0] is False
+        assert out[2] == (True, 7.0)
+        assert int(state.retrans) == 1 and int(state.drops) == 1
+        assert not bool(state.gave_up[0])
+
+    def test_backoff_grows_and_abandon_marks_self_suspect(self):
+        # Every transmission is lost.  timeout=1, base=2, max_retries=1:
+        # send at t=0 (window 1), retransmit at t=1 (window doubles to
+        # 2), expire again at t=3 -> abandon: gave_up, no further sends.
+        cfg = _ack_cfg(delay=0, drop=0.9, timeout=1, base=2.0, retries=1)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        sent_log = []
+        for t in range(6):
+            _, _, sent, state = _ack_step(
+                state, cfg, t == 0, 5.0, drop_u=0.0
+            )
+            sent_log.append(int(sent))
+        assert sent_log == [1, 1, 0, 0, 0, 0]
+        assert bool(state.gave_up[0])
+        assert int(state.retrans) == 1 and int(state.drops) == 2
+        assert int(state.awaiting[0]) == -1
+
+    def test_keepalives_fire_on_period_and_reset_last_heard(self):
+        # No data traffic at all: the server's keepalive clock fires
+        # every ka_period slots, is billed, and resets the balancer's
+        # last-heard clock (ka_age) on delivery.
+        cfg = _ack_cfg(delay=0, timeout=4, ka=3)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        ages, sent_log = [], []
+        for _ in range(7):
+            _, _, sent, state = _ack_step(state, cfg, False, 5.0)
+            ages.append(int(state.ka_age[0]))
+            sent_log.append(int(sent))
+        assert sent_log == [0, 0, 1, 0, 0, 1, 0]
+        assert ages == [1, 2, 0, 1, 2, 0, 1]
+
+    def test_crashed_server_goes_silent_and_window_holds(self):
+        # can_send False: no keepalives, no retransmit -- the expired
+        # window holds at zero and fires on the first healthy slot.
+        cfg = _ack_cfg(delay=0, drop=0.9, timeout=1, base=1.0, retries=8,
+                       ka=2)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        _, _, s0, state = _ack_step(state, cfg, True, 5.0, drop_u=0.0)
+        assert int(s0) == 1  # lost on the wire, window now open
+        for _ in range(4):
+            _, _, sent, state = _ack_step(
+                state, cfg, False, 6.0, can_send=False
+            )
+            assert int(sent) == 0
+        assert int(state.awaiting[0]) == 0  # held, not cycling
+        assert int(state.retrans) == 0
+        # First healthy slot: the held window fires the retransmit, and
+        # the instant lossless round trip closes it.
+        delivered, payload, sent, state = _ack_step(
+            state, cfg, False, 7.0, drop_u=0.99
+        )
+        assert bool(delivered[0]) and float(payload[0]) == 7.0
+        assert int(state.retrans) == 1
+
+    def test_keepalive_silence_of_crashed_server_raises_ka_age(self):
+        cfg = _ack_cfg(delay=0, timeout=4, ka=2)
+        state = comm_lib.AckNetState.init(1, xp=np,
+                                          payload_dtype=np.float32)
+        for _ in range(6):
+            _, _, _, state = _ack_step(
+                state, cfg, False, 5.0, can_send=False
+            )
+        assert int(state.ka_age[0]) == 6  # never heard from
+
+
+# ---------------------------------------------------------------------------
+# Eventual delivery: with drop < 1 and unbounded retries, every fired
+# trigger lands (hypothesis property when available; seeded sweep else).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+
+def _slots_to_delivery(seed, drop, delay, jitter, timeout, horizon=8000):
+    """Slots until the single trigger fired at t=0 is delivered (-1)."""
+    rng = np.random.default_rng(seed)
+    cfg = comm_lib.NetworkConfig(
+        kind="net", delay=np.int32(delay), jitter=np.int32(jitter),
+        drop=np.float32(drop), transport="ack",
+        ack_timeout=np.int32(timeout), backoff_base=np.float32(1.2),
+        max_retries=np.int32(10**6),  # effectively unbounded
+        ka_period=np.int32(0),
+    )
+    state = comm_lib.AckNetState.init(1, xp=np, payload_dtype=np.float32)
+    for t in range(horizon):
+        delivered, _, _, state = comm_lib.net_step_ack(
+            state, cfg, np.array([t == 0]), np.full(1, 5.0, np.float32),
+            rng.random(1).astype(np.float32),
+            rng.random(1).astype(np.float32),
+            rng.random((4, 1)).astype(np.float32), xp=np,
+        )
+        if bool(delivered[0]):
+            return t
+    return -1
+
+
+class TestEventualDelivery:
+    if _HAVE_HYPOTHESIS:
+        @settings(max_examples=40, deadline=None)
+        @given(
+            seed=st.integers(0, 2**31 - 1),
+            drop=st.floats(0.0, 0.6),
+            delay=st.integers(0, 4),
+            jitter=st.integers(0, 3),
+            timeout=st.integers(1, 8),
+        )
+        def test_trigger_is_eventually_delivered(
+            self, seed, drop, delay, jitter, timeout
+        ):
+            # The geometric tail: ~30 transmissions fit in the horizon at
+            # base 1.2, so P(fail) <= 0.6^30 -- negligible by design.
+            t = _slots_to_delivery(seed, drop, delay, jitter, timeout)
+            assert t >= 0
+    else:
+        @pytest.mark.parametrize("seed", range(12))
+        def test_trigger_is_eventually_delivered(self, seed):
+            rng = np.random.default_rng(1000 + seed)
+            t = _slots_to_delivery(
+                seed,
+                drop=float(rng.uniform(0.0, 0.6)),
+                delay=int(rng.integers(0, 5)),
+                jitter=int(rng.integers(0, 4)),
+                timeout=int(rng.integers(1, 9)),
+            )
+            assert t >= 0
+
+    def test_lossless_wire_delivers_at_base_delay(self):
+        assert _slots_to_delivery(0, 0.0, delay=3, jitter=0, timeout=4) == 3
+
+
+# ---------------------------------------------------------------------------
+# snapshot_state / restore_state: scalar counters promote to int64 so
+# multi-segment soak aggregation cannot wrap int32.
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotPromotion:
+    def test_counters_promote_and_round_trip(self):
+        near = np.iinfo(np.int32).max - 10
+        st_np = comm_lib.AckNetState.init(4, xp=np)
+        st_np = dataclasses.replace(
+            st_np, drops=np.int32(near), retrans=np.int32(near - 5)
+        )
+        snap = comm_lib.snapshot_state(st_np)
+        assert snap.drops.dtype == np.int64
+        assert snap.retrans.dtype == np.int64
+        # Host-side aggregation across segments happens in int64: the sum
+        # exceeds int32 range without wrapping.
+        total = int(snap.drops) + int(snap.retrans)
+        assert total == 2 * near - 5 > np.iinfo(np.int32).max
+        # Per-server arrays keep their carry dtypes (only scalar counters
+        # promote), and restore narrows back to the compiled carry's i32.
+        assert snap.timer.dtype == np.int32
+        back = comm_lib.restore_state(snap, xp=np)
+        assert back.drops.dtype == np.int32
+        assert int(back.drops) == near
+
+    def test_restore_saturates_instead_of_wrapping(self):
+        st_np = comm_lib.NetState.init(2, xp=np)
+        snap = comm_lib.snapshot_state(st_np)
+        snap = dataclasses.replace(
+            snap, drops=np.int64(np.iinfo(np.int32).max) + 1000
+        )
+        back = comm_lib.restore_state(snap, xp=np)
+        assert int(back.drops) == np.iinfo(np.int32).max  # monotone, no wrap
+
 
 # ---------------------------------------------------------------------------
 # Zero-operand identity: defaults cannot move any golden.
@@ -210,6 +490,23 @@ _MATRIX = [
     dict(policy="hsq", comm="hsq", x=3.0, rt_period=32, network="net",
          net_delay=3, net_drop=0.1, fault="crash", crash_rate=0.02,
          recover_rate=0.2, suspect_age=10),
+    # Reliable transport: ack'd sends with timeout/retransmit/backoff,
+    # keepalive-driven suspect masking; pull tokens retransmit too.
+    dict(network="net", net_delay=2, net_jitter=1, net_drop=0.1,
+         transport="ack", ack_timeout=5, backoff_base=2.0, max_retries=4,
+         ka_period=16, suspect_age=12),
+    dict(comm="et_rt", network="net", net_delay=3, net_drop=0.15,
+         transport="ack", ack_timeout=4, backoff_base=1.5, max_retries=2,
+         ka_period=8, suspect_age=10, fault="crash", crash_rate=0.02,
+         recover_rate=0.2),
+    dict(policy="jiq", comm="jiq", network="net", net_delay=2,
+         net_drop=0.2, transport="ack", ack_timeout=5, backoff_base=2.0,
+         max_retries=6),
+    dict(policy="hsq", comm="hsq", x=3.0, rt_period=32, network="net",
+         net_delay=1, net_jitter=2, net_drop=0.1, transport="ack",
+         ack_timeout=6, backoff_base=1.5, max_retries=3, ka_period=12,
+         suspect_age=10, fault="crash", crash_rate=0.02,
+         recover_rate=0.2),
 ]
 
 
@@ -229,6 +526,7 @@ class TestServingParity:
         assert ref["messages"] == res.messages
         assert np.array_equal(ref["final_occupancy"], res.final_occupancy)
         assert ref["net_drops"] == res.net_drops
+        assert ref["retrans"] == res.retrans
         assert ref["token_misses"] == res.token_misses
         assert ref["token_sum"] == res.token_sum
 
@@ -276,6 +574,7 @@ class TestStreamDegraded:
             assert res.completed == ref.completed
             assert res.messages == ref.messages
             assert res.net_drops == ref.net_drops
+            assert res.retrans == ref.retrans
             assert res.dropped == ref.dropped
             assert res.token_misses == ref.token_misses
             assert res.token_sum == ref.token_sum
@@ -296,6 +595,14 @@ _SLOTTED_CELLS = [
     dict(fault="slow", crash_rate=0.01, recover_rate=0.1, slow_factor=0.5),
     dict(policy="jsq", network="net", net_delay=6, fault="crash",
          crash_rate=0.005, recover_rate=0.1, suspect_age=16),
+    # Reliable transport: the ack cells thread AckNetState through the
+    # same scan, so grid fusion must preserve them bit for bit too.
+    dict(network="net", net_delay=2, net_jitter=1, net_drop=0.2,
+         transport="ack", ack_timeout=5, backoff_base=2.0, max_retries=4,
+         ka_period=16, suspect_age=24),
+    dict(network="net", net_delay=3, net_drop=0.3, transport="ack",
+         ack_timeout=4, backoff_base=1.5, max_retries=2, fault="crash",
+         crash_rate=0.005, recover_rate=0.1, suspect_age=20),
 ]
 
 
@@ -311,6 +618,19 @@ class TestSlottedDegraded:
         )[0][0]
         assert np.array_equal(r.jct, rg.jct)
         assert (r.messages, r.net_drops) == (rg.messages, rg.net_drops)
+        assert r.retrans == rg.retrans
+
+    def test_slotted_pull_ack_repairs_tokens(self):
+        # A dropped JIQ token retransmits under transport="ack": the
+        # retransmit counter moves, and the program stays conservative.
+        cfg = sim.SimConfig(servers=8, slots=4000, load=0.9,
+                            mean_service=10, policy="jiq", comm="jiq",
+                            network="net", net_delay=2, net_drop=0.25,
+                            transport="ack", ack_timeout=5,
+                            backoff_base=2.0, max_retries=6)
+        r = sim.simulate(jax.random.key(13), cfg)
+        assert r.retrans > 0
+        assert r.arrivals == r.departures + int(r.final_q.sum())
 
 
 # ---------------------------------------------------------------------------
@@ -453,6 +773,29 @@ class TestDegradedInvariants:
             # policy must have exercised the masked path.
             assert exercised
 
+    def test_mid_flight_outage_never_fires_pre_crash_snapshot(self):
+        # Engineered outage under the network model: while a replica is
+        # down its queued piggyback must stay wiped (no pre-crash
+        # snapshot can fire at the next free slot), and conservation
+        # holds throughout.
+        cfg = engine.EngineConfig(
+            num_replicas=6, decode_slots=3, comm="et", et_x=2,
+            network="net", net_delay=4, fault="crash", crash_rate=0.5,
+            recover_rate=0.5, suspect_age=8,
+        )
+        wl = _engineered_crash_workload(cfg, 200, 50, 120, target=2)
+
+        def check(disp, offered, finished, now):
+            in_system = int(disp.true_occupancy().sum())
+            assert offered == len(finished) + in_system
+            if disp.faulted is not None and disp.faulted[2]:
+                assert not bool(disp.net.pending[2]), (
+                    f"slot {now}: crashed replica 2 still queues its "
+                    f"pre-crash snapshot"
+                )
+
+        _replay(cfg, wl, 200, per_slot=check)
+
     def test_resync_on_recovery_restores_approximation(self):
         # The recovery slot forces a resync send (RT keepalive retry
         # path): with instant delivery the dispatcher's view of the
@@ -565,6 +908,17 @@ class TestValidation:
         (dict(suspect_age=5), "suspect_age"),
         (dict(network="bogus"), "network"),
         (dict(fault="bogus"), "fault"),
+        # Reliable-transport operands: the zero-operand ack cell is not
+        # an identity -- it is rejected, naming the field to set.
+        (dict(network="net", transport="ack"), "ack_timeout"),
+        (dict(transport="ack", ack_timeout=4), "network"),
+        (dict(network="net", transport="ack", ack_timeout=4,
+              backoff_base=0.5), "backoff_base"),
+        (dict(network="net", transport="ack", ack_timeout=4,
+              max_retries=-1), "max_retries"),
+        (dict(network="net", ack_timeout=3), "ack_timeout"),
+        (dict(network="net", ka_period=8), "ka_period"),
+        (dict(network="net", transport="bogus"), "transport"),
     ])
     def test_serving_rejects_named_field(self, knobs, field):
         cell = engine.ServeConfig(replicas=4, decode_slots=2, slots=50,
@@ -576,6 +930,9 @@ class TestValidation:
         (dict(network="net", net_drop=1.25), "net_drop"),
         (dict(fault="crash", crash_rate=0.2), "recover_rate"),
         (dict(crash_rate=0.2, recover_rate=0.5), "crash_rate"),
+        (dict(network="net", transport="ack"), "ack_timeout"),
+        (dict(transport="ack", ack_timeout=4), "network"),
+        (dict(network="net", ack_timeout=3), "ack_timeout"),
     ])
     def test_slotted_rejects_named_field(self, knobs, field):
         cfg = sim.SimConfig(servers=4, slots=100, **knobs)

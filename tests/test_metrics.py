@@ -148,6 +148,25 @@ def test_stream_summary_empty_and_roundtrip():
     assert abs(s["std"] - samples.std()) < 1e-6
 
 
+def test_stream_summary_all_discarded_takes_zero_count_path():
+    # Warmup can discard every completion from the quantile histogram
+    # while the exact max was tracked pre-discard: the summary must take
+    # the zero-count disambiguated path (count=0, zero quantiles, max
+    # preserved), never clamp the empty histogram's zero "quantiles"
+    # into [0, max] as if they described a sample.
+    empty_hist = np.zeros(metrics.HIST_BUCKETS, np.int64)
+    s = metrics.stream_summary(0, 0.0, 0.0, 37, empty_hist)
+    assert s["count"] == 0 and s["max"] == 37
+    assert s["p50"] == s["p90"] == s["p99"] == s["p999"] == 0.0
+    assert all(np.isfinite(v) for v in s.values())
+    # Moments tracked but no histogram mass (every sample dropped from
+    # the quantile buckets): same disambiguated path, not a 0.0
+    # "quantile" next to a nonzero count.
+    s = metrics.stream_summary(12, 37.0, 4.0, 37, empty_hist)
+    assert s["count"] == 0 and s["max"] == 37
+    assert s["p999"] == 0.0
+
+
 def test_stream_summary_single_bucket_clamps_to_max():
     # Every sample in one bucket: interpolation inside the bucket would
     # overshoot the sample maximum, so the clamp must pin every quantile
